@@ -1,0 +1,97 @@
+"""Vendor-analogue RPC baseline (the LEO/VEO stand-in for Fig. 3).
+
+What vendor offload stacks pay per call, reproduced honestly:
+
+* **name-based function resolution** per call (string lookup, the moral
+  equivalent of symbol resolution / COI function registration round-trips),
+* **generic serialisation** of the call (pickle — self-describing, types
+  encoded on the wire), and
+* **fresh framing/buffers** per call.
+
+HAM's thesis (paper §4.3) is that a deterministic key map + bitwise
+payloads removes all three.  Both sides here run over the *same* fabrics
+as HAM, so the measured gap is mechanism, not transport.
+"""
+
+from __future__ import annotations
+
+import importlib
+import pickle
+import threading
+
+
+class NaiveRpcServer:
+    """Executes (module, qualname, args) requests; replies pickled results."""
+
+    def __init__(self, endpoint):
+        self.endpoint = endpoint
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _resolve(self, module: str, qualname: str):
+        obj = importlib.import_module(module)
+        for part in qualname.split("."):
+            obj = getattr(obj, part)
+        return obj
+
+    def serve_once(self, timeout=1.0) -> bool:
+        frame = self.endpoint.recv(timeout=timeout)
+        if frame is None:
+            return False
+        module, qualname, args, msg_id, src = pickle.loads(frame)
+        if module == "__stop__":
+            self._stop.set()
+            return True
+        fn = self._resolve(module, qualname)
+        result = fn(*args)
+        self.endpoint.send(src, pickle.dumps((msg_id, result)))
+        return True
+
+    def run(self) -> None:
+        while not self._stop.is_set():
+            self.serve_once()
+
+    def start(self) -> "NaiveRpcServer":
+        self._thread = threading.Thread(target=self.run, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+
+
+class NaiveRpcClient:
+    def __init__(self, endpoint, server_node: int):
+        self.endpoint = endpoint
+        self.server_node = server_node
+        self._msg_id = 0
+
+    def call(self, fn, *args):
+        self._msg_id += 1
+        frame = pickle.dumps(
+            (fn.__module__, fn.__qualname__, args, self._msg_id,
+             self.endpoint.node_id)
+        )
+        self.endpoint.send(self.server_node, frame)
+        while True:
+            reply = self.endpoint.recv(timeout=10.0)
+            if reply is None:
+                raise TimeoutError("naive rpc reply timed out")
+            msg_id, result = pickle.loads(reply)
+            if msg_id == self._msg_id:
+                return result
+
+    def stop_server(self) -> None:
+        self.endpoint.send(self.server_node,
+                           pickle.dumps(("__stop__", "", (), 0, 0)))
+
+
+# a module-level target the server can resolve by name
+def empty() -> None:
+    return None
+
+
+def add(a, b):
+    return a + b

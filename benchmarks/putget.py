@@ -1,0 +1,41 @@
+"""put/get bandwidth through the offload data plane (paper Fig. 2 surface)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.offload.demo_handlers  # noqa: F401
+from repro.core.registry import default_registry
+from repro.offload.api import OffloadDomain
+
+
+def run() -> list[tuple[str, float, str]]:
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    dom = OffloadDomain.local(2)
+    rows = []
+    for nbytes, label in ((1 << 16, "64KB"), (1 << 22, "4MB"), (1 << 26, "64MB")):
+        arr = np.random.default_rng(1).standard_normal(nbytes // 8)
+        ptr = dom.allocate(1, arr.shape, "float64")
+        t0 = time.perf_counter()
+        reps = max(1, (1 << 26) // nbytes)
+        for _ in range(reps):
+            dom.put(arr, ptr)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((f"putget/put_{label}", dt * 1e6, f"{nbytes/dt/1e9:.2f} GB/s"))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            dom.get(ptr)
+        dt = (time.perf_counter() - t0) / reps
+        rows.append((f"putget/get_{label}", dt * 1e6, f"{nbytes/dt/1e9:.2f} GB/s"))
+        dom.free(ptr)
+    dom.shutdown()
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.1f},{note}")

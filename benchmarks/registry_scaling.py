@@ -1,0 +1,57 @@
+"""Registry init + lookup scaling (paper §5.2: "minimal runtime complexity").
+
+* init cost vs handler count (the sort — O(N log N), run once per process)
+* key_of / handler_at — the per-message O(1) claims of Fig. 6
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core.registry import HandlerRegistry
+
+
+def _mk_registry(n: int) -> HandlerRegistry:
+    reg = HandlerRegistry()
+    for i in range(n):
+        reg.register((lambda i=i: i), name=f"bench/handler_{i:06d}")
+    return reg
+
+
+def bench_init(n: int) -> float:
+    reg = _mk_registry(n)
+    t0 = time.perf_counter_ns()
+    reg.init()
+    return (time.perf_counter_ns() - t0) / 1e3
+
+
+def bench_lookup(n: int, calls=20000) -> tuple[float, float]:
+    reg = _mk_registry(n)
+    table = reg.init()
+    name = f"bench/handler_{n // 2:06d}"
+    key = table.key_of(name)
+    t0 = time.perf_counter_ns()
+    for _ in range(calls):
+        table.key_of(name)
+    t_key = (time.perf_counter_ns() - t0) / 1e3 / calls
+    t0 = time.perf_counter_ns()
+    for _ in range(calls):
+        table.handler_at(key)
+    t_handler = (time.perf_counter_ns() - t0) / 1e3 / calls
+    return t_key, t_handler
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for n in (100, 1000, 10000):
+        rows.append((f"registry/init_{n}", bench_init(n), "sort+key assignment"))
+    tk, th = bench_lookup(10000)
+    rows.append(("registry/key_of", tk, "type->key, 10k handlers"))
+    rows.append(("registry/handler_at", th, "key->handler, 10k handlers"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.3f},{note}")

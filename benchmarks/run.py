@@ -1,0 +1,54 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+* ``offload/*``    — paper Fig. 3: empty-function offload cost, HAM vs the
+  vendor-analogue naive RPC, across transports (THE paper metric)
+* ``dispatch/*``   — device-side handler-table dispatch (TPU-native HAM)
+* ``registry/*``   — §5.2 init/lookup complexity
+* ``serialise/*``  — static bitwise pack vs self-describing vs pickle
+* ``putget/*``     — offload data-plane bandwidth
+
+Roofline terms per (arch × shape × mesh) are produced by the dry-run
+(``python -m repro.launch.dryrun --all``), not here — they need the
+512-device XLA_FLAGS environment.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        device_dispatch,
+        offload_overhead,
+        putget,
+        registry_scaling,
+        serialisation,
+    )
+
+    sections = [
+        ("offload_overhead (paper Fig. 3)", offload_overhead.run),
+        ("device_dispatch", device_dispatch.run),
+        ("registry_scaling", registry_scaling.run),
+        ("serialisation", serialisation.run),
+        ("putget", putget.run),
+    ]
+    failures = 0
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            for name, val, note in fn():
+                print(f"{name},{val:.3f},{note}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

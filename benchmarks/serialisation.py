@@ -1,0 +1,62 @@
+"""Serialisation cost: HAM static pack (bitwise) vs dynamic TLV vs pickle.
+
+The paper's fast path is the static closure pack — argument specs are part
+of the message type, so the wire carries raw bytes only.  This benchmark
+quantifies what that buys over self-describing encodings.
+"""
+
+from __future__ import annotations
+
+import pickle
+import statistics
+import time
+
+import numpy as np
+
+from repro.core import migratable as mig
+
+
+def _median_us(fn, n=2000, warmup=100) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    return statistics.median(ts)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for size, label in ((64, "64B"), (64 * 1024, "64KB"), (4 * 1024 * 1024, "4MB")):
+        arr = np.random.default_rng(0).standard_normal(size // 8)
+        args = (arr, 3, 2.5)
+        specs = tuple(mig.spec_of(a) for a in args)
+        rows.append((
+            f"serialise/static_pack_{label}",
+            _median_us(lambda: mig.pack_static(args, specs)),
+            f"{size}B payload",
+        ))
+        rows.append((
+            f"serialise/dynamic_pack_{label}",
+            _median_us(lambda: mig.pack_dynamic(list(args))),
+            "self-describing TLV",
+        ))
+        rows.append((
+            f"serialise/pickle_{label}",
+            _median_us(lambda: pickle.dumps(args)),
+            "vendor-analogue",
+        ))
+        payload = mig.pack_static(args, specs)
+        rows.append((
+            f"serialise/static_unpack_{label}",
+            _median_us(lambda: mig.unpack_static(payload, specs)),
+            "zero-copy views",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.2f},{note}")

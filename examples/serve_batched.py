@@ -1,0 +1,59 @@
+"""Serving driver: continuous batching through the HAM device dispatch
+table (greedy + sampled requests in one fleet).
+
+    python examples/serve_batched.py [--arch olmoe-1b-7b] [--requests 8]
+"""
+
+import argparse
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models.api import build_model
+from repro.serve.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, num_slots=args.slots, max_len=64)
+    print(f"arch={cfg.name}  dispatch table: "
+          f"{[h.stable_name for h in eng.table.handlers]}")
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(3, 12))
+        reqs.append(Request(
+            prompt=rng.integers(0, cfg.vocab_size, plen),
+            max_new_tokens=int(rng.integers(4, args.max_new)),
+            temperature=0.0 if i % 2 == 0 else 0.9,
+        ))
+    t0 = time.perf_counter()
+    out = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(v) for v in out.values())
+    for rid in sorted(out):
+        mode = "greedy" if reqs[rid].temperature == 0 else "sample"
+        print(f"req {rid} [{mode:6s}] -> {out[rid]}")
+    print(f"{total} tokens in {dt:.2f}s over {eng.steps_dispatched} batched "
+          f"steps ({total/dt:.1f} tok/s, {total/eng.steps_dispatched:.2f} "
+          f"tokens/step batching efficiency)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""HAMax: Heterogeneous Active Messages (Noack, 2019) for JAX at pod scale.
+
+Subpackages: ``core`` (the paper's RPC mechanism), ``comm`` (transports),
+``offload`` (HAM-Offload API), ``models`` (the 10 assigned architectures),
+``kernels`` (Pallas TPU hot spots), ``data``/``optim``/``ckpt``/``train``/
+``serve`` (fleet substrate), ``configs`` (arch configs), ``launch`` (mesh,
+multi-pod dry-run, roofline, hillclimb).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,14 @@
+"""Communication backends for HAM (paper Fig. 1: MPI/TCP/SCIF/VEO -> here
+local/shm/socket).  Frames are opaque; all semantics live in repro.core."""
+
+from repro.comm.base import CommBackend, Fabric
+from repro.comm.local import LocalEndpoint, LocalFabric
+from repro.comm.shm import ShmEndpoint, ShmFabric, ShmRing
+from repro.comm.socket import SocketEndpoint, SocketFabric
+
+__all__ = [
+    "CommBackend", "Fabric",
+    "LocalEndpoint", "LocalFabric",
+    "ShmEndpoint", "ShmFabric", "ShmRing",
+    "SocketEndpoint", "SocketFabric",
+]

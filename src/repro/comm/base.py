@@ -1,0 +1,52 @@
+"""Abstract communication backend (paper Fig. 1, bottom layer).
+
+HAM itself is transport-agnostic; HAM-Offload plugs in MPI, TCP/IP, SCIF or
+VEO/DMA.  Here the portable set is:
+
+* ``local``  — in-process queues (threads as nodes); zero-copy handoff.
+* ``shm``    — POSIX shared-memory SPSC rings between processes (the
+  fast-path analogue of SCIF/DMA windows).
+* ``socket`` — TCP/IP, byte-for-byte the paper's TCP backend class.
+
+A backend moves opaque *frames* (header || payload, see core.message) between
+integer-identified nodes.  It knows nothing about handlers.
+"""
+
+from __future__ import annotations
+
+from repro.core.errors import CommError
+
+
+class CommBackend:
+    """Per-node endpoint of a fabric."""
+
+    node_id: int
+    num_nodes: int
+
+    def send(self, dst: int, frame: bytes | bytearray | memoryview) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        """Next inbound frame, or ``None`` on timeout."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    def _check_dst(self, dst: int) -> None:
+        if not 0 <= dst < self.num_nodes or dst == self.node_id:
+            raise CommError(
+                f"invalid destination {dst} (node {self.node_id} of {self.num_nodes})"
+            )
+
+
+class Fabric:
+    """Factory/owner of the per-node backends of one communication domain."""
+
+    num_nodes: int
+
+    def endpoint(self, node_id: int) -> CommBackend:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass

@@ -1,0 +1,43 @@
+"""In-process fabric: nodes are threads, frames move by reference.
+
+This is the intra-node offload case of the paper (host and accelerator in
+one box) reduced to its cheapest possible transport — useful both as the
+latency floor in the Fig. 3-analogue benchmark and as the default fabric for
+unit tests.
+"""
+
+from __future__ import annotations
+
+import queue
+
+from repro.comm.base import CommBackend, Fabric
+
+
+class LocalEndpoint(CommBackend):
+    def __init__(self, fabric: "LocalFabric", node_id: int):
+        self._fabric = fabric
+        self.node_id = node_id
+        self.num_nodes = fabric.num_nodes
+        self._inbox: queue.SimpleQueue = queue.SimpleQueue()
+
+    def send(self, dst: int, frame) -> None:
+        self._check_dst(dst)
+        # by-reference handoff: frames are freshly allocated per message and
+        # never mutated after send, so the zero-copy pass-through is safe
+        # (the latency floor the shm/socket backends are measured against)
+        self._fabric._endpoints[dst]._inbox.put(frame)
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        try:
+            return self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+
+class LocalFabric(Fabric):
+    def __init__(self, num_nodes: int):
+        self.num_nodes = num_nodes
+        self._endpoints = [LocalEndpoint(self, i) for i in range(num_nodes)]
+
+    def endpoint(self, node_id: int) -> LocalEndpoint:
+        return self._endpoints[node_id]

@@ -1,0 +1,198 @@
+"""Shared-memory fabric: SPSC byte rings between processes.
+
+The analogue of the paper's SCIF / VEO-DMA backends: a pre-mapped shared
+window written with plain stores, no per-message syscalls, no serialisation
+beyond HAM's own bitwise payload copy.  One directed ring per ordered node
+pair; single producer, single consumer.
+
+Ring layout in the shared segment::
+
+    [ head u64 | tail u64 | data bytes ... ]
+
+``head``/``tail`` are *monotonic* byte counters (never wrapped), which makes
+full/empty unambiguous: used = head - tail.  The producer writes payload
+first, then publishes by storing ``head`` (an aligned 8-byte store — a real
+TPU-host port would use C++ atomics with release/acquire; CPython's memcpy of
+an aligned 8-byte slice is a single store on x86-64, which we accept here and
+note as an assumption change in DESIGN.md).
+
+Frames inside the ring are ``u64 length || bytes`` with wrap-around.
+"""
+
+from __future__ import annotations
+
+import struct
+import time
+from multiprocessing import shared_memory
+
+from repro.comm.base import CommBackend, Fabric
+from repro.core.errors import CommError
+
+_HDR = 16  # head u64 + tail u64
+_U64 = struct.Struct("<Q")
+
+
+class ShmRing:
+    """One directed SPSC ring over a named shared-memory segment."""
+
+    def __init__(self, name: str, capacity: int = 1 << 24, create: bool = False):
+        self.capacity = capacity
+        if create:
+            self._shm = shared_memory.SharedMemory(
+                name=name, create=True, size=_HDR + capacity
+            )
+            self._shm.buf[:_HDR] = b"\x00" * _HDR
+        else:
+            self._shm = shared_memory.SharedMemory(name=name)
+            self.capacity = self._shm.size - _HDR
+        self._buf = self._shm.buf
+        self.name = name
+
+    # -- counters ----------------------------------------------------------
+
+    def _head(self) -> int:
+        return _U64.unpack_from(self._buf, 0)[0]
+
+    def _tail(self) -> int:
+        return _U64.unpack_from(self._buf, 8)[0]
+
+    def _set_head(self, v: int) -> None:
+        _U64.pack_into(self._buf, 0, v)
+
+    def _set_tail(self, v: int) -> None:
+        _U64.pack_into(self._buf, 8, v)
+
+    # -- data movement -----------------------------------------------------
+
+    def _write_bytes(self, pos: int, data) -> int:
+        """Copy ``data`` at ring offset pos (monotonic), handling wrap."""
+        off = pos % self.capacity
+        n = len(data)
+        first = min(n, self.capacity - off)
+        base = _HDR
+        self._buf[base + off : base + off + first] = data[:first]
+        if first < n:
+            self._buf[base : base + n - first] = data[first:]
+        return pos + n
+
+    def _read_bytes(self, pos: int, n: int) -> bytes:
+        off = pos % self.capacity
+        base = _HDR
+        first = min(n, self.capacity - off)
+        out = bytearray(n)
+        out[:first] = self._buf[base + off : base + off + first]
+        if first < n:
+            out[first:] = self._buf[base : base + n - first]
+        return bytes(out)
+
+    def push(self, frame, timeout: float | None = None) -> None:
+        need = 8 + len(frame)
+        if need > self.capacity:
+            raise CommError(
+                f"frame of {len(frame)} bytes exceeds ring capacity {self.capacity}"
+            )
+        deadline = None if timeout is None else time.monotonic() + timeout
+        head = self._head()
+        while self.capacity - (head - self._tail()) < need:
+            if deadline is not None and time.monotonic() > deadline:
+                raise CommError("ring full: consumer stalled")
+            time.sleep(0)  # yield; SPSC spin
+        pos = self._write_bytes(head, _U64.pack(len(frame)))
+        pos = self._write_bytes(pos, bytes(frame))
+        self._set_head(pos)  # publish
+
+    def try_pop(self) -> bytes | None:
+        tail = self._tail()
+        if self._head() == tail:
+            return None
+        (n,) = _U64.unpack(self._read_bytes(tail, 8))
+        frame = self._read_bytes(tail + 8, n)
+        self._set_tail(tail + 8 + n)
+        return frame
+
+    def close(self) -> None:
+        self._buf = None
+        self._shm.close()
+
+    def unlink(self) -> None:
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+def _ring_name(prefix: str, src: int, dst: int) -> str:
+    return f"{prefix}_{src}_{dst}"
+
+
+class ShmEndpoint(CommBackend):
+    """Attaches to the rings of one node: n-1 inbound, n-1 outbound."""
+
+    def __init__(self, prefix: str, node_id: int, num_nodes: int):
+        self.node_id = node_id
+        self.num_nodes = num_nodes
+        self._out = {
+            dst: ShmRing(_ring_name(prefix, node_id, dst))
+            for dst in range(num_nodes)
+            if dst != node_id
+        }
+        self._in = {
+            src: ShmRing(_ring_name(prefix, src, node_id))
+            for src in range(num_nodes)
+            if src != node_id
+        }
+        self._rr = sorted(self._in)  # round-robin poll order
+
+    def send(self, dst: int, frame) -> None:
+        self._check_dst(dst)
+        self._out[dst].push(frame)
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        spins = 0
+        while True:
+            for src in self._rr:
+                frame = self._in[src].try_pop()
+                if frame is not None:
+                    return frame
+            spins += 1
+            if deadline is not None and time.monotonic() > deadline:
+                return None
+            # adaptive backoff: hot-spin briefly (latency), then yield
+            time.sleep(0 if spins < 2048 else 1e-4)
+
+    def close(self) -> None:
+        for r in self._out.values():
+            r.close()
+        for r in self._in.values():
+            r.close()
+
+
+class ShmFabric(Fabric):
+    """Creates all directed rings; parent process owns segment lifetime."""
+
+    def __init__(self, num_nodes: int, capacity: int = 1 << 24, prefix: str | None = None):
+        import os
+        import uuid
+
+        self.num_nodes = num_nodes
+        self.prefix = prefix or f"ham{os.getpid()}_{uuid.uuid4().hex[:8]}"
+        self._rings = []
+        for src in range(num_nodes):
+            for dst in range(num_nodes):
+                if src != dst:
+                    self._rings.append(
+                        ShmRing(
+                            _ring_name(self.prefix, src, dst),
+                            capacity=capacity,
+                            create=True,
+                        )
+                    )
+
+    def endpoint(self, node_id: int) -> ShmEndpoint:
+        return ShmEndpoint(self.prefix, node_id, self.num_nodes)
+
+    def close(self) -> None:
+        for r in self._rings:
+            r.close()
+            r.unlink()

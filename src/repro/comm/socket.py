@@ -1,0 +1,161 @@
+"""TCP/IP fabric — the paper's TCP backend class, length-prefixed frames.
+
+Connections are established lazily per (src, dst) pair; each endpoint runs a
+listener plus one reader thread per inbound connection feeding a single
+inbox.  Slowest backend, but the only one that crosses machine boundaries —
+used in tests to prove the wire protocol is process-image independent
+(heterogeneous binaries: a worker launched as a fresh interpreter).
+"""
+
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+
+from repro.comm.base import CommBackend, Fabric
+from repro.core.errors import CommError
+
+_LEN = struct.Struct("<Q")
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            return None
+        got += k
+    return bytes(buf)
+
+
+class SocketEndpoint(CommBackend):
+    def __init__(
+        self,
+        node_id: int,
+        num_nodes: int,
+        base_port: int,
+        host: str = "127.0.0.1",
+    ):
+        self.node_id = node_id
+        self.num_nodes = num_nodes
+        self._host = host
+        self._base_port = base_port
+        self._inbox: queue.SimpleQueue = queue.SimpleQueue()
+        self._out: dict[int, socket.socket] = {}
+        self._out_lock = threading.Lock()
+        self._closing = threading.Event()
+
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, base_port + node_id))
+        self._listener.listen(num_nodes)
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"ham-sock-accept-{node_id}", daemon=True
+        )
+        self._accept_thread.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closing.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(
+                target=self._read_loop, args=(conn,), daemon=True
+            ).start()
+
+    def _read_loop(self, conn: socket.socket) -> None:
+        try:
+            while True:
+                hdr = _recv_exact(conn, _LEN.size)
+                if hdr is None:
+                    return
+                (n,) = _LEN.unpack(hdr)
+                frame = _recv_exact(conn, n)
+                if frame is None:
+                    return
+                self._inbox.put(frame)
+        except OSError:
+            return
+
+    def _connect(self, dst: int) -> socket.socket:
+        with self._out_lock:
+            sock = self._out.get(dst)
+            if sock is not None:
+                return sock
+            sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            # the peer's listener may not be up yet: bounded retry
+            import time
+
+            for attempt in range(200):
+                try:
+                    sock.connect((self._host, self._base_port + dst))
+                    break
+                except ConnectionRefusedError:
+                    time.sleep(0.02)
+            else:
+                raise CommError(f"cannot connect to node {dst}")
+            self._out[dst] = sock
+            return sock
+
+    def send(self, dst: int, frame) -> None:
+        self._check_dst(dst)
+        sock = self._connect(dst)
+        data = bytes(frame)
+        try:
+            sock.sendall(_LEN.pack(len(data)) + data)
+        except OSError as e:
+            raise CommError(f"send to node {dst} failed: {e}") from e
+
+    def recv(self, timeout: float | None = None) -> bytes | None:
+        try:
+            return self._inbox.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def close(self) -> None:
+        self._closing.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._out_lock:
+            for sock in self._out.values():
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+
+class SocketFabric(Fabric):
+    """Same-host fabric over loopback TCP (endpoints may live anywhere that
+    can reach ``host:base_port+i``)."""
+
+    def __init__(self, num_nodes: int, base_port: int = 0, host: str = "127.0.0.1"):
+        self.num_nodes = num_nodes
+        self.host = host
+        if base_port == 0:
+            # pick a free contiguous region by binding a probe socket
+            probe = socket.socket()
+            probe.bind((host, 0))
+            base_port = probe.getsockname()[1] + 1000
+            probe.close()
+        self.base_port = base_port
+        self._endpoints: dict[int, SocketEndpoint] = {}
+
+    def endpoint(self, node_id: int) -> SocketEndpoint:
+        if node_id not in self._endpoints:
+            self._endpoints[node_id] = SocketEndpoint(
+                node_id, self.num_nodes, self.base_port, self.host
+            )
+        return self._endpoints[node_id]
+
+    def close(self) -> None:
+        for ep in self._endpoints.values():
+            ep.close()

@@ -1,0 +1,71 @@
+"""HAM core: the paper's contribution as a composable JAX-side module.
+
+Public surface:
+
+* registry: :func:`handler`, :func:`init`, :class:`HandlerRegistry`,
+  :class:`HandlerTable`, :func:`verify_peer_digest`
+* closures: :func:`f2f`, :func:`l2f`, :class:`Function`
+* messages: :mod:`repro.core.message` framing
+* migratable: :func:`register_migratable`, :func:`spec_of`, pack/unpack
+* execution policies: Direct / Queue / ThreadPool
+* device tables: :class:`DeviceHandlerTable` (compiled ``lax.switch`` dispatch)
+* futures: :class:`Future`, :class:`FutureTable`
+"""
+
+from repro.core.closure import Function, f2f, l2f
+from repro.core.device_table import DeviceHandlerTable
+from repro.core.errors import (
+    CommError,
+    HamError,
+    KeyMapMismatchError,
+    MessageFormatError,
+    MigratableError,
+    NodeDownError,
+    NotBitwiseMigratableError,
+    OffloadError,
+    RegistryError,
+    RegistrySealedError,
+    RemoteExecutionError,
+    SpecMismatchError,
+    UnknownHandlerError,
+    UnstableNameError,
+)
+from repro.core.executor import DirectPolicy, ExecutionPolicy, QueuePolicy, ThreadPoolPolicy
+from repro.core.future import Future, FutureTable
+from repro.core.migratable import (
+    ArraySpec,
+    OpaqueSpec,
+    ScalarSpec,
+    is_bitwise_migratable,
+    pack_dynamic,
+    pack_static,
+    register_migratable,
+    spec_of,
+    unpack_dynamic,
+    unpack_static,
+)
+from repro.core.registry import (
+    HandlerRecord,
+    HandlerRegistry,
+    HandlerTable,
+    default_registry,
+    handler,
+    init,
+    verify_peer_digest,
+)
+
+__all__ = [
+    "Function", "f2f", "l2f",
+    "DeviceHandlerTable",
+    "HamError", "RegistryError", "RegistrySealedError", "UnstableNameError",
+    "KeyMapMismatchError", "MigratableError", "NotBitwiseMigratableError",
+    "SpecMismatchError", "MessageFormatError", "UnknownHandlerError",
+    "CommError", "NodeDownError", "OffloadError", "RemoteExecutionError",
+    "ExecutionPolicy", "DirectPolicy", "QueuePolicy", "ThreadPoolPolicy",
+    "Future", "FutureTable",
+    "ArraySpec", "ScalarSpec", "OpaqueSpec",
+    "spec_of", "is_bitwise_migratable", "register_migratable",
+    "pack_static", "unpack_static", "pack_dynamic", "unpack_dynamic",
+    "HandlerRecord", "HandlerRegistry", "HandlerTable",
+    "default_registry", "handler", "init", "verify_peer_digest",
+]

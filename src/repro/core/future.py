@@ -1,0 +1,108 @@
+"""Futures for asynchronous offloads (paper §2: ``offload::async`` returns a
+``future<double>``; §4.3: ``offload_result_msg`` routes the result back).
+
+A :class:`FutureTable` correlates reply messages with outstanding futures via
+the 64-bit ``msg_id`` in the frame header.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Callable
+
+from repro.core.errors import RemoteExecutionError
+
+
+class Future:
+    """Single-assignment result container with blocking ``get``."""
+
+    __slots__ = ("_event", "_result", "_error", "_callbacks", "_lock")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: BaseException | None = None
+        self._callbacks: list[Callable[["Future"], None]] = []
+        self._lock = threading.Lock()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value: Any) -> None:
+        with self._lock:
+            self._result = value
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)
+
+    def set_exception(self, exc: BaseException) -> None:
+        with self._lock:
+            self._error = exc
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)
+
+    def add_done_callback(self, cb: Callable[["Future"], None]) -> None:
+        run_now = False
+        with self._lock:
+            if self._event.is_set():
+                run_now = True
+            else:
+                self._callbacks.append(cb)
+        if run_now:
+            cb(self)
+
+    def get(self, timeout: float | None = None) -> Any:
+        """Block until the result message arrives (``result.get()``)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("future did not complete in time")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class FutureTable:
+    """msg_id -> Future correlation for reply routing."""
+
+    def __init__(self):
+        self._counter = itertools.count(1)
+        self._lock = threading.Lock()
+        self._pending: dict[int, Future] = {}
+
+    def create(self) -> tuple[int, Future]:
+        fut = Future()
+        msg_id = next(self._counter)
+        with self._lock:
+            self._pending[msg_id] = fut
+        return msg_id, fut
+
+    def resolve(self, msg_id: int, value: Any) -> bool:
+        with self._lock:
+            fut = self._pending.pop(msg_id, None)
+        if fut is None:
+            return False
+        fut.set_result(value)
+        return True
+
+    def reject(self, msg_id: int, message: str, remote_traceback: str = "") -> bool:
+        with self._lock:
+            fut = self._pending.pop(msg_id, None)
+        if fut is None:
+            return False
+        fut.set_exception(RemoteExecutionError(message, remote_traceback))
+        return True
+
+    def fail_all(self, exc: BaseException) -> int:
+        """Reject every outstanding future (node-death path)."""
+        with self._lock:
+            pending, self._pending = self._pending, {}
+        for fut in pending.values():
+            fut.set_exception(exc)
+        return len(pending)
+
+    def outstanding(self) -> int:
+        with self._lock:
+            return len(self._pending)

@@ -1,0 +1,136 @@
+"""Active-message framing.
+
+Paper mapping (§4.3): ``active_msg_base`` — "its only data member is the
+globally valid handler key" — becomes a fixed 32-byte little-endian header in
+front of the payload.  A received frame is first interpreted as a header (the
+cast to ``active_msg_base``); the key then selects the local handler, which
+reinterprets the payload according to its registered argument spec (the
+upcast into the concrete ``offload_msg<...>`` type).
+
+Header layout (32 bytes, little-endian):
+
+    u32  magic        0x48414D58  ("HAMX")
+    u16  version      wire protocol version
+    u16  flags        bit0 REPLY, bit1 ERROR, bit2 DYNAMIC payload
+    u32  key          global handler key (sorted-registry index)
+    u32  src_node     sender node id (for replies / reverse offload)
+    u64  msg_id       correlates replies with futures
+    u64  payload_len  bytes following the header
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+from repro.core.errors import MessageFormatError
+
+MAGIC = 0x48414D58
+VERSION = 1
+HEADER_STRUCT = struct.Struct("<IHHIIQQ")
+HEADER_NBYTES = HEADER_STRUCT.size  # 32
+
+FLAG_REPLY = 1 << 0
+FLAG_ERROR = 1 << 1
+FLAG_DYNAMIC = 1 << 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Header:
+    key: int
+    src_node: int
+    msg_id: int
+    payload_len: int
+    flags: int = 0
+    version: int = VERSION
+
+    @property
+    def is_reply(self) -> bool:
+        return bool(self.flags & FLAG_REPLY)
+
+    @property
+    def is_error(self) -> bool:
+        return bool(self.flags & FLAG_ERROR)
+
+    @property
+    def is_dynamic(self) -> bool:
+        return bool(self.flags & FLAG_DYNAMIC)
+
+
+def encode_header(header: Header, out: bytearray | None = None) -> bytes | bytearray:
+    buf = out if out is not None else bytearray(HEADER_NBYTES)
+    HEADER_STRUCT.pack_into(
+        buf,
+        0,
+        MAGIC,
+        header.version,
+        header.flags,
+        header.key,
+        header.src_node,
+        header.msg_id,
+        header.payload_len,
+    )
+    return buf
+
+
+def decode_header(buf: bytes | bytearray | memoryview) -> Header:
+    if len(buf) < HEADER_NBYTES:
+        raise MessageFormatError(
+            f"frame shorter than header: {len(buf)} < {HEADER_NBYTES}"
+        )
+    magic, version, flags, key, src_node, msg_id, payload_len = HEADER_STRUCT.unpack_from(
+        buf, 0
+    )
+    if magic != MAGIC:
+        raise MessageFormatError(f"bad magic 0x{magic:08x}")
+    if version != VERSION:
+        raise MessageFormatError(f"unsupported wire version {version}")
+    return Header(
+        key=key,
+        src_node=src_node,
+        msg_id=msg_id,
+        payload_len=payload_len,
+        flags=flags,
+        version=version,
+    )
+
+
+def encode_frame(
+    key: int,
+    payload: bytes | bytearray | memoryview,
+    *,
+    src_node: int = 0,
+    msg_id: int = 0,
+    flags: int = 0,
+) -> bytearray:
+    """One-allocation frame assembly: header || payload."""
+    frame = bytearray(HEADER_NBYTES + len(payload))
+    HEADER_STRUCT.pack_into(
+        frame, 0, MAGIC, VERSION, flags, key, src_node, msg_id, len(payload)
+    )
+    frame[HEADER_NBYTES:] = payload
+    return frame
+
+
+def decode_fast(frame):
+    """Hot-path decode: (key, flags, src_node, msg_id, payload_view) tuple,
+    no dataclass allocation.  Validation reduced to the magic check."""
+    magic, _version, flags, key, src_node, msg_id, payload_len = (
+        HEADER_STRUCT.unpack_from(frame, 0)
+    )
+    if magic != MAGIC:
+        raise MessageFormatError(f"bad magic 0x{magic:08x}")
+    return key, flags, src_node, msg_id, memoryview(frame)[
+        HEADER_NBYTES : HEADER_NBYTES + payload_len
+    ]
+
+
+def split_frame(frame: bytes | bytearray | memoryview) -> tuple[Header, memoryview]:
+    """Decode header and return a zero-copy view of the payload."""
+    header = decode_header(frame)
+    view = memoryview(frame)[HEADER_NBYTES : HEADER_NBYTES + header.payload_len]
+    if len(view) != header.payload_len:
+        raise MessageFormatError(
+            f"truncated payload: header says {header.payload_len}, got {len(view)}"
+        )
+    return header, view

@@ -1,0 +1,464 @@
+"""Migratable values: per-type serialisation between address spaces.
+
+Paper mapping (§4.3, §5.1):
+
+* ``migratable<T>``      -> the codec registry in this module.  A type that
+  cannot be bitwise-copied provides an *encode* hook (converting constructor)
+  and a *decode* hook (conversion operator).
+* ``is_bitwise_copyable`` -> :func:`is_bitwise_migratable`; violations raise
+  :class:`NotBitwiseMigratableError` at closure-construction time, the
+  Python analogue of the paper's compile-time trap.
+* The tuple ``std::tuple<migratable<Pars>...>`` storing a closure's arguments
+  corresponds to the **static pack** path: the receiving side knows the
+  argument specs *from the handler's registration* (the message type), so the
+  payload is a raw concatenation of fixed-size leaf bytes — no per-message
+  descriptors, which is what makes the fast path fast.
+* A **dynamic (self-describing) pack** path exists for `put`/`get` of
+  arbitrary pytrees, analogous to serialising a non-trivial type through a
+  ``migratable`` specialisation.
+
+Endianness is pinned little-endian; implementation-defined-width Python ints
+are pinned to int64 (the paper's §6 advice: avoid ``int``/``long double``,
+use fixed-size types).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.errors import (
+    MigratableError,
+    NotBitwiseMigratableError,
+    SpecMismatchError,
+)
+
+# --------------------------------------------------------------------------
+# Argument specs (the "Pars..." of the closure template)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """Fixed-shape, fixed-dtype array leaf — bitwise migratable."""
+
+    shape: tuple
+    dtype: str  # canonical numpy dtype string, e.g. "float32"
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n * np.dtype(self.dtype).itemsize
+
+    def canonical(self) -> str:
+        return f"array[{self.dtype};{','.join(str(int(d)) for d in self.shape)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarSpec:
+    """Fixed-width scalar leaf.  kind in {'i8','f8','b1'} (int64/float64/bool)."""
+
+    kind: str
+
+    _SIZES = {"i8": 8, "f8": 8, "b1": 1}
+
+    @property
+    def nbytes(self) -> int:
+        return self._SIZES[self.kind]
+
+    def canonical(self) -> str:
+        return f"scalar[{self.kind}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class OpaqueSpec:
+    """Custom registered type with a fixed-size wire format."""
+
+    type_name: str
+    nbytes_fixed: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.nbytes_fixed
+
+    def canonical(self) -> str:
+        return f"opaque[{self.type_name};{self.nbytes_fixed}]"
+
+
+Spec = Any  # ArraySpec | ScalarSpec | OpaqueSpec
+
+
+def canonical_spec_string(specs) -> str:
+    """Canonical textual form of an argument spec tuple.
+
+    Feeds the registry's stable-name digest — the analogue of the signature
+    part of the C++ mangled name, so two handlers with the same qualname but
+    different argument specs get different identities.
+    """
+    return "(" + ",".join(s.canonical() for s in specs) + ")"
+
+
+# --------------------------------------------------------------------------
+# Custom codec registry (migratable<T> specialisations)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Codec:
+    type_name: str
+    py_type: type
+    encode: Callable[[Any], bytes]          # converting constructor
+    decode: Callable[[bytes], Any]          # conversion operator
+    nbytes_fixed: int | None                # None => dynamic size only
+
+
+_CODECS_BY_TYPE: dict[type, _Codec] = {}
+_CODECS_BY_NAME: dict[str, _Codec] = {}
+
+
+def register_migratable(
+    py_type: type,
+    encode: Callable[[Any], bytes],
+    decode: Callable[[bytes], Any],
+    *,
+    type_name: str | None = None,
+    nbytes_fixed: int | None = None,
+) -> None:
+    """Register a ``migratable`` specialisation for ``py_type``.
+
+    ``nbytes_fixed`` enables use in *static* handler specs (fixed wire size);
+    without it the type is only usable on the dynamic path.
+    """
+    name = type_name or f"{py_type.__module__}:{py_type.__qualname__}"
+    codec = _Codec(name, py_type, encode, decode, nbytes_fixed)
+    _CODECS_BY_TYPE[py_type] = codec
+    _CODECS_BY_NAME[name] = codec
+
+
+def codec_for(value: Any) -> _Codec | None:
+    return _CODECS_BY_TYPE.get(type(value))
+
+
+def is_bitwise_migratable(value: Any) -> bool:
+    """True if a value needs no codec: fixed-size array/scalar leaves."""
+    if isinstance(value, (bool, int, float, np.bool_, np.integer, np.floating)):
+        return True
+    if isinstance(value, np.ndarray):
+        return value.dtype.kind in "biufc"
+    # jax.Array quacks like ndarray for our purposes
+    if hasattr(value, "__array__") and hasattr(value, "dtype") and hasattr(value, "shape"):
+        return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# spec_of: value -> Spec
+# --------------------------------------------------------------------------
+
+
+def spec_of(value: Any) -> Spec:
+    if isinstance(value, (bool, np.bool_)):
+        return ScalarSpec("b1")
+    if isinstance(value, (int, np.integer)):
+        return ScalarSpec("i8")
+    if isinstance(value, (float, np.floating)):
+        return ScalarSpec("f8")
+    codec = codec_for(value)
+    if codec is not None:
+        if codec.nbytes_fixed is None:
+            raise MigratableError(
+                f"type {codec.type_name} has a dynamic-size codec and cannot "
+                "appear in a static handler spec"
+            )
+        return OpaqueSpec(codec.type_name, codec.nbytes_fixed)
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.asarray(value)
+        if arr.dtype.kind not in "biufc":
+            raise NotBitwiseMigratableError(
+                f"array dtype {arr.dtype} is not bitwise migratable"
+            )
+        return ArraySpec(tuple(int(d) for d in arr.shape), str(arr.dtype))
+    raise NotBitwiseMigratableError(
+        f"type {type(value).__qualname__} is neither bitwise migratable nor "
+        "has a registered migratable codec; register one with "
+        "register_migratable() (the migratable<T> specialisation)"
+    )
+
+
+def check_against_spec(value: Any, spec: Spec) -> None:
+    got = spec_of(value)
+    if got != spec:
+        raise SpecMismatchError(f"argument spec mismatch: expected {spec}, got {got}")
+
+
+# --------------------------------------------------------------------------
+# STATIC pack/unpack: raw leaf concatenation, spec known to both sides
+# --------------------------------------------------------------------------
+
+
+def _scalar_to_bytes(value: Any, kind: str) -> bytes:
+    if kind == "i8":
+        return struct.pack("<q", int(value))
+    if kind == "f8":
+        return struct.pack("<d", float(value))
+    if kind == "b1":
+        return struct.pack("<?", bool(value))
+    raise MigratableError(f"unknown scalar kind {kind}")
+
+
+def _scalar_from_bytes(buf: memoryview, kind: str) -> Any:
+    if kind == "i8":
+        return struct.unpack("<q", buf[:8])[0]
+    if kind == "f8":
+        return struct.unpack("<d", buf[:8])[0]
+    if kind == "b1":
+        return struct.unpack("<?", buf[:1])[0]
+    raise MigratableError(f"unknown scalar kind {kind}")
+
+
+def static_payload_nbytes(specs) -> int:
+    return sum(s.nbytes for s in specs)
+
+
+def pack_static(args, specs, out=None):
+    """Pack ``args`` against ``specs`` into a contiguous buffer.
+
+    This is the paper's bitwise-copy fast path: no tags, no shapes, no dtype
+    strings on the wire — the receiver reconstructs purely from the handler's
+    registered spec.  ``out`` may be a presized bytearray or writable
+    memoryview (frames pack payloads in place).
+    """
+    if len(args) != len(specs):
+        raise SpecMismatchError(f"expected {len(specs)} args, got {len(args)}")
+    buf = out if out is not None else bytearray(static_payload_nbytes(specs))
+    off = 0
+    for value, spec in zip(args, specs):
+        if isinstance(spec, ScalarSpec):
+            b = _scalar_to_bytes(value, spec.kind)
+            buf[off : off + len(b)] = b
+            off += spec.nbytes
+        elif isinstance(spec, ArraySpec):
+            arr = np.asarray(value)
+            if tuple(arr.shape) != spec.shape or str(arr.dtype) != spec.dtype:
+                raise SpecMismatchError(
+                    f"array arg mismatch: expected {spec}, got "
+                    f"shape={tuple(arr.shape)} dtype={arr.dtype}"
+                )
+            # single copy straight into the wire buffer (bitwise fast path)
+            dst = np.frombuffer(buf, np.uint8, count=spec.nbytes, offset=off)
+            np.copyto(dst, np.ascontiguousarray(arr).view(np.uint8).reshape(-1))
+            off += spec.nbytes
+        elif isinstance(spec, OpaqueSpec):
+            codec = _CODECS_BY_NAME[spec.type_name]
+            raw = codec.encode(value)
+            if len(raw) != spec.nbytes_fixed:
+                raise SpecMismatchError(
+                    f"codec {spec.type_name} produced {len(raw)} bytes, "
+                    f"spec says {spec.nbytes_fixed}"
+                )
+            buf[off : off + len(raw)] = raw
+            off += spec.nbytes
+        else:
+            raise MigratableError(f"unknown spec {spec!r}")
+    return buf  # bytearray: transports accept buffer-protocol objects
+
+
+def unpack_static(payload: bytes | memoryview, specs) -> tuple:
+    """Inverse of :func:`pack_static`.  Array leaves are zero-copy views."""
+    view = memoryview(payload)
+    args = []
+    off = 0
+    for spec in specs:
+        if isinstance(spec, ScalarSpec):
+            args.append(_scalar_from_bytes(view[off:], spec.kind))
+        elif isinstance(spec, ArraySpec):
+            arr = np.frombuffer(
+                view[off : off + spec.nbytes], dtype=np.dtype(spec.dtype)
+            ).reshape(spec.shape)
+            args.append(arr)
+        elif isinstance(spec, OpaqueSpec):
+            codec = _CODECS_BY_NAME.get(spec.type_name)
+            if codec is None:
+                raise MigratableError(
+                    f"no codec registered locally for {spec.type_name}; "
+                    "heterogeneous processes must register the same migratable "
+                    "specialisations (same-source assumption)"
+                )
+            args.append(codec.decode(bytes(view[off : off + spec.nbytes])))
+        else:
+            raise MigratableError(f"unknown spec {spec!r}")
+        off += spec.nbytes
+    return tuple(args)
+
+
+# --------------------------------------------------------------------------
+# DYNAMIC pack/unpack: self-describing pytree TLV
+# --------------------------------------------------------------------------
+
+_T_NONE = 0
+_T_BOOL = 1
+_T_INT = 2
+_T_FLOAT = 3
+_T_BYTES = 4
+_T_STR = 5
+_T_NDARRAY = 6
+_T_LIST = 7
+_T_TUPLE = 8
+_T_DICT = 9
+_T_CUSTOM = 10
+
+
+def _pack_into(out: bytearray, value: Any) -> None:
+    if value is None:
+        out.append(_T_NONE)
+    elif isinstance(value, (bool, np.bool_)):
+        out.append(_T_BOOL)
+        out.append(1 if value else 0)
+    elif isinstance(value, (int, np.integer)):
+        out.append(_T_INT)
+        out += struct.pack("<q", int(value))
+    elif isinstance(value, (float, np.floating)):
+        out.append(_T_FLOAT)
+        out += struct.pack("<d", float(value))
+    elif isinstance(value, (bytes, bytearray, memoryview)):
+        raw = bytes(value)
+        out.append(_T_BYTES)
+        out += struct.pack("<Q", len(raw))
+        out += raw
+    elif isinstance(value, str):
+        raw = value.encode("utf-8")
+        out.append(_T_STR)
+        out += struct.pack("<Q", len(raw))
+        out += raw
+    elif codec_for(value) is not None:
+        codec = codec_for(value)
+        name = codec.type_name.encode("utf-8")
+        raw = codec.encode(value)
+        out.append(_T_CUSTOM)
+        out += struct.pack("<H", len(name))
+        out += name
+        out += struct.pack("<Q", len(raw))
+        out += raw
+    elif hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.ascontiguousarray(np.asarray(value))
+        if arr.dtype.kind not in "biufcV":
+            raise NotBitwiseMigratableError(f"cannot migrate dtype {arr.dtype}")
+        dt = arr.dtype.str.encode("ascii")  # includes endianness, e.g. '<f4'
+        out.append(_T_NDARRAY)
+        out.append(len(dt))
+        out += dt
+        out.append(arr.ndim)
+        for d in arr.shape:
+            out += struct.pack("<Q", d)
+        # bulk leaf: single copy via the buffer protocol (no tobytes temp)
+        out += arr.reshape(-1).view(np.uint8).data
+    elif isinstance(value, list):
+        out.append(_T_LIST)
+        out += struct.pack("<Q", len(value))
+        for item in value:
+            _pack_into(out, item)
+    elif isinstance(value, tuple):
+        out.append(_T_TUPLE)
+        out += struct.pack("<Q", len(value))
+        for item in value:
+            _pack_into(out, item)
+    elif isinstance(value, dict):
+        out.append(_T_DICT)
+        out += struct.pack("<Q", len(value))
+        for k, v in value.items():
+            if not isinstance(k, str):
+                raise MigratableError("dynamic dict keys must be str")
+            _pack_into(out, k)
+            _pack_into(out, v)
+    else:
+        raise NotBitwiseMigratableError(
+            f"type {type(value).__qualname__} has no migratable codec"
+        )
+
+
+def pack_dynamic(value: Any) -> bytes:
+    """Self-describing encoding of a pytree of migratable leaves."""
+    out = bytearray()
+    _pack_into(out, value)
+    return bytes(out)
+
+
+def _unpack_from(view: memoryview, off: int):
+    tag = view[off]
+    off += 1
+    if tag == _T_NONE:
+        return None, off
+    if tag == _T_BOOL:
+        return bool(view[off]), off + 1
+    if tag == _T_INT:
+        return struct.unpack_from("<q", view, off)[0], off + 8
+    if tag == _T_FLOAT:
+        return struct.unpack_from("<d", view, off)[0], off + 8
+    if tag == _T_BYTES:
+        (n,) = struct.unpack_from("<Q", view, off)
+        off += 8
+        return bytes(view[off : off + n]), off + n
+    if tag == _T_STR:
+        (n,) = struct.unpack_from("<Q", view, off)
+        off += 8
+        return bytes(view[off : off + n]).decode("utf-8"), off + n
+    if tag == _T_CUSTOM:
+        (nlen,) = struct.unpack_from("<H", view, off)
+        off += 2
+        name = bytes(view[off : off + nlen]).decode("utf-8")
+        off += nlen
+        (n,) = struct.unpack_from("<Q", view, off)
+        off += 8
+        codec = _CODECS_BY_NAME.get(name)
+        if codec is None:
+            raise MigratableError(f"no codec registered locally for {name}")
+        return codec.decode(bytes(view[off : off + n])), off + n
+    if tag == _T_NDARRAY:
+        dtlen = view[off]
+        off += 1
+        dt = np.dtype(bytes(view[off : off + dtlen]).decode("ascii"))
+        off += dtlen
+        ndim = view[off]
+        off += 1
+        shape = []
+        for _ in range(ndim):
+            (d,) = struct.unpack_from("<Q", view, off)
+            shape.append(d)
+            off += 8
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
+        if not shape:
+            nbytes = dt.itemsize
+        arr = np.frombuffer(view[off : off + nbytes], dtype=dt).reshape(shape)
+        return arr, off + nbytes
+    if tag in (_T_LIST, _T_TUPLE):
+        (n,) = struct.unpack_from("<Q", view, off)
+        off += 8
+        items = []
+        for _ in range(n):
+            item, off = _unpack_from(view, off)
+            items.append(item)
+        return (items if tag == _T_LIST else tuple(items)), off
+    if tag == _T_DICT:
+        (n,) = struct.unpack_from("<Q", view, off)
+        off += 8
+        d = {}
+        for _ in range(n):
+            k, off = _unpack_from(view, off)
+            v, off = _unpack_from(view, off)
+            d[k] = v
+        return d, off
+    raise MigratableError(f"unknown dynamic tag {tag}")
+
+
+def unpack_dynamic(payload: bytes | memoryview) -> Any:
+    value, off = _unpack_from(memoryview(payload), 0)
+    if off != len(payload):
+        raise MigratableError(
+            f"trailing bytes in dynamic payload: consumed {off} of {len(payload)}"
+        )
+    return value

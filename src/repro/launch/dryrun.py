@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the full-size model config (plans.tuned_config) and the
+     production mesh (single-pod 16×16 = 256 chips, multi-pod 2×16×16 = 512),
+  2. resolves parameter/optimizer/cache PartitionSpecs from the divisibility
+     -aware rules (models.sharding.Sharder),
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+     and ``.compile()`` — no arrays are ever allocated,
+  4. prints ``compiled.memory_analysis()`` (fits-per-device proof) and
+     ``compiled.cost_analysis()``, runs the trip-count-aware HLO analyzer,
+     and writes the roofline report JSON for EXPERIMENTS.md.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch llama3-405b --cell train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--arch X] [--cell Y]
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS
+from repro.launch import plans
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    analytic_memory_bytes,
+    build_report,
+    save_report,
+    tree_shard_bytes,
+)
+from repro.models.api import build_model
+from repro.models.config import SHAPE_CELLS, shape_cell, supports_cell
+from repro.models.counting import model_flops
+from repro.models.sharding import Sharder
+from repro.optim import adamw
+from repro.train.step import build_train_step
+
+
+# -- rules tree -> NamedSharding tree (walks params/cache structures) --------
+
+
+def spec_tree(sharder: Sharder, shapes, rules):
+    """Walk a shapes pytree (dicts/tuples/lists of ShapeDtypeStructs)
+    alongside a rules tree of the same container structure; leaves are
+    ShapeDtypeStructs, so containers are never ambiguous."""
+    if isinstance(shapes, dict):
+        return {k: spec_tree(sharder, v, rules[k]) for k, v in shapes.items()}
+    if isinstance(shapes, (tuple, list)):
+        return type(shapes)(
+            spec_tree(sharder, s, r) for s, r in zip(shapes, rules)
+        )
+    return NamedSharding(sharder.mesh, sharder.spec(shapes.shape, rules))
+
+
+def _mirror(shapes, ns_tree_builder):
+    return jax.tree_util.tree_map(ns_tree_builder, shapes)
+
+
+def shardings_for(model, sharder, cell, opt_dtype):
+    """(in_shardings, arg ShapeDtypeStructs, donate) for the cell's step."""
+    mesh = sharder.mesh
+    rep = NamedSharding(mesh, P())
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    param_ns = spec_tree(sharder, params_shapes, model.param_rules())
+    batch_shapes = model.input_specs(cell)
+    batch_ns = {}
+    for k, v in batch_shapes.items():
+        if k in ("tokens", "labels"):
+            batch_ns[k] = NamedSharding(mesh, sharder.spec(v.shape, ["batch", None]))
+        elif k in ("patch_embeds", "frames"):
+            batch_ns[k] = NamedSharding(
+                mesh, sharder.spec(v.shape, ["batch", None, None])
+            )
+        else:  # pos scalar
+            batch_ns[k] = rep
+    if cell.kind == "train":
+        opt_shapes = jax.eval_shape(
+            lambda ps: adamw.init(ps, state_dtype=opt_dtype), params_shapes
+        )
+        opt_ns = {
+            "mu": spec_tree(sharder, opt_shapes["mu"], model.param_rules()),
+            "nu": spec_tree(sharder, opt_shapes["nu"], model.param_rules()),
+            "step": rep,
+        }
+        return (
+            (param_ns, opt_ns, batch_ns),
+            (params_shapes, opt_shapes, batch_shapes),
+            (0, 1),
+        )
+    if cell.kind == "decode":
+        window = (
+            model.cfg.ssm.attn_window
+            if model.cfg.ssm is not None else None
+        )
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len,
+                                     window=window)
+        )
+        cache_ns = spec_tree(sharder, cache_shapes, model.cache_rules())
+        return (
+            (param_ns, cache_ns, batch_ns),
+            (params_shapes, cache_shapes, batch_shapes),
+            (1,),
+        )
+    # prefill
+    return ((param_ns, batch_ns), (params_shapes, batch_shapes), ())
+
+
+def lower_cell(arch: str, cell_name: str, *, multi_pod: bool,
+               cfg_override=None, plan_override=None, tag="baseline",
+               save=True, verbose=True, train_variant="plain"):
+    cell = shape_cell(cell_name)
+    cfg = cfg_override if cfg_override is not None else plans.tuned_config(arch, cell)
+    ok, why = supports_cell(cfg, cell)
+    if not ok:
+        return {"arch": arch, "cell": cell_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    plan = plan_override if plan_override is not None else plans.plan_for(
+        arch, cell, multi_pod=multi_pod
+    )
+    sharder = Sharder(mesh, plan)
+    model = build_model(cfg)
+    opt_dtype = plans.opt_state_dtype(arch)
+
+    in_ns, arg_shapes, donate = shardings_for(model, sharder, cell, opt_dtype)
+
+    if cell.kind == "train":
+        opt_cfg = adamw.AdamWConfig(
+            state_dtype=opt_dtype,
+            reduce_dtype="bfloat16" if cfg.param_dtype == "bfloat16" else None,
+        )
+        if train_variant == "compressed":
+            # int8 error-feedback gradient compression (§Perf): the EF
+            # residual rides along as an extra donated argument
+            from repro.train.step import build_compressed_train_step
+
+            step = build_compressed_train_step(model, opt_cfg, sharder)
+            res_shapes = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32),
+                arg_shapes[0],
+            )
+            in_ns = (in_ns[0], in_ns[1], in_ns[0], in_ns[2])
+            arg_shapes = (arg_shapes[0], arg_shapes[1], res_shapes,
+                          arg_shapes[2])
+            donate = (0, 1, 2)
+            fn = step
+            out_ns = (in_ns[0], in_ns[1], in_ns[0], None)
+        else:
+            fn = build_train_step(model, opt_cfg, sharder,
+                                  grad_shardings=in_ns[0])
+            out_ns = (in_ns[0], in_ns[1], None)
+    elif cell.kind == "decode":
+        window = cfg.ssm.attn_window if cfg.ssm is not None else None
+
+        def fn(params, cache, batch):
+            return model.decode_step(params, cache, batch, sharder=sharder)
+
+        out_ns = (None, in_ns[1])
+    else:  # prefill
+
+        def fn(params, batch):
+            logits, cache = model.prefill(params, batch, sharder=sharder)
+            return logits, cache
+
+        out_ns = None
+
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_ns, out_shardings=out_ns,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*arg_shapes)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_stats = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    try:
+        xla_cost = {k: float(v) for k, v in (compiled.cost_analysis() or {}).items()
+                    if k in ("flops", "bytes accessed")}
+    except Exception:  # noqa: BLE001
+        xla_cost = {}
+    hlo_cost = analyze(compiled.as_text())
+    mf = model_flops(cfg, cell)
+
+    # analytic memory term from the actual shard sizes
+    param_b = tree_shard_bytes(arg_shapes[0], in_ns[0])
+    opt_b = tree_shard_bytes(arg_shapes[1], in_ns[1]) if cell.kind == "train" else 0
+    cache_b = tree_shard_bytes(arg_shapes[1], in_ns[1]) if cell.kind == "decode" else 0
+    if cell.kind == "prefill":
+        window = cfg.ssm.attn_window if cfg.ssm is not None else None
+        cache_shapes = jax.eval_shape(
+            lambda: build_model(cfg).init_cache(cell.global_batch, cell.seq_len,
+                                                window=window)
+        )
+        cache_b = tree_shard_bytes(
+            cache_shapes, spec_tree(Sharder(mesh, plan), cache_shapes,
+                                    model.cache_rules())
+        )
+    analytic_b = analytic_memory_bytes(
+        cfg, cell, mesh, plan, param_bytes=param_b, opt_bytes=opt_b,
+        cache_bytes=cache_b,
+    )
+    report = build_report(arch, cell_name, mesh_name, chips, hlo_cost, mf,
+                          mem_stats, xla_cost, analytic_bytes=analytic_b)
+    if verbose:
+        print(report.summary(), flush=True)
+        per_dev = (mem_stats["argument_bytes"] + mem_stats["temp_bytes"]) / chips
+        print(
+            f"  memory_analysis: args={mem_stats['argument_bytes']/1e9:.2f}GB "
+            f"temp={mem_stats['temp_bytes']/1e9:.2f}GB total "
+            f"(~{per_dev/1e9:.2f}GB/chip)  "
+            f"cost_analysis: {xla_cost}  "
+            f"lower={t_lower:.0f}s compile={t_compile:.0f}s",
+            flush=True,
+        )
+    if save:
+        save_report(report, tag=tag)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--cell", default=None,
+                    choices=[c.name for c in SHAPE_CELLS] + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    cells = [args.cell] if args.cell else [c.name for c in SHAPE_CELLS]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                try:
+                    r = lower_cell(arch, cell, multi_pod=mp, tag=args.tag)
+                    if isinstance(r, dict) and "skipped" in r:
+                        print(f"{arch:18s} {cell:12s} "
+                              f"{'pod2x16x16' if mp else 'pod16x16':9s} "
+                              f"SKIP: {r['skipped']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, cell, mp, repr(e)[:500]))
+                    print(f"{arch:18s} {cell:12s} FAIL({mp=}): {e!r}"[:300],
+                          flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        return 1
+    print("\nALL CELLS COMPILED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,535 @@
+"""Static analyzer for post-optimization (SPMD-partitioned) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits each ``while`` body
+**once** — scanned-layer models (all of ours) would be undercounted by a
+factor of num_layers.  This module parses ``compiled.as_text()`` into
+computations, recovers loop **trip counts** from the ``while`` condition's
+compare-against-constant, and attributes costs recursively::
+
+    cost(comp) = Σ instruction costs
+               + Σ cost(called comp) × trip_count      (while)
+               + Σ cost(called comp) × 1               (fusion/call)
+               + max over branches                      (conditional)
+
+Per-device accounting (shapes in partitioned HLO are shard shapes):
+
+* ``flops``        — 2·M·N·K for dots (contraction sizes read from operand
+  shapes), kernel_elems·2·out for convolutions, 1/elem for elementwise
+  arithmetic.  MXU + VPU work.
+* ``hbm_bytes``    — Σ over *top-level* (post-fusion) instructions of
+  operand+output buffer bytes: fusion boundaries are exactly where XLA
+  reads/writes HBM, so this is the canonical traffic estimate.
+* ``collective_bytes`` — Σ over all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute of the max participating buffer size,
+  with an op factor (all-reduce ≈ 2× in ring implementations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "logistic", "sign", "floor", "ceil", "cosine", "sine", "select",
+    "compare", "and", "or", "xor", "not", "clamp", "remainder",
+    "exponential-minus-one", "log-plus-one", "atan2", "cbrt",
+    "round-nearest-afz", "round-nearest-even",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dtype)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: dict  # name -> Instruction
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]\{\},:#\* ]+?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BRANCH_ATTR = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def parse_hlo(text: str) -> dict:
+    """-> {comp_name: Computation}"""
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and "{" in line:
+                current = Computation(m.group(1), {})
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operands: the %refs before any attribute section in `rest`
+        paren_depth = 1
+        args_end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                paren_depth += 1
+            elif ch == ")":
+                paren_depth -= 1
+                if paren_depth == 0:
+                    args_end = i
+                    break
+        operand_str = rest[:args_end]
+        operands = _OPERAND.findall(operand_str)
+        current.instructions[name] = Instruction(
+            name, type_str.strip(), opcode, operands, line.strip()
+        )
+    return comps
+
+
+def _operand_type(comp: Computation, op_name: str) -> str:
+    ins = comp.instructions.get(op_name)
+    return ins.type_str if ins else ""
+
+
+def _dot_flops(comp: Computation, ins: Instruction) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.type_str):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    contracting = 1
+    if m and ins.operands:
+        lhs_dims = _shape_dims(_operand_type(comp, ins.operands[0]))
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contracting *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contracting
+
+
+def _conv_flops(comp: Computation, ins: Instruction) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.type_str):
+        out_elems *= d
+    if len(ins.operands) > 1:
+        k_dims = _shape_dims(_operand_type(comp, ins.operands[1]))
+        k_elems = 1
+        for d in k_dims:
+            k_elems *= d
+        # per output element: kernel_elems MACs / output-feature count
+        out_feat = k_dims[-1] if k_dims else 1
+        return 2.0 * out_elems * max(k_elems // max(out_feat, 1), 1)
+    return 2.0 * out_elems
+
+
+def trip_count(comps: dict, cond_name: str) -> int:
+    """Loop limit from the condition computation.
+
+    Scan lowers to ``i < limit`` with a constant limit; post-fusion the
+    compare often lives inside a wrapped fusion whose *operand* is the
+    constant.  Heuristic: the largest integer constant reachable from the
+    condition computation (scan counters start at 0, so the limit is the
+    max).  Falls back to 1 (cost_analysis-equivalent) when nothing parses.
+    """
+    seen: set = set()
+
+    def max_const(name: str) -> int:
+        if name in seen:
+            return 0
+        seen.add(name)
+        comp = comps.get(name)
+        if comp is None:
+            return 0
+        best = 0
+        for ins in comp.instructions.values():
+            if ins.opcode == "constant" and ins.type_str.strip().startswith(
+                ("s32[]", "u32[]", "s64[]", "u64[]")
+            ):
+                m = _CONST_INT.search(ins.raw)
+                if m:
+                    best = max(best, int(m.group(1)))
+            m = _CALL_ATTR.search(ins.raw)
+            if m and ins.opcode in ("fusion", "call"):
+                best = max(best, max_const(m.group(1)))
+        return best
+
+    return max(max_const(cond_name), 1)
+
+
+def _logical_operand_bytes(comps: dict, comp: Computation, op_name: str,
+                           depth: int = 0) -> int:
+    """Logical (pre-dtype-emulation) bytes of a buffer: unwrap converts and
+    convert-rooted fusions back to the narrowest source buffer."""
+    if depth > 6:
+        return 0
+    src = comp.instructions.get(op_name)
+    if src is None:
+        return 0
+    if src.opcode == "convert" and src.operands:
+        inner = _shape_bytes(_operand_type(comp, src.operands[0]))
+        deeper = _logical_operand_bytes(comps, comp, src.operands[0], depth + 1)
+        return min(x for x in (inner, deeper) if x) if (inner or deeper) else 0
+    if src.opcode == "fusion":
+        m = _CALL_ATTR.search(src.raw)
+        called = comps.get(m.group(1)) if m else None
+        if called is not None:
+            root = None
+            for fi in called.instructions.values():
+                if "ROOT" in fi.raw:
+                    root = fi
+            seen = 0
+            while (root is not None and root.opcode in ("convert", "bitcast",
+                                                         "copy")
+                   and root.operands and seen < 8):
+                root = called.instructions.get(root.operands[0])
+                seen += 1
+            if root is not None and seen:
+                return _shape_bytes(root.type_str)
+    return 0
+
+
+def _fusion_boundary_bytes(comps: dict, comp: Computation,
+                           ins: Instruction) -> float:
+    """Traffic at a fusion boundary = output + operands, with two in-place
+    patterns discounted (XLA/TPU alias these buffers):
+
+    * an operand the fused computation only *slices* costs the slice;
+    * a fusion whose ROOT is a dynamic-update-slice of a parameter is an
+      in-place update: the output costs the update region, and the aliased
+      parameter operand costs nothing extra (donated KV caches)."""
+    called = None
+    m = _CALL_ATTR.search(ins.raw)
+    if m:
+        called = comps.get(m.group(1))
+    param_names: dict[int, str] = {}
+    consumers: dict[str, list] = {}
+    root: Instruction | None = None
+    if called is not None:
+        for fi in called.instructions.values():
+            if fi.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", fi.raw)
+                if pm:
+                    param_names[int(pm.group(1))] = fi.name
+            for o in fi.operands:
+                consumers.setdefault(o, []).append(fi)
+            if "ROOT" in fi.raw:
+                root = fi
+
+    # `convert`/`bitcast` are layout/emulation artifacts (the CPU backend
+    # wraps every bf16 buffer in converts); trace through them.
+    TRANSPARENT = ("convert", "bitcast", "copy")
+
+    def unwrap(iref: Instruction | None) -> Instruction | None:
+        seen = 0
+        while (iref is not None and iref.opcode in TRANSPARENT
+               and iref.operands and seen < 16):
+            iref = called.instructions.get(iref.operands[0])
+            seen += 1
+        return iref
+
+    def real_consumers(name: str) -> list:
+        out, frontier, seen = [], [name], 0
+        while frontier and seen < 64:
+            nxt = []
+            for n in frontier:
+                for c in consumers.get(n, []):
+                    seen += 1
+                    if c.opcode in TRANSPARENT:
+                        nxt.append(c.name)
+                    else:
+                        out.append((n, c))
+            frontier = nxt
+        return out
+
+    # pure-movement fusions: root unwraps through convert/bitcast/copy/
+    # transpose/reshape straight to a parameter.  A same-logical-shape chain
+    # is a CPU bf16-emulation round-trip (absent on TPU) -> 0 bytes; a
+    # permuted chain is a layout change -> count the buffer once at the
+    # smaller element size.
+    MOVEMENT = TRANSPARENT + ("transpose", "reshape")
+
+    def unwrap_move(iref: Instruction | None) -> Instruction | None:
+        seen = 0
+        while (iref is not None and iref.opcode in MOVEMENT
+               and iref.operands and seen < 16):
+            iref = called.instructions.get(iref.operands[0])
+            seen += 1
+        return iref
+
+    if called is not None and root is not None:
+        # track the smallest buffer along the movement chain (bf16 twin of a
+        # CPU-emulation f32 copy)
+        chain_min = [_shape_bytes(root.type_str)] if root.type_str else []
+
+        def unwrap_move_track(iref):
+            seen = 0
+            while (iref is not None and iref.opcode in MOVEMENT
+                   and iref.operands and seen < 16):
+                iref = called.instructions.get(iref.operands[0])
+                if iref is not None:
+                    chain_min.append(_shape_bytes(iref.type_str))
+                seen += 1
+            return iref
+
+        mroot = unwrap_move_track(root)
+        if mroot is not None and mroot.opcode == "parameter":
+            in_dims = _shape_dims(mroot.type_str)
+            same_shape = sorted(_shape_dims(ins.type_str)) == sorted(in_dims)
+            if same_shape:
+                # dtype-emulation round-trip or pure relayout of the same
+                # buffer: free on TPU when fused into the consumer
+                return 0.0
+            return float(min(chain_min)) if chain_min else 0.0
+
+    # output cost (in-place DUS root -> update bytes only)
+    aliased_params: set[str] = set()
+    rroot = unwrap(root) if called else None
+    if rroot is not None and rroot.opcode == "dynamic-update-slice":
+        upd = (_shape_bytes(_operand_type(called, rroot.operands[1]))
+               if len(rroot.operands) > 1 else 0)
+        total = 2.0 * upd
+        # walk the updated-buffer chain back to a parameter (alias)
+        cur = called.instructions.get(rroot.operands[0]) if rroot.operands else None
+        cur = unwrap(cur)
+        if cur is not None and cur.opcode == "parameter":
+            aliased_params.add(cur.name)
+    else:
+        total = float(_shape_bytes(ins.type_str))
+    for idx, o in enumerate(ins.operands):
+        full = _shape_bytes(_operand_type(comp, o))
+        if called is not None and idx in param_names:
+            pname = param_names[idx]
+            if pname in aliased_params:
+                continue
+            cons = real_consumers(pname)
+            if cons and all(c.opcode == "dynamic-slice" for _, c in cons):
+                total += sum(_shape_bytes(c.type_str) for _, c in cons)
+                continue
+            if cons and all(
+                c.opcode == "dynamic-update-slice" and c.operands
+                and unwrap(called.instructions.get(c.operands[0])) is not None
+                and unwrap(called.instructions.get(c.operands[0])).name == pname
+                for _, c in cons
+            ):
+                total += sum(
+                    _shape_bytes(_operand_type(called, c.operands[1]))
+                    for _, c in cons if len(c.operands) > 1
+                )
+                continue
+        total += full
+    return total
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: dict = dataclasses.field(default_factory=dict)
+    loops: list = dataclasses.field(default_factory=list)
+    sites: list = dataclasses.field(default_factory=list)  # (bytes, flops, desc)
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_by_op.items():
+            self.collective_by_op[k] = self.collective_by_op.get(k, 0.0) + v * mult
+        for b, f, d in other.sites:
+            self.sites.append((b * mult, f * mult, d))
+
+    def top_sites(self, n=15, key="bytes"):
+        idx = 0 if key == "bytes" else 1
+        merged: dict[str, list] = {}
+        for b, f, d in self.sites:
+            e = merged.setdefault(d, [0.0, 0.0])
+            e[0] += b
+            e[1] += f
+        rows = [(v[0], v[1], d) for d, v in merged.items()]
+        rows.sort(key=lambda r: -r[idx])
+        return rows[:n]
+
+
+def _comp_cost(comps: dict, name: str, memo: dict, *, top: bool) -> HloCost:
+    key = (name, top)
+    if key in memo:
+        return memo[key]
+    comp = comps.get(name)
+    cost = HloCost()
+    if comp is None:
+        memo[key] = cost
+        return cost
+    for ins in comp.instructions.values():
+        op = ins.opcode
+        ins_flops = 0.0
+        ins_bytes = 0.0
+        if op == "dot":
+            ins_flops = _dot_flops(comp, ins)
+            cost.flops += ins_flops
+        elif op == "convolution":
+            ins_flops = _conv_flops(comp, ins)
+            cost.flops += ins_flops
+        elif op in _ELEMENTWISE:
+            n = 1
+            for d in _shape_dims(ins.type_str):
+                n *= d
+            ins_flops = n
+            cost.flops += n
+        if op in _COLLECTIVES:
+            sizes = [_shape_bytes(ins.type_str)]
+            for o in ins.operands:
+                sizes.append(_shape_bytes(_operand_type(comp, o)))
+                # CPU backend emulates bf16 collectives in f32: if the
+                # operand traces back (through converts / convert-rooted
+                # fusions) to a bf16 buffer, TPU wire bytes are bf16
+                logical = _logical_operand_bytes(comps, comp, o)
+                if logical and logical < sizes[-1]:
+                    sizes[-1] = logical
+                    sizes[0] = min(sizes[0], max(logical, 1))
+            b = max(sizes) * _COLLECTIVES[op]
+            cost.collective_bytes += b
+            cost.collective_by_op[op] = cost.collective_by_op.get(op, 0.0) + b
+            cost.sites.append(
+                (b, 0.0, f"COLL::{comp.name}::{op}::{ins.type_str.strip()[:60]}")
+            )
+        # HBM traffic at top-level (post-fusion) instruction boundaries.
+        # Structural ops move no data; slicing ops touch the slice, not the
+        # operand; `while`/`call` operands are counted inside their bodies.
+        if top and op not in (
+            "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "while", "conditional", "call", "after-all", "partition-id",
+            "replica-id",
+        ):
+            if op == "copy" and ins.operands and (
+                (src := comp.instructions.get(ins.operands[0])) is not None
+                and src.opcode == "parameter"
+            ):
+                ins_bytes = 0  # donated-input copy: aliased on TPU
+            elif op == "dynamic-slice":
+                ins_bytes = 2 * _shape_bytes(ins.type_str)
+            elif op == "dynamic-update-slice":
+                upd = (_shape_bytes(_operand_type(comp, ins.operands[1]))
+                       if len(ins.operands) > 1 else 0)
+                ins_bytes = 2 * upd
+            elif op == "fusion":
+                ins_bytes = _fusion_boundary_bytes(comps, comp, ins)
+            else:
+                b = _shape_bytes(ins.type_str)
+                for o in ins.operands:
+                    b += _shape_bytes(_operand_type(comp, o))
+                ins_bytes = b
+            cost.hbm_bytes += ins_bytes
+        if ins_bytes or ins_flops:
+            cost.sites.append(
+                (ins_bytes, ins_flops,
+                 f"{comp.name}::{op}::{ins.type_str.strip()[:60]}")
+            )
+        # recurse into called computations
+        if op == "while":
+            body = cond = None
+            m = re.search(r"body=%?([\w\.\-]+)", ins.raw)
+            if m:
+                body = m.group(1)
+            m = re.search(r"condition=%?([\w\.\-]+)", ins.raw)
+            if m:
+                cond = m.group(1)
+            tc = trip_count(comps, cond) if cond else 1
+            if body:
+                sub = _comp_cost(comps, body, memo, top=top)
+                cost.add(sub, tc)
+                cost.loops.append((body, tc))
+        elif op == "conditional":
+            m = _BRANCH_ATTR.search(ins.raw)
+            if m:
+                branches = _OPERAND.findall(m.group(1)) or [
+                    b.strip().lstrip("%") for b in m.group(1).split(",")
+                ]
+                subs = [_comp_cost(comps, b, memo, top=top) for b in branches]
+                if subs:
+                    best = max(subs, key=lambda c: c.flops)
+                    cost.add(best)
+        elif op == "fusion":
+            m = _CALL_ATTR.search(ins.raw)
+            if m:
+                # flops live inside the fused computation; bytes were already
+                # counted at this fusion's boundary
+                sub = _comp_cost(comps, m.group(1), memo, top=False)
+                cost.flops += sub.flops
+                cost.collective_bytes += sub.collective_bytes
+                for k, v in sub.collective_by_op.items():
+                    cost.collective_by_op[k] = cost.collective_by_op.get(k, 0) + v
+        elif op in ("call", "custom-call", "async-start"):
+            m = _CALL_ATTR.search(ins.raw)
+            if m:
+                sub = _comp_cost(comps, m.group(1), memo, top=False)
+                cost.add(sub)
+    memo[key] = cost
+    return cost
+
+
+def analyze(hlo_text: str) -> HloCost:
+    comps = parse_hlo(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        # fall back: biggest computation
+        entry = max(comps, key=lambda n: len(comps[n].instructions))
+    return _comp_cost(comps, entry, {}, top=True)

@@ -1,0 +1,60 @@
+"""Parameter / FLOP accounting for the roofline analysis.
+
+MODEL_FLOPS convention (EXPERIMENTS.md §Roofline):
+* train cells:            6 · N_active · tokens   (fwd 2ND + bwd 4ND)
+* prefill/decode cells:   2 · N_active · tokens
+Attention's quadratic term is intentionally *not* in MODEL_FLOPS — the
+HLO_FLOPs / MODEL_FLOPS ratio then exposes attention + remat + routing
+overhead, which is what the assignment asks the ratio to catch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=64)
+def _shapes_for(cfg):
+    from repro.models.api import build_model
+
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def count_params(cfg) -> int:
+    shapes = _shapes_for(cfg)
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)))
+
+
+def count_active_params(cfg) -> int:
+    """Active parameters per token (MoE: routed experts scaled by top_k/E;
+    Zamba2: the shared attention block is applied L/attn_every times, so it
+    counts once per application... it is one weight set used repeatedly —
+    counted once, like weight tying)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    shapes = _shapes_for(cfg)
+    routed = 0
+    moe_tree = shapes["layers"].get("moe") if isinstance(shapes, dict) else None
+    if moe_tree is not None:
+        for name in ("w_gate", "w_up", "w_down"):
+            routed += int(np.prod(moe_tree[name].shape))
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - routed * (1.0 - frac))
+
+
+def model_flops(cfg, cell) -> float:
+    n = count_active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.seq_len * cell.global_batch
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.seq_len * cell.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * cell.global_batch

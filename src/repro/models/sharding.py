@@ -1,0 +1,135 @@
+"""Divisibility-aware sharding rules.
+
+Real fleets are not uniform: 20-head models meet 16-way tensor-parallel
+meshes, 60-expert MoEs meet 16-way expert-parallel axes, 51866-token vocabs
+meet power-of-two grids.  Rather than padding models to fit the mesh (which
+corrupts the roofline accounting), every rule here degrades gracefully:
+a dim is sharded over an axis set only if its size divides the axis product,
+otherwise the next fallback (or replication) applies.  The dry-run prints
+what actually sharded, so EXPERIMENTS.md records the truth.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ShardingPlan
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class Sharder:
+    """Builds PartitionSpecs from logical dim rules against a concrete mesh.
+
+    A *rule* for one dim is a tuple of logical names, tried in order:
+      - "batch"  -> plan.batch_axes present in the mesh (pod+data)
+      - "fsdp"   -> plan.fsdp_axes if plan.fsdp (ZeRO-style weight shard)
+      - "model"  -> plan.model_axis
+      - "seq"    -> model axis if plan.seq_shard (sequence parallelism)
+      - None     -> replicate
+    The first candidate whose axis product divides the dim size wins.
+    """
+
+    def __init__(self, mesh: Mesh, plan: ShardingPlan):
+        self.mesh = mesh
+        self.plan = plan
+        present = set(mesh.axis_names)
+        self._batch = tuple(a for a in plan.batch_axes if a in present)
+        self._fsdp = (
+            tuple(a for a in plan.fsdp_axes if a in present) if plan.fsdp else ()
+        )
+        self._model = (plan.model_axis,) if plan.model_axis in present else ()
+        if plan.pod_in_model and "pod" in present:
+            self._model = ("pod",) + self._model
+            self._batch = tuple(a for a in self._batch if a != "pod")
+        self._seq = self._model if plan.seq_shard else ()
+
+    def _resolve(self, logical) -> tuple:
+        if logical is None:
+            return ()
+        out = []
+        for name in (logical if isinstance(logical, (tuple, list)) else (logical,)):
+            if name == "batch":
+                out.extend(self._batch)
+            elif name == "fsdp":
+                out.extend(self._fsdp)
+            elif name == "model":
+                out.extend(self._model)
+            elif name == "seq":
+                out.extend(self._seq)
+            else:  # raw mesh axis name
+                if name in self.mesh.axis_names:
+                    out.append(name)
+        return tuple(out)
+
+    def dim_spec(self, size: int, *candidates):
+        """First candidate whose mesh-axis product divides ``size``."""
+        for cand in candidates:
+            axes = self._resolve(cand)
+            if not axes:
+                continue
+            if size % axis_size(self.mesh, axes) == 0:
+                return axes if len(axes) > 1 else axes[0]
+        return None
+
+    def spec(self, shape, rules) -> P:
+        """``rules``: per-dim tuple of candidate lists (or a single logical
+        name, or None).  Shorter rules are right-padded with None."""
+        dims = []
+        used: set = set()
+        for i, size in enumerate(shape):
+            rule = rules[i] if i < len(rules) else None
+            if rule is None:
+                dims.append(None)
+                continue
+            cands = rule if isinstance(rule, list) else [rule]
+            picked = self.dim_spec(size, *cands)
+            # one mesh axis may appear once per spec
+            flat = (
+                tuple(picked)
+                if isinstance(picked, tuple)
+                else ((picked,) if picked else ())
+            )
+            if any(a in used for a in flat):
+                dims.append(None)
+                continue
+            used.update(flat)
+            dims.append(picked)
+        return P(*dims)
+
+    def named(self, shape, rules) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, rules))
+
+    def constrain(self, x, rules):
+        """with_sharding_constraint against this mesh (no-op off-mesh dims)."""
+        spec = self.spec(x.shape, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # convenience: common activation layouts ------------------------------
+
+    def act_btd(self, x):
+        """(batch, seq, d_model): batch over data axes, optionally seq-shard."""
+        return self.constrain(x, ["batch", "seq", None])
+
+    def act_bt(self, x):
+        return self.constrain(x, ["batch", "seq"])
+
+    def logits(self, x):
+        """(batch, seq, vocab): vocab over model axis (vocab-parallel head)."""
+        return self.constrain(x, ["batch", None, "model"])
+
+
+def tree_spec(sharder: Sharder, params, rules_tree) -> dict:
+    """Map a rules pytree over a params pytree -> PartitionSpec pytree."""
+    return jax.tree_util.tree_map(
+        lambda p, r: sharder.spec(p.shape, r),
+        params,
+        rules_tree,
+        is_leaf=lambda x: isinstance(x, (list, tuple)) and not isinstance(x[0], (list, tuple, type(None), str)),
+    )

@@ -1,0 +1,223 @@
+"""Whisper-style encoder-decoder (audio backbone).
+
+The conv/log-mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed encoder frame embeddings (B, frames, d_model).  The
+transformer backbone is faithful: LayerNorm blocks, non-causal encoder
+self-attention with sinusoidal positions, decoder with causal self-attention
++ cross-attention + GELU MLPs.  Deviation (DESIGN.md §5): decoder positions
+use RoPE instead of a learned table so the 32k/500k stress cells need no
+position-table resizing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _spec(cfg: ModelConfig) -> L.AttnParamsSpec:
+    return L.AttnParamsSpec(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                            cfg.resolved_head_dim, cfg.qkv_bias)
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = np.log(10000) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(t), np.cos(t)], axis=1), jnp.float32
+    )
+
+
+def enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln_attn": L.layernorm_init(cfg.d_model, dt),
+        "attn": L.attention_init(k1, _spec(cfg), dt),
+        "ln_mlp": L.layernorm_init(cfg.d_model, dt),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln_self": L.layernorm_init(cfg.d_model, dt),
+        "self_attn": L.attention_init(k1, _spec(cfg), dt),
+        "ln_cross": L.layernorm_init(cfg.d_model, dt),
+        "cross_attn": L.attention_init(k2, _spec(cfg), dt),
+        "ln_mlp": L.layernorm_init(cfg.d_model, dt),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def whisper_init(key, cfg: ModelConfig):
+    enc_n = cfg.encdec.encoder_layers
+    keys = jax.random.split(key, enc_n + cfg.num_layers + 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    enc = [enc_layer_init(keys[i], cfg) for i in range(enc_n)]
+    dec = [dec_layer_init(keys[enc_n + i], cfg) for i in range(cfg.num_layers)]
+    stack = lambda bs: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *bs)
+    return {
+        "embed": L.embedding_init(keys[-1], cfg.vocab_size, cfg.d_model, dt),
+        "enc_layers": stack(enc),
+        "enc_norm": L.layernorm_init(cfg.d_model, dt),
+        "dec_layers": stack(dec),
+        "dec_norm": L.layernorm_init(cfg.d_model, dt),
+        "head": {"w": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size), dt)
+                 * (1.0 / cfg.d_model**0.5)},
+    }
+
+
+def encode(p, frames, cfg: ModelConfig, *, sharder=None):
+    dt = jnp.dtype(cfg.dtype)
+    F = frames.shape[1]
+    x = frames.astype(dt) + sinusoids(F, cfg.d_model).astype(dt)[None]
+    if sharder is not None:
+        x = sharder.act_btd(x)
+    positions = jnp.arange(F, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = L.layernorm(lp["ln_attn"], x, cfg.norm_eps)
+        a, _ = L.attention_apply(lp["attn"], h, spec=_spec(cfg), dtype=dt,
+                                 rope_theta=None, positions=positions,
+                                 causal=False, sharder=sharder)
+        x = x + a
+        h = L.layernorm(lp["ln_mlp"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h, "gelu", dt, sharder=sharder)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, p["enc_layers"])
+    return L.layernorm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(lp, x, enc_out, cfg, *, positions, dt, sharder,
+               self_cache=None, cache_pos=None, cross_cache=None,
+               return_cache=False):
+    h = L.layernorm(lp["ln_self"], x, cfg.norm_eps)
+    a, new_self = L.attention_apply(
+        lp["self_attn"], h, spec=_spec(cfg), dtype=dt,
+        rope_theta=cfg.rope_theta, positions=positions, causal=True,
+        cache=self_cache, cache_pos=cache_pos, sharder=sharder,
+        attn_chunk=cfg.attn_chunk,
+    )
+    x = x + a
+    h = L.layernorm(lp["ln_cross"], x, cfg.norm_eps)
+    if cross_cache is not None:
+        a, new_cross = L.attention_apply(
+            lp["cross_attn"], h, spec=_spec(cfg), dtype=dt, rope_theta=None,
+            positions=positions, cache=cross_cache, static_cache=True,
+            sharder=sharder,
+        )
+    else:
+        enc_positions = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        a, new_cross = L.attention_apply(
+            lp["cross_attn"], h, spec=_spec(cfg), dtype=dt, rope_theta=None,
+            positions=enc_positions, causal=False, x_kv=enc_out,
+            sharder=sharder,
+        )
+    x = x + a
+    h = L.layernorm(lp["ln_mlp"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(lp["mlp"], h, "gelu", dt, sharder=sharder)
+    caches = (new_self, new_cross) if return_cache else None
+    return x, caches
+
+
+def whisper_forward(p, batch, cfg: ModelConfig, *, sharder=None,
+                    return_cache=False):
+    """batch: {frames (B,F,d), tokens (B,S)}; returns (logits, cache, 0)."""
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(p, batch["frames"], cfg, sharder=sharder)
+    x = L.embed(p["embed"], batch["tokens"], dt)
+    if sharder is not None:
+        x = sharder.act_btd(x)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        x, caches = _dec_layer(lp, x, enc_out, cfg, positions=positions,
+                               dt=dt, sharder=sharder,
+                               return_cache=return_cache)
+        return x, caches
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, p["dec_layers"])
+    x = L.layernorm(p["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(p["head"], x, dt)
+    if sharder is not None:
+        logits = sharder.logits(logits)
+    return logits, caches, jnp.zeros((), jnp.float32)
+
+
+def whisper_init_cache(cfg: ModelConfig, batch: int, max_len: int, **_):
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    Lr = cfg.num_layers
+    F = cfg.encdec.encoder_frames
+    return {
+        "self": {"k": jnp.zeros((Lr, batch, max_len, hk, hd), dt),
+                 "v": jnp.zeros((Lr, batch, max_len, hk, hd), dt)},
+        "cross": {"k": jnp.zeros((Lr, batch, F, hk, hd), dt),
+                  "v": jnp.zeros((Lr, batch, F, hk, hd), dt)},
+    }
+
+
+def whisper_decode_step(p, cache, batch, cfg: ModelConfig, *, sharder=None):
+    """batch: {tokens (B,1), pos scalar}.  Cross K/V precomputed (prefill)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed(p["embed"], batch["tokens"], dt)
+    pos = batch["pos"]
+    if pos.ndim == 0:
+        positions = pos[None].astype(jnp.int32)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
+
+    def body(x, layer_in):
+        lp, self_c, cross_c = layer_in
+        x, (new_self, _) = _dec_layer(
+            lp, x, None, cfg, positions=positions, dt=dt, sharder=sharder,
+            self_cache=self_c, cache_pos=pos, cross_cache=cross_c,
+            return_cache=True,
+        )
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (p["dec_layers"], cache["self"], cache["cross"])
+    )
+    x = L.layernorm(p["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(p["head"], x, dt)
+    if sharder is not None:
+        logits = sharder.logits(logits)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def whisper_param_rules(cfg: ModelConfig):
+    ln = {"scale": [None, None], "bias": [None, None]}
+    attn = {
+        "wq": [None, ["fsdp"], "model", None],
+        "wk": [None, ["fsdp"], "model", None],
+        "wv": [None, ["fsdp"], "model", None],
+        "wo": [None, "model", None, ["fsdp"]],
+    }
+    mlp = {"w_up": [None, ["fsdp"], "model"], "w_down": [None, "model", ["fsdp"]]}
+    return {
+        "embed": {"table": [["fsdp"], "model"]},
+        "enc_layers": {"ln_attn": ln, "attn": attn, "ln_mlp": ln, "mlp": mlp},
+        "enc_norm": {"scale": [None], "bias": [None]},
+        "dec_layers": {
+            "ln_self": ln, "self_attn": attn,
+            "ln_cross": ln, "cross_attn": attn,
+            "ln_mlp": ln, "mlp": mlp,
+        },
+        "dec_norm": {"scale": [None], "bias": [None]},
+        "head": {"w": [["fsdp"], "model"]},
+    }

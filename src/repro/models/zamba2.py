@@ -1,0 +1,151 @@
+"""Zamba2: Mamba2 backbone with a weight-shared attention block.
+
+``cfg.num_layers`` Mamba2 blocks; after every ``cfg.ssm.attn_every`` of
+them, ONE shared transformer block (full attention + SwiGLU MLP, weights
+reused across all applications) refines the stream — Zamba2's core trick
+(a fraction of attention's parameters at most of its quality).  For the
+``long_500k`` cell the shared block runs sliding-window attention
+(``cfg.ssm.attn_window``) over a ring-buffer cache; this windowing is a
+documented deviation (DESIGN.md §5) that keeps the hybrid sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import (
+    mamba2_block_apply,
+    mamba2_block_init,
+    mamba2_param_rules,
+    mamba2_state_init,
+)
+from repro.models.transformer import layer_apply, layer_init, lm_param_rules
+
+
+def _group_counts(cfg: ModelConfig):
+    per = cfg.ssm.attn_every
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per
+
+
+def zamba2_init(key, cfg: ModelConfig):
+    G, per = _group_counts(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    blocks = [mamba2_block_init(keys[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    # reshape leading L into (G, per)
+    stacked = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, per) + a.shape[1:]), stacked
+    )
+    return {
+        "embed": L.embedding_init(keys[-1], cfg.vocab_size, cfg.d_model, dt),
+        "mamba": stacked,
+        "shared_attn": layer_init(keys[-2], cfg),  # ONE copy, applied G times
+        "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+        "head": {"w": jax.random.normal(keys[-3], (cfg.d_model, cfg.vocab_size), dt)
+                 * (1.0 / cfg.d_model**0.5)},
+    }
+
+
+def zamba2_forward(p, batch, cfg: ModelConfig, *, sharder=None,
+                   return_cache=False, window=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed(p["embed"], batch["tokens"], dt)
+    if sharder is not None:
+        x = sharder.act_btd(x)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    win = window if window is not None else cfg.ssm.attn_window
+
+    def m_body(x, layer_p):
+        x, st = mamba2_block_apply(layer_p, x, cfg, sharder=sharder)
+        return x, st if return_cache else None
+
+    mb = jax.checkpoint(m_body) if cfg.remat != "none" else m_body
+
+    def group_body(x, group_p):
+        x, mst = jax.lax.scan(mb, x, group_p)
+        x, kv, _ = layer_apply(p["shared_attn"], x, cfg, positions=positions,
+                               sharder=sharder, window=win)
+        return x, (mst, kv if return_cache else None)
+
+    x, states = jax.lax.scan(group_body, x, p["mamba"])
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(p["head"], x, dt)
+    if sharder is not None:
+        logits = sharder.logits(logits)
+    return logits, (states if return_cache else None), jnp.zeros((), jnp.float32)
+
+
+def zamba2_init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                      window=None):
+    G, per = _group_counts(cfg)
+    win = window if window is not None else cfg.ssm.attn_window
+    S = min(max_len, win) if win is not None else max_len
+    hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    mst = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (G, per) + a.shape).copy(),
+        mamba2_state_init(cfg, batch),
+    )
+    kv = {
+        "k": jnp.zeros((G, batch, S, hk, hd), dt),
+        "v": jnp.zeros((G, batch, S, hk, hd), dt),
+    }
+    return {"mamba": mst, "attn_kv": kv}
+
+
+def zamba2_decode_step(p, cache, batch, cfg: ModelConfig, *, sharder=None,
+                       window=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = L.embed(p["embed"], batch["tokens"], dt)
+    pos = batch["pos"]
+    if pos.ndim == 0:
+        positions = pos[None].astype(jnp.int32)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
+    win = window if window is not None else cfg.ssm.attn_window
+
+    def m_body(x, layer_in):
+        layer_p, st = layer_in
+        x, st = mamba2_block_apply(layer_p, x, cfg, state=st, decode=True,
+                                   sharder=sharder)
+        return x, st
+
+    def group_body(x, group_in):
+        mp, mst, kv = group_in
+        x, mst = jax.lax.scan(m_body, x, (mp, mst))
+        x, kv_new, _ = layer_apply(p["shared_attn"], x, cfg,
+                                   positions=positions, sharder=sharder,
+                                   cache=kv, cache_pos=pos, window=win)
+        return x, (mst, kv_new)
+
+    x, (mst, kv) = jax.lax.scan(
+        group_body, x, (p["mamba"], cache["mamba"], cache["attn_kv"])
+    )
+    x = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(p["head"], x, dt)
+    if sharder is not None:
+        logits = sharder.logits(logits)
+    return logits, {"mamba": mst, "attn_kv": kv}
+
+
+def zamba2_param_rules(cfg: ModelConfig):
+    shared = lm_param_rules(cfg)["layers"]
+    # shared_attn is unstacked: drop the leading layer dim of each rule
+    def drop_lead(r):
+        return r[1:] if isinstance(r, list) and len(r) and r[0] is None else r
+    shared = jax.tree_util.tree_map(
+        drop_lead, shared, is_leaf=lambda x: isinstance(x, list)
+    )
+    return {
+        "embed": {"table": [["fsdp"], "model"]},
+        "mamba": mamba2_param_rules(prefix_dims=2),
+        "shared_attn": shared,
+        "final_norm": {"scale": [None]},
+        "head": {"w": [["fsdp"], "model"]},
+    }

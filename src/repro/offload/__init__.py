@@ -1,0 +1,11 @@
+"""HAM-Offload: the offloading framework built on the HAM core (paper §2)."""
+
+from repro.offload.api import OffloadDomain, deref, offloaded
+from repro.offload.buffer import BufferPtr, BufferRegistry
+from repro.offload.runtime import NodeRuntime, current_node, register_internal_handlers
+
+__all__ = [
+    "OffloadDomain", "deref", "offloaded",
+    "BufferPtr", "BufferRegistry",
+    "NodeRuntime", "current_node", "register_internal_handlers",
+]

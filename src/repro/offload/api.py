@@ -1,0 +1,191 @@
+"""HAM-Offload public API (paper §2, Fig. 2).
+
+``OffloadDomain`` owns one fabric's worth of nodes and exposes the paper's
+surface::
+
+    dom = OffloadDomain.local(num_nodes=2)     # threads-as-nodes
+    ptr = dom.allocate(target, (1024,), "float64")
+    dom.put(host_array, ptr)
+    fut = dom.async_(target, f2f(inner_prod, a_ptr, b_ptr, n))
+    c = fut.get()
+    dom.shutdown()
+
+Arbitrary offload patterns are supported: host->worker, worker->host
+(*reverse offload*, via :func:`current_node` + ``send_async`` from inside a
+handler), worker->worker, and one-hop relayed sends (*offload over fabric*).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.comm.base import Fabric
+from repro.comm.local import LocalFabric
+from repro.core.closure import Function, f2f
+from repro.core.errors import OffloadError
+from repro.core.executor import DirectPolicy
+from repro.core.future import Future
+from repro.core.message import encode_frame, FLAG_DYNAMIC
+from repro.core.registry import default_registry
+from repro.offload.buffer import BufferPtr
+from repro.offload.runtime import NodeRuntime, current_node
+
+
+def deref(ptr: BufferPtr) -> np.ndarray:
+    """Dereference a buffer pointer on its owning node (handler-side)."""
+    return current_node().buffers.deref(ptr)
+
+
+class OffloadDomain:
+    """Host-side view of a set of offload targets."""
+
+    def __init__(
+        self,
+        fabric: Fabric,
+        *,
+        host_node: int = 0,
+        registry=None,
+        inline_host: bool = False,
+        policy_factory=DirectPolicy,
+    ):
+        self.fabric = fabric
+        self.host_node = host_node
+        self.registry = registry or default_registry()
+        table = self.registry.table  # must be init()ed by caller (paper §5.2)
+        self.host = NodeRuntime(
+            host_node, fabric.endpoint(host_node), table, inline=inline_host
+        )
+        if not inline_host:
+            self.host.start()
+        self._local_workers: list[NodeRuntime] = []
+        self._policy_factory = policy_factory
+        self._table = table
+
+    # -- construction helpers -------------------------------------------------
+
+    @staticmethod
+    def local(num_nodes: int, *, registry=None, inline_host: bool = False,
+              policy_factory=DirectPolicy) -> "OffloadDomain":
+        """All nodes in-process (threads) — intra-node offload."""
+        fabric = LocalFabric(num_nodes)
+        dom = OffloadDomain(
+            fabric,
+            registry=registry,
+            inline_host=inline_host,
+            policy_factory=policy_factory,
+        )
+        for node_id in range(num_nodes):
+            if node_id != dom.host_node:
+                worker = NodeRuntime(
+                    node_id,
+                    fabric.endpoint(node_id),
+                    dom._table,
+                    policy=policy_factory(),
+                )
+                worker.start()
+                dom._local_workers.append(worker)
+        return dom
+
+    @property
+    def num_nodes(self) -> int:
+        return self.fabric.num_nodes
+
+    def targets(self) -> list[int]:
+        return [n for n in range(self.num_nodes) if n != self.host_node]
+
+    # -- RPC surface ------------------------------------------------------------
+
+    def async_(self, node: int, function: Function) -> Future:
+        """``offload::async`` — returns a future for the remote result."""
+        return self.host.send_async(node, function)
+
+    def sync(self, node: int, function: Function, timeout: float | None = 30.0):
+        return self.host.send_sync(node, function, timeout)
+
+    def oneway(self, node: int, function: Function) -> None:
+        self.host.send_oneway(node, function)
+
+    def relay(self, via: int, dst: int, function: Function) -> Future:
+        """Offload over fabric: request travels host -> via -> dst; the reply
+        returns directly dst -> host (inner header keeps the origin)."""
+        msg_id, fut = self.host.futures.create()
+        key = self._table.key_of(function.record.stable_name)
+        inner = encode_frame(
+            key,
+            function.pack_payload(),
+            src_node=self.host_node,
+            msg_id=msg_id,
+            flags=0 if function.is_static else FLAG_DYNAMIC,
+        )
+        self.host.send_oneway(via, f2f("_ham/forward", dst, bytes(inner),
+                                       registry=self.registry))
+        return fut
+
+    # -- data plane (paper Fig. 2: allocate/put/get) -----------------------------
+
+    def allocate(self, node: int, shape, dtype) -> BufferPtr:
+        tag, n, handle = self.sync(
+            node,
+            f2f("_ham/alloc", list(int(d) for d in shape), str(np.dtype(dtype)),
+                registry=self.registry),
+        )
+        assert tag == "ptr"
+        return BufferPtr(n, handle)
+
+    def put(self, src: np.ndarray, ptr: BufferPtr, *, offset: int = 0) -> None:
+        self.sync(
+            ptr.node,
+            f2f("_ham/put", ptr.node, ptr.handle, int(offset),
+                np.ascontiguousarray(src), registry=self.registry),
+        )
+
+    def get(self, ptr: BufferPtr, *, offset: int = 0, count: int = -1) -> np.ndarray:
+        return self.sync(
+            ptr.node,
+            f2f("_ham/get", ptr.node, ptr.handle, int(offset), int(count),
+                registry=self.registry),
+        )
+
+    def free(self, ptr: BufferPtr) -> None:
+        self.sync(ptr.node, f2f("_ham/free", ptr.node, ptr.handle,
+                                registry=self.registry))
+
+    # -- control ------------------------------------------------------------------
+
+    def ping(self, node: int, token: int = 0, timeout: float = 10.0):
+        return self.sync(node, f2f("_ham/ping", int(token),
+                                   registry=self.registry), timeout)
+
+    def barrier(self, timeout: float = 30.0) -> None:
+        futs = [
+            self.async_(n, f2f("_ham/ping", 0, registry=self.registry))
+            for n in self.targets()
+        ]
+        for f in futs:
+            if self.host.inline:
+                self.host._inline_wait(f, timeout)
+            else:
+                f.get(timeout)
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        for n in self.targets():
+            try:
+                self.oneway(n, f2f("_ham/terminate", registry=self.registry))
+            except Exception:  # noqa: BLE001 — best-effort on teardown
+                pass
+        for w in self._local_workers:
+            w.stop(timeout)
+        self.host.stop(timeout)
+        self.fabric.close()
+
+
+def offloaded(*example_args, registry=None, name=None):
+    """Decorator: register a function as an offload target with a static
+    spec derived from example arguments (the ``Pars...``)."""
+
+    def wrap(fn):
+        reg = registry or default_registry()
+        reg.handler(fn, args=example_args, name=name)
+        return fn
+
+    return wrap

@@ -1,0 +1,89 @@
+"""PGAS-style smart pointers (paper §2: ``buffer_ptr<T>``; §6: "smart
+pointers that combine an address space or process identifier with a local
+pointer").
+
+A :class:`BufferPtr` is (node, handle): 16 bytes on the wire, registered as a
+fixed-size ``migratable`` so it can ride the *static* fast path inside
+offloaded closures — exactly like the paper's bitwise-copyable
+``buffer_ptr`` arguments in Fig. 2.
+
+The per-node :class:`BufferRegistry` maps handles to live numpy arrays; only
+the owning node may dereference (pointers are "in general only valid within
+their original process's address space", §4.1 — here that rule is enforced).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import threading
+
+import numpy as np
+
+from repro.core.errors import OffloadError
+from repro.core.migratable import register_migratable
+
+_WIRE = struct.Struct("<qq")
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferPtr:
+    node: int
+    handle: int
+
+    def encode(self) -> bytes:
+        return _WIRE.pack(self.node, self.handle)
+
+    @staticmethod
+    def decode(raw: bytes) -> "BufferPtr":
+        node, handle = _WIRE.unpack(raw)
+        return BufferPtr(node, handle)
+
+
+register_migratable(
+    BufferPtr,
+    encode=lambda p: p.encode(),
+    decode=BufferPtr.decode,
+    type_name="ham:buffer_ptr",
+    nbytes_fixed=_WIRE.size,
+)
+
+
+class BufferRegistry:
+    """Handle -> array map of one node (the target side of allocate/put/get)."""
+
+    def __init__(self, node_id: int):
+        self.node_id = node_id
+        self._lock = threading.Lock()
+        self._buffers: dict[int, np.ndarray] = {}
+        self._next = 1
+
+    def allocate(self, shape, dtype) -> BufferPtr:
+        arr = np.zeros(tuple(int(d) for d in shape), dtype=np.dtype(str(dtype)))
+        with self._lock:
+            handle = self._next
+            self._next += 1
+            self._buffers[handle] = arr
+        return BufferPtr(self.node_id, handle)
+
+    def deref(self, ptr: BufferPtr) -> np.ndarray:
+        if ptr.node != self.node_id:
+            raise OffloadError(
+                f"dereferencing remote pointer (node {ptr.node}) on node "
+                f"{self.node_id}: pointers are only valid in their own "
+                "address space (paper §4.1)"
+            )
+        with self._lock:
+            arr = self._buffers.get(ptr.handle)
+        if arr is None:
+            raise OffloadError(f"dangling buffer handle {ptr.handle}")
+        return arr
+
+    def free(self, ptr: BufferPtr) -> None:
+        with self._lock:
+            if self._buffers.pop(ptr.handle, None) is None:
+                raise OffloadError(f"double free of handle {ptr.handle}")
+
+    def live_count(self) -> int:
+        with self._lock:
+            return len(self._buffers)

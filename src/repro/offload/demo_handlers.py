@@ -1,0 +1,50 @@
+"""Demo/benchmark handlers, importable by worker processes.
+
+Serves as the "same source compiled into every binary" of the paper: host
+and workers (forked children or fresh interpreters) import this module, so
+all processes derive identical handler keys.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.registry import default_registry
+from repro.offload.api import deref
+
+_reg = default_registry()
+
+
+@_reg.handler(name="demo/empty")
+def empty() -> None:
+    """The paper's Fig. 3 microbenchmark payload: an empty function."""
+    return None
+
+
+@_reg.handler(name="demo/add")
+def add(a, b):
+    return a + b
+
+
+@_reg.handler(name="demo/inner_prod")
+def inner_prod(a_ptr, b_ptr, n):
+    a = deref(a_ptr)
+    b = deref(b_ptr)
+    return float(a[:n] @ b[:n])
+
+
+@_reg.handler(name="demo/saxpy")
+def saxpy(alpha, x_ptr, y_ptr):
+    y = deref(y_ptr)
+    y += alpha * deref(x_ptr)
+    return None
+
+
+@_reg.handler(name="demo/matmul")
+def matmul(a, b):
+    return np.asarray(a) @ np.asarray(b)
+
+
+# static-spec variant of the empty offload: zero-byte payload, the true
+# lower bound for dispatch cost (key + header only)
+_reg.register(empty, arg_specs=(), name="demo/empty_static")

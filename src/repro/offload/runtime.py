@@ -1,0 +1,325 @@
+"""Per-node active-message runtime: the "minimal runtime" of HAM-Offload.
+
+One :class:`NodeRuntime` per process/thread-node:
+
+* pulls frames from its comm endpoint,
+* replies are routed to the sender's :class:`FutureTable` (the
+  ``offload_result_msg`` path of paper Fig. 5),
+* requests are executed through the node's :class:`ExecutionPolicy`; if the
+  frame carries a ``msg_id`` the result is packed and sent back as a REPLY
+  frame (errors as REPLY|ERROR with the remote traceback).
+
+Internal handlers (registered at import, i.e. "static initialisation", with
+explicit names so they sort deterministically — cf. the paper's
+``terminate_functor`` appearing in its Fig. 7 dump):
+
+* ``_ham/alloc``, ``_ham/free``, ``_ham/put``, ``_ham/get`` — buffer plane
+* ``_ham/ping`` — liveness/barrier
+* ``_ham/forward`` — one-hop relay (offload-over-fabric routing)
+* ``_ham/terminate`` — stops the event loop
+
+Handlers executing on a node can access "their" node via
+:func:`current_node` (contextvar set around execution) — this is how
+offloaded user code dereferences :class:`BufferPtr` arguments and how
+*reverse offload* (worker calling back into the host) gets a sender.
+"""
+
+from __future__ import annotations
+
+import contextvars
+import threading
+import traceback
+from typing import Any
+
+from repro.comm.base import CommBackend
+from repro.core import migratable as mig
+from repro.core.closure import Function
+from repro.core.errors import NodeDownError, OffloadError
+from repro.core.future import Future, FutureTable
+from repro.core.executor import DirectPolicy, ExecutionPolicy
+from repro.core.message import (
+    FLAG_DYNAMIC,
+    FLAG_ERROR,
+    FLAG_REPLY,
+    HEADER_NBYTES,
+    HEADER_STRUCT,
+    MAGIC,
+    VERSION,
+    decode_fast,
+    encode_frame,
+)
+from repro.core.migratable import _pack_into, static_payload_nbytes
+from repro.core.registry import HandlerTable, default_registry
+from repro.offload.buffer import BufferPtr, BufferRegistry
+
+_current_node: contextvars.ContextVar["NodeRuntime | None"] = contextvars.ContextVar(
+    "ham_current_node", default=None
+)
+
+
+def current_node() -> "NodeRuntime":
+    node = _current_node.get()
+    if node is None:
+        raise OffloadError("no HAM node runtime active in this context")
+    return node
+
+
+# --------------------------------------------------------------------------
+# internal handlers (dynamic payloads; explicit stable names)
+# --------------------------------------------------------------------------
+
+
+def _h_alloc(shape, dtype):
+    node = current_node()
+    ptr = node.buffers.allocate(shape, dtype)
+    return ("ptr", ptr.node, ptr.handle)
+
+
+def _h_free(node_id, handle):
+    current_node().buffers.free(BufferPtr(node_id, handle))
+    return None
+
+
+def _h_put(node_id, handle, offset, array):
+    buf = current_node().buffers.deref(BufferPtr(node_id, handle))
+    flat = buf.reshape(-1)
+    n = array.size
+    flat[offset : offset + n] = array.reshape(-1).astype(buf.dtype, copy=False)
+    return None
+
+
+def _h_get(node_id, handle, offset, count):
+    buf = current_node().buffers.deref(BufferPtr(node_id, handle))
+    flat = buf.reshape(-1)
+    if count < 0:
+        return flat[offset:].copy() if offset else buf.copy()
+    return flat[offset : offset + count].copy()
+
+
+def _h_ping(token):
+    return token
+
+
+def _h_forward(dst, frame_bytes):
+    """Relay an embedded frame one hop (offload over fabric).  The final
+    target replies straight to the origin recorded in the inner header."""
+    current_node().endpoint.send(dst, frame_bytes)
+    return None
+
+
+def _h_terminate():
+    current_node().request_stop()
+    return None
+
+
+def register_internal_handlers(registry=None) -> None:
+    reg = registry or default_registry()
+    for name, fn in (
+        ("_ham/alloc", _h_alloc),
+        ("_ham/free", _h_free),
+        ("_ham/put", _h_put),
+        ("_ham/get", _h_get),
+        ("_ham/ping", _h_ping),
+        ("_ham/forward", _h_forward),
+        ("_ham/terminate", _h_terminate),
+    ):
+        reg.register(fn, name=name)
+
+
+# module import = static initialisation (paper §4.3)
+register_internal_handlers()
+
+
+# --------------------------------------------------------------------------
+# the runtime
+# --------------------------------------------------------------------------
+
+
+class NodeRuntime:
+    def __init__(
+        self,
+        node_id: int,
+        endpoint: CommBackend,
+        table: HandlerTable,
+        policy: ExecutionPolicy | None = None,
+        *,
+        inline: bool = False,
+    ):
+        self.node_id = node_id
+        self.endpoint = endpoint
+        self.table = table
+        self.policy = policy or DirectPolicy()
+        self.buffers = BufferRegistry(node_id)
+        self.futures = FutureTable()
+        self.inline = inline
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.stats = {"handled": 0, "replies": 0, "errors": 0, "sent": 0}
+
+    # -- sending ------------------------------------------------------------
+
+    def send_async(self, dst: int, function: Function) -> Future:
+        msg_id, fut = self.futures.create()
+        self._send_request(dst, function, msg_id)
+        return fut
+
+    def send_oneway(self, dst: int, function: Function) -> None:
+        """Fire-and-forget (msg_id 0 => no reply)."""
+        self._send_request(dst, function, 0)
+
+    def _send_request(self, dst: int, function: Function, msg_id: int) -> None:
+        # zero-extra-copy frame assembly: payload is packed straight into
+        # the frame buffer after the 32-byte header (the bitwise fast path)
+        record = function.record
+        key = self.table.key_of(record.stable_name)
+        if record.is_static:
+            n = static_payload_nbytes(record.arg_specs)
+            frame = bytearray(HEADER_NBYTES + n)
+            mig.pack_static(function.args, record.arg_specs,
+                            out=memoryview(frame)[HEADER_NBYTES:])
+            flags = 0
+        else:
+            frame = bytearray(HEADER_NBYTES)
+            _pack_into(frame, list(function.args))
+            n = len(frame) - HEADER_NBYTES
+            flags = FLAG_DYNAMIC
+        HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags, key,
+                                self.node_id, msg_id, n)
+        self.endpoint.send(dst, frame)
+        self.stats["sent"] += 1
+
+    def send_sync(self, dst: int, function: Function, timeout: float | None = 30.0):
+        if self.inline:
+            return self._send_sync_inline(dst, function, timeout)
+        fut = self.send_async(dst, function)
+        return fut.get(timeout)
+
+    def _send_sync_inline(self, dst: int, function: Function,
+                          timeout: float | None):
+        """Futureless fast path (the Fig. 3 configuration): the caller
+        thread polls its endpoint for the reply — no Future allocation, no
+        Event wakeup, no table lock.  Interleaved requests still execute."""
+        _time = __import__("time")
+        self._sync_seq = getattr(self, "_sync_seq", 0) + 1
+        msg_id = 0x8000_0000_0000_0000 | self._sync_seq
+        self._send_request(dst, function, msg_id)
+        recv = self.endpoint.recv
+        deadline = None if timeout is None else _time.monotonic() + timeout
+        while True:
+            frame = recv(timeout=0.1)
+            if frame is None:
+                if deadline is not None and _time.monotonic() > deadline:
+                    raise TimeoutError("inline sync offload timed out")
+                continue
+            key, flags, src, mid, payload = decode_fast(frame)
+            if flags & FLAG_REPLY and mid == msg_id:
+                if flags & FLAG_ERROR:
+                    err = mig.unpack_dynamic(payload)
+                    from repro.core.errors import RemoteExecutionError
+
+                    raise RemoteExecutionError(err["msg"], err.get("tb", ""))
+                return mig.unpack_dynamic(payload)
+            self._handle_frame(frame)
+
+    def _inline_wait(self, fut: Future, timeout: float | None):
+        """Caller-thread polling: the lowest-latency mode (no wakeup hop).
+        Interleaved inbound requests are still served, so reverse offload
+        works even in inline mode."""
+        import time
+
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not fut.done():
+            frame = self.endpoint.recv(timeout=0.1)
+            if frame is not None:
+                self._handle_frame(frame)
+            elif deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("inline sync offload timed out")
+        return fut.get(0)
+
+    def wait(self, fut: Future, timeout: float | None = 30.0):
+        """Cooperatively wait on a future *from handler context*.
+
+        With the Direct execution policy the handler runs on the event-loop
+        thread; plain ``fut.get()`` there would deadlock (the loop cannot pump
+        the reply).  ``wait`` keeps servicing inbound frames while blocked —
+        the cooperative-runtime pattern the paper's execution policies enable.
+        With a thread-pool policy, plain ``fut.get()`` is also fine.
+        """
+        return self._inline_wait(fut, timeout)
+
+    # -- receiving ------------------------------------------------------------
+
+    def _handle_frame(self, frame: bytes) -> None:
+        # hot path: the paper's metric is exactly this function's cost
+        key, flags, src, msg_id, payload = decode_fast(frame)
+        if flags & FLAG_REPLY:
+            self.stats["replies"] += 1
+            if flags & FLAG_ERROR:
+                err = mig.unpack_dynamic(payload)
+                self.futures.reject(msg_id, err["msg"], err.get("tb", ""))
+            else:
+                self.futures.resolve(msg_id, mig.unpack_dynamic(payload))
+            return
+        record = self.table.handler_at(key)
+        if type(self.policy) is DirectPolicy:  # skip the closure on the hot path
+            self._execute(record, key, src, msg_id, payload)
+        else:
+            self.policy.submit(lambda: self._execute(record, key, src, msg_id,
+                                                     payload))
+
+    def _execute(self, record, key, src, msg_id, payload) -> None:
+        token = _current_node.set(self)  # policy may run on a pool thread
+        try:
+            self.stats["handled"] += 1
+            try:
+                args = Function.unpack_args(record, payload)
+                result = record.fn(*args)
+            except Exception as e:  # noqa: BLE001 — remote errors must travel
+                self.stats["errors"] += 1
+                if msg_id:
+                    err_payload = mig.pack_dynamic(
+                        {"msg": f"{type(e).__name__}: {e}", "tb": traceback.format_exc()}
+                    )
+                    self.endpoint.send(
+                        src,
+                        encode_frame(key, err_payload, src_node=self.node_id,
+                                     msg_id=msg_id, flags=FLAG_REPLY | FLAG_ERROR),
+                    )
+                return
+            if msg_id:
+                frame = bytearray(HEADER_NBYTES)
+                _pack_into(frame, result)
+                HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, FLAG_REPLY,
+                                        key, self.node_id, msg_id,
+                                        len(frame) - HEADER_NBYTES)
+                self.endpoint.send(src, frame)
+        finally:
+            _current_node.reset(token)
+
+    # -- event loop -----------------------------------------------------------
+
+    def run(self, poll_timeout: float = 0.1) -> None:
+        while not self._stop.is_set():
+            frame = self.endpoint.recv(timeout=poll_timeout)
+            if frame is not None:
+                self._handle_frame(frame)
+
+    def start(self) -> "NodeRuntime":
+        if self.inline:
+            raise OffloadError("inline runtimes poll from the caller thread")
+        self._thread = threading.Thread(
+            target=self.run, name=f"ham-node-{self.node_id}", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def request_stop(self) -> None:
+        self._stop.set()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self.request_stop()
+        if self._thread is not None:
+            self._thread.join(timeout)
+        n = self.futures.fail_all(NodeDownError(f"node {self.node_id} stopped"))
+        if n:
+            self.stats["errors"] += n

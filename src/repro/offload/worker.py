@@ -1,0 +1,99 @@
+"""Worker-process bootstrap: run one HAM node in its own process.
+
+Two launch modes:
+
+* :func:`spawn_shm_workers` — fork children attached to a
+  :class:`~repro.comm.shm.ShmFabric` (intra-node, SCIF/DMA analogue).
+* ``python -m repro.offload.worker '<json-spec>'`` — a *fresh interpreter*
+  (different process image => the "heterogeneous binaries" case) attaching
+  over TCP.  The spec names the modules that register user handlers; the
+  worker imports them (static initialisation), calls ``ham.init()``, checks
+  nothing about the peer — agreement is guaranteed by the deterministic key
+  map, and *verified* via the digest ping.
+
+Both modes end when the host sends ``_ham/terminate``.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+import multiprocessing
+import sys
+
+from repro.core.registry import default_registry
+
+
+def _worker_body(kind: str, args: dict, node_id: int, setup_modules: list[str]) -> None:
+    for mod in setup_modules:
+        importlib.import_module(mod)
+    table = default_registry().init()
+    if kind == "shm":
+        from repro.comm.shm import ShmEndpoint
+
+        endpoint = ShmEndpoint(args["prefix"], node_id, args["num_nodes"])
+    elif kind == "socket":
+        from repro.comm.socket import SocketEndpoint
+
+        endpoint = SocketEndpoint(
+            node_id, args["num_nodes"], args["base_port"], args.get("host", "127.0.0.1")
+        )
+    else:
+        raise ValueError(f"unknown fabric kind {kind!r}")
+
+    from repro.offload.runtime import NodeRuntime
+
+    runtime = NodeRuntime(node_id, endpoint, table)
+    runtime.run()
+    endpoint.close()
+
+
+def spawn_shm_workers(fabric, node_ids, setup_modules=()) -> list:
+    """Fork one child per worker node, attached to ``fabric`` (ShmFabric)."""
+    ctx = multiprocessing.get_context("fork")
+    procs = []
+    for node_id in node_ids:
+        p = ctx.Process(
+            target=_worker_body,
+            args=(
+                "shm",
+                {"prefix": fabric.prefix, "num_nodes": fabric.num_nodes},
+                node_id,
+                list(setup_modules),
+            ),
+            daemon=True,
+        )
+        p.start()
+        procs.append(p)
+    return procs
+
+
+def spawn_socket_worker_subprocess(
+    node_id: int, num_nodes: int, base_port: int, setup_modules=()
+):
+    """Launch a worker as a *fresh* interpreter over TCP (subprocess)."""
+    import os
+    import subprocess
+
+    spec = {
+        "kind": "socket",
+        "args": {"num_nodes": num_nodes, "base_port": base_port},
+        "node_id": node_id,
+        "setup_modules": list(setup_modules),
+    }
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.offload.worker", json.dumps(spec)], env=env
+    )
+
+
+def main(argv: list[str]) -> int:
+    spec = json.loads(argv[0])
+    _worker_body(spec["kind"], spec["args"], spec["node_id"], spec["setup_modules"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,87 @@
+"""AdamW with global-norm clipping, pytree-native (no optax dependency).
+
+``init``/``update`` are pure functions; the optimizer state mirrors the
+param tree (so the dry-run shards it with the same PartitionSpecs as the
+parameters — ZeRO falls out of FSDP rules for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    # distributed-optimisation knobs:
+    #   reduce_dtype: cast gradients before the DP all-reduce (bf16 halves
+    #   collective bytes); state_dtype: Adam moment storage (bf16 halves
+    #   optimizer HBM — required to fit the 340B/405B configs on v5e)
+    reduce_dtype: str | None = None
+    state_dtype: str = "float32"
+
+
+def init(params, *, state_dtype: str = "float32") -> dict:
+    sd = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sd)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def update(cfg: AdamWConfig, params, opt_state, grads):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, step)
+
+    sd = jnp.dtype(cfg.state_dtype)
+
+    def leaf(p, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * upd).astype(p.dtype),
+                m.astype(sd), v.astype(sd))
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_m = jax.tree_util.tree_leaves(opt_state["mu"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["nu"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    out = [leaf(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        {"mu": new_m, "nu": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

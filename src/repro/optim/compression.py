@@ -1,0 +1,118 @@
+"""Error-feedback gradient compression (int8) — a ``migratable``
+specialisation in the sense of the paper: a type that cannot be bitwise
+copied efficiently (fp32 gradients) gets a serialisation hook that quantises
+on encode and dequantises on decode, with the residual kept locally so the
+compression error is fed back into the next round (EF-SGD).
+
+Used two ways:
+* inside the training step, to halve/quarter the DP all-reduce bytes
+  (``compress_tree``/``decompress_tree`` around ``jax.lax.pmean``-equivalent
+  collectives — measured in §Perf as collective-term reduction);
+* as a HAM message payload (``CompressedTensor`` is registered migratable),
+  for the cross-pod asynchronous gradient-exchange example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.migratable import register_migratable
+
+
+# --------------------------------------------------------------------------
+# jax-side (in-graph) int8 quantisation with error feedback
+# --------------------------------------------------------------------------
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8.  Returns (q int8, scale f32)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residual):
+    """Error-feedback: quantise (g + residual), carry the new residual."""
+    def leaf(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return (q, s), x - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    pairs = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = tdef.unflatten([p[0] for p in pairs])
+    new_res = tdef.unflatten([p[1] for p in pairs])
+    return qtree, new_res
+
+
+def ef_decompress_tree(qtree):
+    return jax.tree_util.tree_map(
+        lambda qs: dequantize_int8(*qs),
+        qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+# --------------------------------------------------------------------------
+# wire-side: CompressedTensor as a migratable type
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompressedTensor:
+    """int8 payload + scale + original shape; 4x smaller than fp32 wire."""
+
+    q: np.ndarray       # int8
+    scale: float
+    shape: tuple
+
+    @staticmethod
+    def compress(x: np.ndarray) -> "CompressedTensor":
+        x = np.asarray(x, np.float32)
+        amax = float(np.max(np.abs(x))) + 1e-12
+        scale = amax / 127.0
+        q = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+        return CompressedTensor(q.reshape(-1), scale, tuple(x.shape))
+
+    def decompress(self) -> np.ndarray:
+        return (self.q.astype(np.float32) * self.scale).reshape(self.shape)
+
+    def encode(self) -> bytes:
+        hdr = struct.pack("<dB", self.scale, len(self.shape))
+        dims = struct.pack(f"<{len(self.shape)}q", *self.shape)
+        return hdr + dims + self.q.tobytes()
+
+    @staticmethod
+    def decode(raw: bytes) -> "CompressedTensor":
+        scale, ndim = struct.unpack_from("<dB", raw, 0)
+        off = 9
+        shape = struct.unpack_from(f"<{ndim}q", raw, off)
+        off += 8 * ndim
+        q = np.frombuffer(raw, np.int8, offset=off)
+        return CompressedTensor(q.copy(), scale, tuple(shape))
+
+
+register_migratable(
+    CompressedTensor,
+    encode=lambda t: t.encode(),
+    decode=CompressedTensor.decode,
+    type_name="ham:compressed_tensor",
+)

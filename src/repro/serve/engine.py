@@ -1,0 +1,197 @@
+"""Serving engine: continuous batching over a HAM device handler table.
+
+This is where the paper's mechanism lands on the accelerator (DESIGN.md §2).
+All per-step behaviours — greedy decode, temperature sampling, and a
+``noop`` padding step (straggler/bubble filler) — are **branches of one
+compiled ``lax.switch`` table** sharing a payload spec::
+
+    payload = {cache, tokens (B,1), pos (B,), rng, temp}
+
+Step *selection* is therefore an integer key fed as device data: no
+re-trace, no executable swap, no host round-trip per behaviour change —
+HAM's O(1) key dispatch, compiled.  Slots admit new requests by writing a
+prefilled prompt cache into the batch cache (continuous batching).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_table import DeviceHandlerTable
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0     # 0 => greedy
+    rid: int = -1
+
+
+def build_serve_table(model, params, *, sharder=None, window=None):
+    """Device handler table over decode-step behaviours."""
+    table = DeviceHandlerTable()
+
+    def _next_from_logits(logits, payload, sample: bool):
+        rng, sub = jax.random.split(payload["rng"])
+        greedy = jnp.argmax(logits[:, -1, :], axis=-1)
+        if sample:
+            temp = jnp.maximum(payload["temp"], 1e-4)
+            draw = jax.random.categorical(sub, logits[:, -1, :] / temp, axis=-1)
+            nxt = jnp.where(payload["temp"] > 0, draw, greedy)
+        else:
+            nxt = greedy
+        return nxt.astype(jnp.int32)[:, None], rng
+
+    def decode_greedy(payload):
+        logits, cache = model.decode_step(
+            params, payload["cache"],
+            {"tokens": payload["tokens"], "pos": payload["pos"]},
+            sharder=sharder,
+        )
+        nxt, rng = _next_from_logits(logits, payload, sample=False)
+        return {"cache": cache, "tokens": nxt, "pos": payload["pos"] + 1,
+                "rng": rng, "temp": payload["temp"]}
+
+    def decode_sample(payload):
+        logits, cache = model.decode_step(
+            params, payload["cache"],
+            {"tokens": payload["tokens"], "pos": payload["pos"]},
+            sharder=sharder,
+        )
+        nxt, rng = _next_from_logits(payload=payload, logits=logits, sample=True)
+        return {"cache": cache, "tokens": nxt, "pos": payload["pos"] + 1,
+                "rng": rng, "temp": payload["temp"]}
+
+    def noop(payload):
+        # bubble/straggler filler: burns a step slot without touching state
+        return dict(payload)
+
+    table.register("serve/decode_greedy", decode_greedy)
+    table.register("serve/decode_sample", decode_sample)
+    table.register("serve/noop", noop)
+    table.seal()
+    return table
+
+
+class ServingEngine:
+    """Continuous-batching loop on top of the compiled dispatch table."""
+
+    def __init__(self, model, params, *, num_slots: int, max_len: int,
+                 sharder=None, seed: int = 0, donate: bool = True):
+        self.model = model
+        self.params = params
+        self.B = num_slots
+        self.max_len = max_len
+        self.table = build_serve_table(model, params, sharder=sharder)
+        cache = model.init_cache(num_slots, max_len)
+        self.payload = {
+            "cache": cache,
+            "tokens": jnp.zeros((num_slots, 1), jnp.int32),
+            "pos": jnp.zeros((num_slots,), jnp.int32),
+            "rng": jax.random.PRNGKey(seed),
+            "temp": jnp.zeros((), jnp.float32),
+        }
+        spec = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.payload
+        )
+        self.dispatch = self.table.build(spec, donate_payload=donate)
+        self.key_greedy = self.table.key_of("serve/decode_greedy")
+        self.key_sample = self.table.key_of("serve/decode_sample")
+        self.key_noop = self.table.key_of("serve/noop")
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, sharder=sharder)
+        )
+        # slot bookkeeping (host side)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.slot_remaining = np.zeros(num_slots, np.int64)
+        self.outputs: dict[int, list[int]] = {}
+        self.steps_dispatched = 0
+
+    # -- slot admission ----------------------------------------------------------
+
+    def _insert_cache(self, prompt_cache, slot: int) -> None:
+        """Write a single-sequence prompt cache into the batch cache at
+        ``slot``.  Each leaf's batch axis is the axis where the prompt leaf
+        has extent 1 and the full cache has ``num_slots``; prompt caches
+        shorter than max_len (KV) land at offset 0 via dynamic_update_slice.
+        """
+
+        def ins(full, part):
+            part = part.astype(full.dtype)
+            batch_axis = None
+            for a in range(full.ndim):
+                if part.shape[a] == 1 and full.shape[a] == self.B:
+                    batch_axis = a
+                    break
+            if batch_axis is None:  # B == 1 or already matching: overwrite
+                batch_axis = 0 if full.shape == part.shape else None
+            starts = [0] * full.ndim
+            if batch_axis is not None:
+                starts[batch_axis] = slot
+            return jax.lax.dynamic_update_slice(full, part, tuple(starts))
+
+        self.payload["cache"] = jax.tree_util.tree_map(
+            ins, self.payload["cache"], prompt_cache
+        )
+
+    def admit(self, req: Request, slot: int) -> None:
+        prompt = np.asarray(req.prompt, np.int32)[None, :]  # (1, S)
+        batch = {"tokens": jnp.asarray(prompt)}
+        logits, prompt_cache = self._prefill(self.params, batch)
+        self._insert_cache(prompt_cache, slot)
+        first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        self.payload["tokens"] = self.payload["tokens"].at[slot, 0].set(first[0])
+        self.payload["pos"] = self.payload["pos"].at[slot].set(prompt.shape[1])
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new_tokens - 1
+        self.outputs[req.rid] = [int(first[0])]
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # -- stepping ------------------------------------------------------------------
+
+    def step(self, key: int | None = None) -> None:
+        """One batched decode step through the device dispatch table."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if key is None:
+            if not active:
+                key = self.key_noop
+            elif any(r is not None and r.temperature > 0 for r in self.slot_req):
+                key = self.key_sample
+            else:
+                key = self.key_greedy
+        temps = max((r.temperature for r in self.slot_req if r is not None),
+                    default=0.0)
+        self.payload["temp"] = jnp.asarray(temps, jnp.float32)
+        self.payload = self.dispatch(jnp.asarray(key, jnp.int32), self.payload)
+        self.steps_dispatched += 1
+        if key == self.key_noop:
+            return
+        toks = np.asarray(self.payload["tokens"][:, 0])
+        for slot in active:
+            req = self.slot_req[slot]
+            self.outputs[req.rid].append(int(toks[slot]))
+            self.slot_remaining[slot] -= 1
+            if self.slot_remaining[slot] <= 0:
+                self.slot_req[slot] = None
+
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Serve a request list to completion with continuous batching."""
+        for i, r in enumerate(requests):
+            if r.rid < 0:
+                r.rid = i
+        pending = list(requests)
+        while pending or any(r is not None for r in self.slot_req):
+            for slot in self.free_slots():
+                if not pending:
+                    break
+                self.admit(pending.pop(0), slot)
+            self.step()
+        return self.outputs

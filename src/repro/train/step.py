@@ -1,0 +1,59 @@
+"""Train-step builders (the functions the dry-run lowers and the trainer
+jits).  Pure: (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.optim.compression import ef_compress_tree, ef_decompress_tree
+
+
+def build_train_step(model, opt_cfg: adamw.AdamWConfig, sharder=None,
+                     grad_shardings=None):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch, sharder
+        )
+        if grad_shardings is not None:
+            # ZeRO-2: pin gradients to the parameter shards so GSPMD emits
+            # reduce-scatters over the batch axes instead of full
+            # all-reduce + slice (16x less DP traffic under FSDP)
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        if opt_cfg.reduce_dtype is not None:
+            # distributed-optimisation trick: the DP gradient reduction
+            # happens in reduced precision — under GSPMD the psum that
+            # materialises on the batch axes then moves half the bytes
+            rd = jnp.dtype(opt_cfg.reduce_dtype)
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(rd).astype(jnp.float32), grads
+            )
+        params, opt_state, om = adamw.update(opt_cfg, params, opt_state, grads)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def build_compressed_train_step(model, opt_cfg: adamw.AdamWConfig, sharder=None):
+    """Variant with in-graph int8 error-feedback gradient compression —
+    state carries the EF residual (ablated in tests for convergence)."""
+
+    def train_step(params, opt_state, ef_residual, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch, sharder
+        )
+        qtree, ef_residual = ef_compress_tree(grads, ef_residual)
+        grads = ef_decompress_tree(qtree)
+        params, opt_state, om = adamw.update(opt_cfg, params, opt_state, grads)
+        return params, opt_state, ef_residual, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def build_eval_step(model, sharder=None):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, sharder)
+        return {"loss": loss, **metrics}
+
+    return eval_step

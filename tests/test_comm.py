@@ -1,0 +1,115 @@
+"""Transport invariants: delivery, FIFO per pair, large frames — for every
+backend (local threads / shm rings / loopback TCP)."""
+
+import threading
+
+import pytest
+
+from repro.comm.local import LocalFabric
+from repro.comm.shm import ShmFabric, ShmRing
+from repro.comm.socket import SocketFabric
+from repro.core.errors import CommError
+
+
+@pytest.fixture(params=["local", "shm", "socket"])
+def fabric(request):
+    if request.param == "local":
+        fab = LocalFabric(3)
+    elif request.param == "shm":
+        fab = ShmFabric(3, capacity=1 << 20)
+    else:
+        fab = SocketFabric(3)
+    yield fab
+    fab.close()
+
+
+def test_point_to_point(fabric):
+    a, b = fabric.endpoint(0), fabric.endpoint(1)
+    a.send(1, b"hello")
+    assert b.recv(timeout=5) == b"hello"
+
+
+def test_fifo_per_pair(fabric):
+    a, b = fabric.endpoint(0), fabric.endpoint(1)
+    for i in range(100):
+        a.send(1, bytes([i]))
+    got = [b.recv(timeout=5)[0] for _ in range(100)]
+    assert got == list(range(100))
+
+
+def test_large_frame(fabric):
+    a, b = fabric.endpoint(0), fabric.endpoint(2)
+    blob = bytes(range(256)) * 2048  # 512 KB
+    a.send(2, blob)
+    assert b.recv(timeout=10) == blob
+
+
+def test_recv_timeout(fabric):
+    ep = fabric.endpoint(0)
+    assert ep.recv(timeout=0.05) is None
+
+
+def test_self_send_rejected(fabric):
+    ep = fabric.endpoint(0)
+    with pytest.raises(CommError):
+        ep.send(0, b"loop")
+
+
+def test_bidirectional(fabric):
+    a, b = fabric.endpoint(0), fabric.endpoint(1)
+    a.send(1, b"ping")
+    assert b.recv(timeout=5) == b"ping"
+    b.send(0, b"pong")
+    assert a.recv(timeout=5) == b"pong"
+
+
+def test_shm_ring_wraparound():
+    ring = ShmRing("test_ring_wrap", capacity=1 << 12, create=True)
+    try:
+        reader = ShmRing("test_ring_wrap")
+        # frames larger than half the ring force wrap-around handling
+        for i in range(64):
+            payload = bytes([i]) * 1500
+            ring.push(payload, timeout=1.0)
+            assert reader.try_pop() == payload
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_ring_full_detection():
+    ring = ShmRing("test_ring_full", capacity=1 << 10, create=True)
+    try:
+        ring.push(b"x" * 900, timeout=0.1)
+        with pytest.raises(CommError):
+            ring.push(b"y" * 900, timeout=0.05)  # no consumer: must time out
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_concurrent_producer_consumer():
+    ring = ShmRing("test_ring_spsc", capacity=1 << 16, create=True)
+    out = []
+
+    def consume():
+        reader = ShmRing("test_ring_spsc")
+        while len(out) < 500:
+            f = reader.try_pop()
+            if f is not None:
+                out.append(f)
+        reader.close()
+
+    t = threading.Thread(target=consume)
+    t.start()
+    try:
+        for i in range(500):
+            ring.push(i.to_bytes(4, "little") * 8)
+        t.join(timeout=10)
+        assert len(out) == 500
+        assert out[0][:4] == (0).to_bytes(4, "little")
+        assert out[-1][:4] == (499).to_bytes(4, "little")
+    finally:
+        ring.close()
+        ring.unlink()

@@ -1,0 +1,134 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps + hypothesis-driven shapes, assert_allclose per kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.mlstm import mlstm_chunked_kernel
+from repro.models.mamba2 import ssd_recurrent
+from repro.models.xlstm import mlstm_recurrent
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BH,BKV,S,d,causal", [
+    (4, 4, 128, 64, True),
+    (8, 2, 256, 64, True),
+    (4, 4, 128, 128, False),
+    (6, 3, 192, 32, True),
+])
+def test_flash_attention_sweep(BH, BKV, S, d, causal, dtype):
+    qpk = BH // BKV
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (BH, S, d), dtype)
+    k = jax.random.normal(ks[1], (BKV, S, d), dtype)
+    v = jax.random.normal(ks[2], (BKV, S, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_per_kv=qpk,
+                          block_q=64, block_k=64, interpret=True)
+    expected = ref.attention_ref(q, k, v, causal=causal, q_per_kv=qpk)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        atol=ATOL[dtype], rtol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("B,Hkv,qpk,S,d", [
+    (2, 2, 4, 256, 64), (3, 1, 8, 128, 128), (2, 4, 1, 192, 64),
+])
+def test_decode_attention_sweep(B, Hkv, qpk, S, d):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, Hkv, qpk, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = decode_attention(q, k, v, lengths, block_k=64, interpret=True)
+    expected = ref.decode_attention_ref(
+        q.reshape(B, Hkv * qpk, d), k, v, lengths, q_per_kv=qpk
+    ).reshape(B, Hkv, qpk, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=2e-5, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    BH=st.integers(1, 4), nc=st.integers(1, 4),
+    chunk=st.sampled_from([8, 16]), dk=st.sampled_from([8, 16]),
+    dv=st.sampled_from([8, 32]),
+)
+def test_mlstm_kernel_vs_recurrence(BH, nc, chunk, dk, dv):
+    S = nc * chunk
+    ks = jax.random.split(jax.random.PRNGKey(BH * 100 + S), 5)
+    q = jax.random.normal(ks[0], (BH, S, dk))
+    k = jax.random.normal(ks[1], (BH, S, dk))
+    v = jax.random.normal(ks[2], (BH, S, dv))
+    i_pre = jax.random.normal(ks[3], (BH, S))
+    f_pre = jax.random.normal(ks[4], (BH, S)) + 2.0
+    h, (C, n, m) = mlstm_chunked_kernel(q, k, v, i_pre, f_pre, chunk=chunk,
+                                        interpret=True)
+    hr, (Cr, nr, mr) = mlstm_recurrent(
+        q[:, :, None], k[:, :, None], v[:, :, None],
+        i_pre[:, :, None], f_pre[:, :, None],
+    )
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr[:, :, 0]),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr[:, 0]),
+                               atol=5e-3, rtol=1e-2)
+
+
+def test_ssd_kernel_vs_recurrence():
+    B, S, H, P, G, N = 2, 64, 4, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    D = jnp.ones((H,))
+    y, h = ops.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16, interpret=True)
+    yr, hr = ssd_recurrent(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-4,
+                               rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    E=st.integers(1, 4),
+    C=st.sampled_from([16, 48]),
+    d=st.sampled_from([32, 64]),
+    f=st.sampled_from([16, 64]),
+)
+def test_grouped_matmul_hypothesis(E, C, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(E * 7 + C), 2)
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    w = jax.random.normal(ks[1], (E, d, f), jnp.float32)
+    out = grouped_matmul(x, w, block_c=16, block_f=16, block_d=16,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.grouped_matmul_ref(x, w)),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_flash_matches_model_attention_path():
+    """The kernel and the model's XLA reference compute the same math."""
+    from repro.models import layers as L
+
+    B, S, H, Hkv, hd = 2, 64, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    out_kernel = ops.flash_attention_bhsd(q, k, v, causal=True, interpret=True)
+    mask = L.causal_mask(S, S)
+    out_model = L.gqa_scores_softmax_value(q, k, v, mask, q_per_kv=H // Hkv)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_model),
+                               atol=2e-5, rtol=1e-3)

@@ -1,0 +1,47 @@
+"""Frame/header codec invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as ham
+from repro.core import message as msg
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    key=st.integers(min_value=0, max_value=2**32 - 1),
+    src=st.integers(min_value=0, max_value=2**32 - 1),
+    msg_id=st.integers(min_value=0, max_value=2**64 - 1),
+    flags=st.integers(min_value=0, max_value=7),
+    payload=st.binary(max_size=256),
+)
+def test_frame_roundtrip(key, src, msg_id, flags, payload):
+    frame = msg.encode_frame(key, payload, src_node=src, msg_id=msg_id,
+                             flags=flags)
+    header, view = msg.split_frame(frame)
+    assert header.key == key
+    assert header.src_node == src
+    assert header.msg_id == msg_id
+    assert header.flags == flags
+    assert bytes(view) == payload
+
+
+def test_bad_magic_rejected():
+    frame = bytearray(msg.encode_frame(1, b"xy"))
+    frame[0] ^= 0xFF
+    with pytest.raises(ham.MessageFormatError):
+        msg.decode_header(frame)
+
+
+def test_truncated_frame_rejected():
+    frame = msg.encode_frame(1, b"hello world")
+    with pytest.raises(ham.MessageFormatError):
+        msg.split_frame(frame[: msg.HEADER_NBYTES + 3])
+    with pytest.raises(ham.MessageFormatError):
+        msg.decode_header(frame[:10])
+
+
+def test_flags_semantics():
+    h = msg.Header(key=0, src_node=0, msg_id=1, payload_len=0,
+                   flags=msg.FLAG_REPLY | msg.FLAG_ERROR)
+    assert h.is_reply and h.is_error and not h.is_dynamic

@@ -1,0 +1,128 @@
+"""HAM-Offload behaviour: the paper §2 surface end to end."""
+
+import numpy as np
+import pytest
+
+import repro.core as ham
+from repro.core.closure import f2f
+from repro.core.executor import ThreadPoolPolicy
+from repro.core.registry import HandlerRegistry
+from repro.offload.api import OffloadDomain, deref
+from repro.offload.buffer import BufferPtr, BufferRegistry
+from repro.offload.runtime import current_node, register_internal_handlers
+
+
+def _make_registry():
+    reg = HandlerRegistry()
+    register_internal_handlers(reg)
+
+    def inner_prod(a_ptr, b_ptr, n):
+        a, b = deref(a_ptr), deref(b_ptr)
+        return float(a[:n] @ b[:n])
+
+    def boom():
+        raise ValueError("intentional failure")
+
+    def reverse(host_node):
+        node = current_node()
+        fut = node.send_async(host_node, f2f("_ham/ping", 7, registry=reg))
+        return node.wait(fut, 10.0)
+
+    reg.register(inner_prod, name="t/inner_prod")
+    reg.register(boom, name="t/boom")
+    reg.register(reverse, name="t/reverse")
+    reg.register(lambda x: x * 2, name="t/double")
+    reg.init()
+    return reg
+
+
+def _f2f(reg, name, *args):
+    return f2f(name, *args, registry=reg)
+
+
+@pytest.fixture
+def dom():
+    reg = _make_registry()
+    d = OffloadDomain.local(3, registry=reg)
+    yield d
+    d.shutdown()
+
+
+def test_sync_offload(dom):
+    assert dom.sync(1, _f2f(dom.registry, "t/double", 21)) == 42
+
+
+def test_async_futures_complete_out_of_order(dom):
+    futs = [dom.async_(1 + (i % 2), _f2f(dom.registry, "t/double", i))
+            for i in range(10)]
+    assert [f.get(10) for f in futs] == [2 * i for i in range(10)]
+
+
+def test_allocate_put_get_free(dom):
+    a = np.arange(64, dtype=np.float64)
+    ptr = dom.allocate(2, (64,), "float64")
+    dom.put(a, ptr)
+    np.testing.assert_array_equal(dom.get(ptr), a)
+    # partial get with offset
+    np.testing.assert_array_equal(dom.get(ptr, offset=10, count=5), a[10:15])
+    dom.free(ptr)
+    with pytest.raises(ham.RemoteExecutionError):
+        dom.get(ptr)
+
+
+def test_offloaded_compute_on_buffers(dom):
+    a = np.arange(128.0)
+    b = np.ones(128)
+    pa = dom.allocate(1, (128,), "float64")
+    pb = dom.allocate(1, (128,), "float64")
+    dom.put(a, pa)
+    dom.put(b, pb)
+    assert dom.sync(1, _f2f(dom.registry, "t/inner_prod", pa, pb, 128)) == a @ b
+
+
+def test_remote_exception_propagates(dom):
+    with pytest.raises(ham.RemoteExecutionError, match="intentional"):
+        dom.sync(1, _f2f(dom.registry, "t/boom"))
+    # domain still alive
+    assert dom.ping(1, 5) == 5
+
+
+def test_reverse_offload(dom):
+    assert dom.sync(2, _f2f(dom.registry, "t/reverse", 0)) == 7
+
+
+def test_relay_offload_over_fabric(dom):
+    fut = dom.relay(via=1, dst=2, function=_f2f(dom.registry, "t/double", 8))
+    assert fut.get(10) == 16
+
+
+def test_barrier(dom):
+    dom.barrier()
+
+
+def test_threadpool_policy_domain():
+    reg = _make_registry()
+    d = OffloadDomain.local(2, registry=reg,
+                            policy_factory=lambda: ThreadPoolPolicy(2))
+    try:
+        assert d.sync(1, _f2f(reg, "t/double", 4)) == 8
+    finally:
+        d.shutdown()
+
+
+def test_buffer_registry_rules():
+    br = BufferRegistry(3)
+    ptr = br.allocate((4, 4), "float32")
+    assert ptr.node == 3
+    assert br.deref(ptr).shape == (4, 4)
+    with pytest.raises(ham.OffloadError):
+        br.deref(BufferPtr(1, ptr.handle))  # wrong address space (§4.1)
+    br.free(ptr)
+    with pytest.raises(ham.OffloadError):
+        br.free(ptr)
+    assert br.live_count() == 0
+
+
+def test_oneway_fire_and_forget(dom):
+    dom.oneway(1, _f2f(dom.registry, "t/double", 1))
+    dom.barrier()  # drains; no reply expected, no crash

@@ -1,0 +1,116 @@
+"""Registry determinism — the paper's core guarantee (§5.2)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as ham
+from repro.core.registry import HandlerRegistry
+
+
+def _noop():
+    return None
+
+
+def _mk(names):
+    reg = HandlerRegistry()
+    for n in names:
+        reg.register(_noop, name=n)
+    return reg.init()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.permutations([f"h/{i:03d}" for i in range(24)]))
+def test_key_map_independent_of_registration_order(perm):
+    """Any registration order yields the identical key map (the
+    communication-free agreement that heterogeneous processes rely on)."""
+    base = _mk(sorted(perm))
+    other = _mk(list(perm))
+    assert base.digest == other.digest
+    for name in perm:
+        assert base.key_of(name) == other.key_of(name)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sets(st.sampled_from([f"h/{i:03d}" for i in range(40)]),
+               min_size=1, max_size=40))
+def test_digest_detects_different_handler_sets(subset):
+    full = _mk([f"h/{i:03d}" for i in range(40)])
+    part = _mk(sorted(subset))
+    if len(subset) == 40:
+        assert part.digest == full.digest
+    else:
+        assert part.digest != full.digest
+
+
+def test_keys_are_dense_sorted_indices():
+    table = _mk(["b", "a", "c"])
+    assert [table.key_of(n) for n in ("a", "b", "c")] == [0, 1, 2]
+    assert table.handler_at(0).stable_name.startswith("a")
+
+
+def test_lambda_rejected_without_explicit_name():
+    reg = HandlerRegistry()
+    with pytest.raises(ham.UnstableNameError):
+        reg.register(lambda: 1)
+
+
+def test_local_function_rejected():
+    reg = HandlerRegistry()
+
+    def local_fn():
+        return 2
+
+    with pytest.raises(ham.UnstableNameError):
+        reg.register(local_fn)
+    # explicit name (the l2f route) works
+    reg.register(local_fn, name="explicit/name")
+    assert reg.init().key_of("explicit/name") == 0
+
+
+def test_name_collision_with_different_functions():
+    reg = HandlerRegistry()
+    reg.register(_noop, name="dup")
+    with pytest.raises(ham.RegistryError):
+        reg.register(lambda: 2, name="dup")
+
+
+def test_sealed_registry_rejects_late_registration():
+    reg = HandlerRegistry()
+    reg.register(_noop, name="x")
+    reg.init()
+    with pytest.raises(ham.RegistrySealedError):
+        reg.register(_noop, name="y")
+
+
+def test_elastic_reinit_allows_late_registration():
+    reg = HandlerRegistry()
+    reg.register(_noop, name="x")
+    t1 = reg.init(allow_late_registration=True)
+    reg.register(_noop, name="y")
+    t2 = reg.init()
+    assert len(t2) == 2 and t1.digest != t2.digest
+
+
+def test_unknown_key_raises():
+    table = _mk(["only"])
+    with pytest.raises(ham.UnknownHandlerError):
+        table.handler_at(5)
+
+
+def test_peer_digest_verification():
+    a = _mk(["h/1", "h/2"])
+    b = _mk(["h/1", "h/2"])
+    c = _mk(["h/1"])
+    ham.verify_peer_digest(a, b.digest)
+    with pytest.raises(ham.KeyMapMismatchError):
+        ham.verify_peer_digest(a, c.digest)
+
+
+def test_static_spec_part_of_identity():
+    import numpy as np
+
+    reg1 = HandlerRegistry()
+    reg1.register(_noop, name="h", arg_specs=(ham.spec_of(np.zeros(4)),))
+    reg2 = HandlerRegistry()
+    reg2.register(_noop, name="h", arg_specs=(ham.spec_of(np.zeros(8)),))
+    assert reg1.init().digest != reg2.init().digest
