@@ -1,0 +1,168 @@
+"""Coalesced hot-path throughput: frames/sec for 64-byte frames at batching
+factors 1/8/64 over the shm and socket fabrics, plus put/get bandwidth.
+
+This is the benchmark behind the zero-copy/batching PR: factor 1 is the
+per-message path (one publication — ring counter store or syscall — per
+frame, one copy per pop), the batched factors ride ``send_many``/
+``recv_many`` (N frames per publication, leased zero-copy views on shm).
+
+Results are written to ``BENCH_hotpath.json`` at the repo root together with
+the seed-revision baselines, so the perf trajectory is tracked across PRs.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+from repro.comm.shm import ShmFabric
+from repro.comm.socket import SocketFabric
+
+_REPO_ROOT = Path(__file__).resolve().parents[1]
+_JSON_PATH = _REPO_ROOT / "BENCH_hotpath.json"
+
+FRAME_NBYTES = 64
+FACTORS = (1, 8, 64)
+
+#: seed-revision numbers (PR 0), measured in this container with
+#: ``benchmarks/putget.py`` (mean over reps) before the zero-copy/batching
+#: rework — the denominator of the tracked speedups.
+SEED_PUTGET_US = {
+    "put_64KB": 201.4,
+    "get_64KB": 200.3,
+    "put_4MB": 1929.1,
+    "get_4MB": 2293.9,
+    "put_64MB": 102704.9,
+    "get_64MB": 122410.9,
+}
+
+#: the same seed revision re-measured with per-call medians on an idle
+#: machine (straggler-robust; see putget.run_median) — the conservative
+#: baseline for the speedup claims.
+SEED_PUTGET_MEDIAN_US = {
+    "put_64KB": 126.8,
+    "get_64KB": 93.3,
+    "put_4MB": 1089.7,
+    "get_4MB": 969.6,
+    "put_64MB": 78974.8,
+    "get_64MB": 113933.0,
+}
+
+
+def _make_fabric(kind: str):
+    if kind == "shm":
+        return ShmFabric(2, capacity=1 << 22)
+    return SocketFabric(2)
+
+
+def _frames_per_sec(kind: str, factor: int, n_frames: int) -> float:
+    """Producer -> consumer throughput of ``n_frames`` 64-byte frames."""
+    fab = _make_fabric(kind)
+    a, b = fab.endpoint(0), fab.endpoint(1)
+    frame = b"\x5a" * FRAME_NBYTES
+    done = threading.Event()
+
+    def consume() -> None:
+        got = 0
+        while got < n_frames:
+            if factor == 1:
+                if b.recv(timeout=10) is not None:
+                    got += 1
+            else:
+                got += len(b.recv_many(max_frames=factor, timeout=10))
+                b.release()
+        done.set()
+
+    consumer = threading.Thread(target=consume, daemon=True)
+    consumer.start()
+    t0 = time.perf_counter()
+    if factor == 1:
+        for _ in range(n_frames):
+            a.send(1, frame)
+    else:
+        batch = [frame] * factor
+        for _ in range(n_frames // factor):
+            a.send_many(1, batch)
+    if not done.wait(timeout=120):
+        fab.close()
+        raise RuntimeError(f"{kind} consumer stalled at factor {factor}")
+    dt = time.perf_counter() - t0
+    consumer.join(timeout=5)
+    fab.close()
+    return n_frames / dt
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    fps: dict[str, dict[str, float]] = {}
+    for kind, n_frames in (("shm", 128 * 1024), ("socket", 32 * 1024)):
+        fps[kind] = {}
+        for factor in FACTORS:
+            rate = _frames_per_sec(kind, factor, n_frames)
+            fps[kind][str(factor)] = rate
+            rows.append(
+                (f"batching/{kind}_x{factor}", 1e6 / rate, f"{rate:,.0f} frames/s")
+            )
+
+    # put/get bandwidth rides along so BENCH_hotpath.json tracks the whole
+    # hot path (the acceptance metrics of the zero-copy PR)
+    from benchmarks import putget
+
+    putget_us: dict[str, float] = {}
+    for name, us, note in putget.run():
+        short = name.split("/", 1)[1]
+        putget_us[short] = round(us, 1)
+        rows.append((f"batching/{name}", us, note))
+
+    putget_median_us = putget.run_median()
+    for name, us in putget_median_us.items():
+        rows.append((f"batching/putget/{name}_median", us, ""))
+
+    shm_speedup = fps["shm"]["64"] / fps["shm"]["1"]
+    socket_speedup = fps["socket"]["64"] / fps["socket"]["1"]
+    putget_speedup = {
+        k: round(SEED_PUTGET_US[k] / v, 2)
+        for k, v in putget_us.items()
+        if k in SEED_PUTGET_US and v
+    }
+    putget_median_speedup = {
+        k: round(SEED_PUTGET_MEDIAN_US[k] / v, 2)
+        for k, v in putget_median_us.items()
+        if k in SEED_PUTGET_MEDIAN_US and v
+    }
+    report = {
+        "schema": "hotpath-v1",
+        "frame_nbytes": FRAME_NBYTES,
+        "frames_per_sec": {
+            kind: {f: round(v, 1) for f, v in per.items()}
+            for kind, per in fps.items()
+        },
+        "batching_speedup_x64": {
+            "shm": round(shm_speedup, 2),
+            "socket": round(socket_speedup, 2),
+        },
+        "putget_us": putget_us,
+        "putget_median_us": putget_median_us,
+        "seed_putget_us": SEED_PUTGET_US,
+        "seed_putget_median_us": SEED_PUTGET_MEDIAN_US,
+        "putget_speedup_vs_seed": putget_speedup,
+        "putget_median_speedup_vs_seed": putget_median_speedup,
+        "acceptance": {
+            "shm_x64_ge_3x": shm_speedup >= 3.0,
+            "putget_4MB_plus_ge_1p5x": all(
+                putget_speedup.get(k, 0) >= 1.5
+                for k in ("put_4MB", "get_4MB", "put_64MB", "get_64MB")
+            ),
+        },
+    }
+    _JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    rows.append(("batching/shm_x64_speedup", shm_speedup, f"-> {_JSON_PATH.name}"))
+    rows.append(("batching/socket_x64_speedup", socket_speedup, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.3f},{note}")

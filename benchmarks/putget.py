@@ -1,7 +1,14 @@
-"""put/get bandwidth through the offload data plane (paper Fig. 2 surface)."""
+"""put/get bandwidth through the offload data plane (paper Fig. 2 surface).
+
+``run`` reports the mean over reps (the methodology the seed numbers were
+recorded with); ``run_median`` times each call individually and reports the
+median, which is robust against scheduler/GC stragglers — BENCH_hotpath.json
+records both.
+"""
 
 from __future__ import annotations
 
+import statistics
 import time
 
 import numpy as np
@@ -17,25 +24,65 @@ def run() -> list[tuple[str, float, str]]:
         reg.init()
     dom = OffloadDomain.local(2)
     rows = []
-    for nbytes, label in ((1 << 16, "64KB"), (1 << 22, "4MB"), (1 << 26, "64MB")):
-        arr = np.random.default_rng(1).standard_normal(nbytes // 8)
-        ptr = dom.allocate(1, arr.shape, "float64")
-        t0 = time.perf_counter()
-        reps = max(1, (1 << 26) // nbytes)
-        for _ in range(reps):
-            dom.put(arr, ptr)
-        dt = (time.perf_counter() - t0) / reps
-        rows.append((f"putget/put_{label}", dt * 1e6, f"{nbytes/dt/1e9:.2f} GB/s"))
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            dom.get(ptr)
-        dt = (time.perf_counter() - t0) / reps
-        rows.append((f"putget/get_{label}", dt * 1e6, f"{nbytes/dt/1e9:.2f} GB/s"))
-        dom.free(ptr)
+    for wire in (False, True):
+        dom.direct_data_plane = not wire
+        prefix = "wire_" if wire else ""
+        for nbytes, label in ((1 << 16, "64KB"), (1 << 22, "4MB"), (1 << 26, "64MB")):
+            arr = np.random.default_rng(1).standard_normal(nbytes // 8)
+            ptr = dom.allocate(1, arr.shape, "float64")
+            t0 = time.perf_counter()
+            reps = max(4, (1 << 27) // nbytes)  # >=32 reps at 4MB
+            for _ in range(reps):
+                dom.put(arr, ptr)
+            dt = (time.perf_counter() - t0) / reps
+            rows.append((f"putget/{prefix}put_{label}", dt * 1e6,
+                         f"{nbytes/dt/1e9:.2f} GB/s"))
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                dom.get(ptr)
+            dt = (time.perf_counter() - t0) / reps
+            rows.append((f"putget/{prefix}get_{label}", dt * 1e6,
+                         f"{nbytes/dt/1e9:.2f} GB/s"))
+            dom.free(ptr)
     dom.shutdown()
     return rows
+
+
+def run_median() -> dict[str, float]:
+    """Median us per put/get call, one timing sample per call.
+
+    Reports the default (direct in-process) data plane and the wire path
+    (``wire_`` prefix) side by side.
+    """
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    dom = OffloadDomain.local(2)
+    out: dict[str, float] = {}
+    for wire in (False, True):
+        dom.direct_data_plane = not wire
+        prefix = "wire_" if wire else ""
+        for nbytes, label, reps in ((1 << 16, "64KB", 400), (1 << 22, "4MB", 48),
+                                    (1 << 26, "64MB", 8)):
+            arr = np.random.default_rng(1).standard_normal(nbytes // 8)
+            ptr = dom.allocate(1, arr.shape, "float64")
+            for op, fn in (("put", lambda: dom.put(arr, ptr)),
+                           ("get", lambda: dom.get(ptr))):
+                fn()
+                fn()  # warm transport + frame pool
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    fn()
+                    ts.append((time.perf_counter() - t0) * 1e6)
+                out[f"{prefix}{op}_{label}"] = round(statistics.median(ts), 1)
+            dom.free(ptr)
+    dom.shutdown()
+    return out
 
 
 if __name__ == "__main__":
     for name, val, note in run():
         print(f"{name},{val:.1f},{note}")
+    for name, val in run_median().items():
+        print(f"putget/{name}_median,{val:.1f},")

@@ -22,6 +22,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        batching,
         device_dispatch,
         offload_overhead,
         putget,
@@ -35,6 +36,7 @@ def main() -> None:
         ("registry_scaling", registry_scaling.run),
         ("serialisation", serialisation.run),
         ("putget", putget.run),
+        ("batching (coalesced hot path -> BENCH_hotpath.json)", batching.run),
     ]
     failures = 0
     print("name,us_per_call,derived")

@@ -17,11 +17,42 @@ from __future__ import annotations
 from repro.core.errors import CommError
 
 
+def as_byte_view(data) -> memoryview:
+    """Flat uint8 memoryview over any buffer-protocol object, zero-copy —
+    the normal form transports move frames in."""
+    mv = data if isinstance(data, memoryview) else memoryview(data)
+    if mv.format != "B" or mv.ndim != 1:
+        mv = mv.cast("B")
+    return mv
+
+
 class CommBackend:
-    """Per-node endpoint of a fabric."""
+    """Per-node endpoint of a fabric.
+
+    Backends expose two tiers:
+
+    * per-frame ``send``/``recv`` — always available, frames are *owned*
+      (plain bytes objects the caller may keep forever);
+    * coalesced ``send_many``/``recv_many``/``release`` — the hot path.
+      ``send_many`` moves N frames per transport publication (one ring
+      counter store, one gathered syscall).  ``recv_many`` may hand out
+      zero-copy views into the transport's receive window when the backend
+      sets ``zero_copy_recv``; those views stay valid only until the next
+      ``release()`` call, which returns the window space to the producer.
+      Backends without a zero-copy window return owned frames and make
+      ``release`` a no-op, so callers can use one code path everywhere.
+    """
 
     node_id: int
     num_nodes: int
+
+    #: True when recv_many returns leased views into transport memory that
+    #: are invalidated by release(); False when frames are caller-owned.
+    zero_copy_recv: bool = False
+
+    #: Largest single frame this backend can move, or None for unlimited.
+    #: Data-plane callers chunk transfers to stay under it.
+    max_frame_nbytes: int | None = None
 
     def send(self, dst: int, frame: bytes | bytearray | memoryview) -> None:
         raise NotImplementedError
@@ -29,6 +60,25 @@ class CommBackend:
     def recv(self, timeout: float | None = None) -> bytes | None:
         """Next inbound frame, or ``None`` on timeout."""
         raise NotImplementedError
+
+    def send_many(self, dst: int, frames) -> None:
+        """Send a batch of frames to one destination (default: a loop)."""
+        for frame in frames:
+            self.send(dst, frame)
+
+    def recv_many(self, max_frames: int = 64, timeout: float | None = None) -> list:
+        """Up to ``max_frames`` inbound frames; ``[]`` on timeout.
+
+        Default implementation degrades to one frame per call.
+        """
+        frame = self.recv(timeout=timeout)
+        return [] if frame is None else [frame]
+
+    def release(self) -> None:
+        """Release every view handed out by prior ``recv_many`` calls.
+
+        No-op unless ``zero_copy_recv`` is set.
+        """
 
     def close(self) -> None:
         pass

@@ -27,11 +27,31 @@ class LocalEndpoint(CommBackend):
         # (the latency floor the shm/socket backends are measured against)
         self._fabric._endpoints[dst]._inbox.put(frame)
 
+    def send_many(self, dst: int, frames) -> None:
+        self._check_dst(dst)
+        inbox = self._fabric._endpoints[dst]._inbox
+        for frame in frames:
+            inbox.put(frame)
+
     def recv(self, timeout: float | None = None) -> bytes | None:
         try:
             return self._inbox.get(timeout=timeout)
         except queue.Empty:
             return None
+
+    def recv_many(self, max_frames: int = 64, timeout: float | None = None) -> list:
+        """Drain up to ``max_frames`` queued frames in one call (frames are
+        owned — by-reference handoff — so there is nothing to release)."""
+        try:
+            out = [self._inbox.get(timeout=timeout)]
+        except queue.Empty:
+            return []
+        while len(out) < max_frames:
+            try:
+                out.append(self._inbox.get_nowait())
+            except queue.Empty:
+                break
+        return out
 
 
 class LocalFabric(Fabric):

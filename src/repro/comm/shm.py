@@ -7,29 +7,114 @@ pair; single producer, single consumer.
 
 Ring layout in the shared segment::
 
-    [ head u64 | tail u64 | data bytes ... ]
+    [ head u64 | head' u64 | tail u64 | tail' u64 | data bytes ... ]
 
 ``head``/``tail`` are *monotonic* byte counters (never wrapped), which makes
 full/empty unambiguous: used = head - tail.  The producer writes payload
-first, then publishes by storing ``head`` (an aligned 8-byte store — a real
-TPU-host port would use C++ atomics with release/acquire; CPython's memcpy of
-an aligned 8-byte slice is a single store on x86-64, which we accept here and
-note as an assumption change in DESIGN.md).
+first, then publishes by storing ``head``.
 
-Frames inside the ring are ``u64 length || bytes`` with wrap-around.
+Counter stores are NOT assumed atomic.  CPython's ``struct.pack_into`` /
+``unpack_from`` on a shared mapping can tear an 8-byte value (measured: a
+cross-process reader spinning on a counter observes mixed-byte values a few
+times per million updates — a real TPU-host port would use C++ atomics with
+release/acquire).  Each counter is therefore published twice — primary then
+confirm copy (``head'``/``tail'``) — and a reader rereads until confirm ==
+primary.  Because the counters are monotonic, accepting a stale matching
+pair is always conservative (the consumer sees less data, the producer sees
+less free space — never the unsafe direction), and a torn read cannot match
+its independently-loaded confirm copy.
+
+Frames inside the ring are ``u64 length || bytes`` with wrap-around; a
+coalesced batch is just the concatenation of such segments (see
+``repro.core.message`` for the batched-frame layout).
+
+Zero-copy hot path and the lease protocol
+-----------------------------------------
+
+The per-frame copying API (``push`` of caller bytes, ``try_pop`` returning a
+fresh ``bytes``) is kept for compatibility, but the hot path is copy-free in
+both directions:
+
+* **push / push_many** write straight from any buffer-protocol object into
+  the mapped window (length prefix packed in place, payload memcpy'd via
+  memoryview slice assignment — no intermediate ``bytes(frame)``).
+  ``push_many`` writes N frames and publishes ``head`` once.
+
+* **try_pop_view / pop_many** return :class:`RingLease` objects whose
+  ``views`` are memoryviews *into the ring* (frames that straddle the wrap
+  boundary are the one exception: they are reassembled into a scratch
+  buffer, since a Python memoryview cannot be discontiguous).  The consumed
+  region is NOT returned to the producer until the lease is explicitly
+  ``release()``d — that is the entire contract: a view is valid exactly as
+  long as its lease.  ``pop_many`` covers N frames with a single lease, so
+  ``tail`` is stored once per batch.
+
+Leases must be released in pop order (FIFO): releasing a younger lease while
+an older one is outstanding raises :class:`CommError` — out-of-order release
+would either tear a hole in the ring or silently re-expose unread bytes.
+Internally the copying ``try_pop`` may run while leases are outstanding
+(e.g. a handler doing a nested recv during a batch drain); it reads at the
+ring's private read cursor and defers its own tail advance until the older
+leases resolve.
+
+Memory-ordering assumptions of the zero-copy path (documented, not checked):
+
+* SPSC — exactly one producer and one consumer attach to each ring, so
+  ``head`` is only stored by the producer and ``tail`` only by the consumer.
+* TSO (x86-64): stores become visible in program order, so frame bytes are
+  visible before the ``head`` primary, which is visible before the confirm
+  copy; a reader that observes ``head' == head`` therefore observes every
+  byte below it.  The double-word protocol above covers the one assumption
+  TSO does not give pure Python: single-store atomicity of the counters.
+* The consumer additionally sanity-checks every frame boundary against the
+  accepted ``head`` (length nonzero, within capacity, frame fully below
+  ``head``) and treats violations as "not yet published" — a belt-and-
+  braces stop rather than a walk into unwritten memory.
+* A leased view is stable because the producer cannot advance past ``tail``,
+  and ``tail`` only moves on release.
 """
 
 from __future__ import annotations
 
 import struct
 import time
+from collections import deque
 from multiprocessing import shared_memory
 
-from repro.comm.base import CommBackend, Fabric
+from repro.comm.base import CommBackend, Fabric, as_byte_view as _as_view
 from repro.core.errors import CommError
 
-_HDR = 16  # head u64 + tail u64
+_HDR = 32  # head u64 + head-confirm u64 + tail u64 + tail-confirm u64
 _U64 = struct.Struct("<Q")
+
+# segments whose close() found still-exported lease views; kept alive so the
+# stdlib finaliser does not raise into the void (see ShmRing.close)
+_leaked_segments: list = []
+
+
+class RingLease:
+    """Consumer-side lease over one contiguous run of popped frames.
+
+    ``views`` hold the frame bytes (zero-copy into the ring except for
+    wrap-straddling frames).  ``release()`` returns the region to the
+    producer; it must be called in pop order.
+    """
+
+    __slots__ = ("_ring", "end", "views", "released")
+
+    def __init__(self, ring: "ShmRing", end: int, views: list):
+        self._ring = ring
+        self.end = end  # monotonic ring offset one past the last frame
+        self.views = views
+        self.released = False
+
+    @property
+    def view(self) -> memoryview:
+        """The single frame of a one-frame lease (try_pop_view result)."""
+        return self.views[0]
+
+    def release(self) -> None:
+        self._ring._release(self, strict=True)
 
 
 class ShmRing:
@@ -47,35 +132,77 @@ class ShmRing:
             self.capacity = self._shm.size - _HDR
         self._buf = self._shm.buf
         self.name = name
+        # consumer-side lease state: outstanding leases in pop order, plus a
+        # private read cursor (>= tail) marking the next unread frame
+        self._segments: deque[RingLease] = deque()
+        self._next_read = 0
 
     # -- counters ----------------------------------------------------------
+    # Double-word publication (see module docstring): primary at `off`,
+    # confirm copy at `off + 8`.  pack_into/unpack_from on shared memory can
+    # tear 8-byte values, so a value only counts once primary == confirm.
+
+    def _load_counter(self, off: int) -> int:
+        buf = self._buf
+        for _ in range(10000):
+            (confirm,) = _U64.unpack_from(buf, off + 8)  # stored last
+            (primary,) = _U64.unpack_from(buf, off)      # stored first
+            if primary == confirm:
+                return primary
+            time.sleep(0)  # writer mid-publish: sub-microsecond window
+        # writer stalled between the two stores (e.g. preempted for a long
+        # time): the smaller of the pair is the older value — conservative
+        # in both directions for monotonic counters
+        return min(primary, confirm)
+
+    def _store_counter(self, off: int, v: int) -> None:
+        _U64.pack_into(self._buf, off, v)
+        _U64.pack_into(self._buf, off + 8, v)
 
     def _head(self) -> int:
-        return _U64.unpack_from(self._buf, 0)[0]
+        return self._load_counter(0)
 
     def _tail(self) -> int:
-        return _U64.unpack_from(self._buf, 8)[0]
+        return self._load_counter(16)
 
     def _set_head(self, v: int) -> None:
-        _U64.pack_into(self._buf, 0, v)
+        self._store_counter(0, v)
 
     def _set_tail(self, v: int) -> None:
-        _U64.pack_into(self._buf, 8, v)
+        self._store_counter(16, v)
+
+    def _read_pos(self) -> int:
+        """Next unread offset: the cursor while leases are outstanding,
+        otherwise the shared ``tail`` (cursor == tail at quiescence)."""
+        return self._next_read if self._segments else self._tail()
 
     # -- data movement -----------------------------------------------------
 
-    def _write_bytes(self, pos: int, data) -> int:
-        """Copy ``data`` at ring offset pos (monotonic), handling wrap."""
+    def _write_view(self, pos: int, mv: memoryview) -> int:
+        """memcpy ``mv`` at ring offset pos (monotonic), handling wrap."""
         off = pos % self.capacity
-        n = len(data)
+        n = mv.nbytes
         first = min(n, self.capacity - off)
         base = _HDR
-        self._buf[base + off : base + off + first] = data[:first]
+        self._buf[base + off : base + off + first] = mv[:first]
         if first < n:
-            self._buf[base : base + n - first] = data[first:]
+            self._buf[base : base + n - first] = mv[first:]
         return pos + n
 
-    def _read_bytes(self, pos: int, n: int) -> bytes:
+    def _write_u64(self, pos: int, value: int) -> int:
+        off = pos % self.capacity
+        if off + 8 <= self.capacity:
+            _U64.pack_into(self._buf, _HDR + off, value)
+            return pos + 8
+        return self._write_view(pos, memoryview(_U64.pack(value)))
+
+    def _read_u64(self, pos: int) -> int:
+        off = pos % self.capacity
+        if off + 8 <= self.capacity:
+            return _U64.unpack_from(self._buf, _HDR + off)[0]
+        return _U64.unpack(bytes(self._read_copy(pos, 8)))[0]
+
+    def _read_copy(self, pos: int, n: int) -> bytearray:
         off = pos % self.capacity
         base = _HDR
         first = min(n, self.capacity - off)
@@ -83,36 +210,200 @@ class ShmRing:
         out[:first] = self._buf[base + off : base + off + first]
         if first < n:
             out[first:] = self._buf[base : base + n - first]
-        return bytes(out)
+        return out
 
-    def push(self, frame, timeout: float | None = None) -> None:
-        need = 8 + len(frame)
-        if need > self.capacity:
-            raise CommError(
-                f"frame of {len(frame)} bytes exceeds ring capacity {self.capacity}"
-            )
-        deadline = None if timeout is None else time.monotonic() + timeout
-        head = self._head()
+    def _frame_view(self, start: int, n: int) -> memoryview:
+        """Zero-copy view of [start, start+n) when contiguous; a scratch copy
+        when the frame straddles the wrap boundary."""
+        off = start % self.capacity
+        if off + n <= self.capacity:
+            return self._buf[_HDR + off : _HDR + off + n]
+        return memoryview(self._read_copy(start, n))
+
+    # -- producer side -----------------------------------------------------
+
+    def _wait_space(self, head: int, need: int, deadline) -> None:
         while self.capacity - (head - self._tail()) < need:
             if deadline is not None and time.monotonic() > deadline:
                 raise CommError("ring full: consumer stalled")
             time.sleep(0)  # yield; SPSC spin
-        pos = self._write_bytes(head, _U64.pack(len(frame)))
-        pos = self._write_bytes(pos, bytes(frame))
+
+    def push(self, frame, timeout: float | None = None) -> None:
+        mv = _as_view(frame)
+        need = 8 + mv.nbytes
+        if need > self.capacity:
+            raise CommError(
+                f"frame of {mv.nbytes} bytes exceeds ring capacity {self.capacity}"
+            )
+        deadline = None if timeout is None else time.monotonic() + timeout
+        head = self._head()
+        self._wait_space(head, need, deadline)
+        pos = self._write_u64(head, mv.nbytes)
+        pos = self._write_view(pos, mv)
         self._set_head(pos)  # publish
 
-    def try_pop(self) -> bytes | None:
-        tail = self._tail()
-        if self._head() == tail:
+    def push_many(self, frames, timeout: float | None = None) -> None:
+        """Write N frames, publishing ``head`` once per sub-batch.
+
+        Batches larger than the ring are split greedily; each sub-batch is
+        one counter store.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        batch: list[memoryview] = []
+        batch_need = 0
+        for frame in frames:
+            mv = _as_view(frame)
+            need = 8 + mv.nbytes
+            if need > self.capacity:
+                raise CommError(
+                    f"frame of {mv.nbytes} bytes exceeds ring capacity "
+                    f"{self.capacity}"
+                )
+            if batch and batch_need + need > self.capacity:
+                self._push_batch(batch, batch_need, deadline)
+                batch, batch_need = [], 0
+            batch.append(mv)
+            batch_need += need
+        if batch:
+            self._push_batch(batch, batch_need, deadline)
+
+    # below this total size a batch is joined into one contiguous segment
+    # before the ring write: for small frames one join + one memcpy beats
+    # 2N slice-assigns (the join copy is noise next to the saved Python ops)
+    _JOIN_LIMIT = 1 << 16
+
+    def _push_batch(self, views: list[memoryview], need: int, deadline) -> None:
+        head = self._head()
+        self._wait_space(head, need, deadline)
+        if need <= self._JOIN_LIMIT and len(views) > 1:
+            parts: list = []
+            append = parts.append
+            pack = _U64.pack
+            for mv in views:
+                append(pack(mv.nbytes))
+                append(mv)
+            pos = self._write_view(head, memoryview(b"".join(parts)))
+        else:
+            pos = head
+            for mv in views:
+                pos = self._write_u64(pos, mv.nbytes)
+                pos = self._write_view(pos, mv)
+        self._set_head(pos)  # single publish for the whole batch
+
+    # -- consumer side -----------------------------------------------------
+
+    def _frame_len_checked(self, pos: int, head: int) -> int | None:
+        """Length of the frame at ``pos``, or None if the bytes there do not
+        describe a fully-published frame below ``head`` (belt-and-braces
+        against counter tears; see module docstring)."""
+        n = self._read_u64(pos)
+        if n == 0 or n > self.capacity - 8 or pos + 8 + n > head:
             return None
-        (n,) = _U64.unpack(self._read_bytes(tail, 8))
-        frame = self._read_bytes(tail + 8, n)
-        self._set_tail(tail + 8 + n)
+        return n
+
+    def try_pop_view(self) -> RingLease | None:
+        """Zero-copy pop: a one-frame lease, or ``None`` if empty."""
+        pos = self._read_pos()
+        head = self._head()
+        if head == pos:
+            return None
+        n = self._frame_len_checked(pos, head)
+        if n is None:
+            return None
+        end = pos + 8 + n
+        lease = RingLease(self, end, [self._frame_view(pos + 8, n)])
+        self._segments.append(lease)
+        self._next_read = end
+        return lease
+
+    def pop_many(self, max_frames: int = 64) -> RingLease | None:
+        """Pop up to ``max_frames`` under ONE lease (one eventual tail store)."""
+        pos = self._read_pos()
+        head = self._head()
+        if pos == head:
+            return None
+        # hot loop: locals + inlined view slicing (no per-frame method calls)
+        buf = self._buf
+        cap = self.capacity
+        unpack_from = _U64.unpack_from
+        views: list[memoryview] = []
+        append = views.append
+        while pos != head and len(views) < max_frames:
+            off = pos % cap
+            if off + 8 <= cap:
+                (n,) = unpack_from(buf, _HDR + off)
+            else:
+                (n,) = _U64.unpack(bytes(self._read_copy(pos, 8)))
+            if n == 0 or n > cap - 8 or pos + 8 + n > head:
+                break  # not a fully-published frame: stop, retry next poll
+            start = pos + 8
+            soff = start % cap
+            if soff + n <= cap:
+                append(buf[_HDR + soff : _HDR + soff + n])
+            else:
+                append(memoryview(self._read_copy(start, n)))
+            pos = start + n
+        if not views:
+            return None
+        lease = RingLease(self, pos, views)
+        self._segments.append(lease)
+        self._next_read = pos
+        return lease
+
+    def _release(self, lease: RingLease, strict: bool) -> None:
+        if lease.released:
+            raise CommError("ring lease released twice")
+        if strict and (not self._segments or self._segments[0] is not lease):
+            raise CommError(
+                "ring lease released out of order: an older lease is still "
+                "outstanding (leases are FIFO)"
+            )
+        lease.released = True
+        # advance tail over the longest released prefix (deferred releases
+        # from nested copying pops resolve here)
+        new_tail = None
+        while self._segments and self._segments[0].released:
+            new_tail = self._segments.popleft().end
+        if new_tail is not None:
+            self._set_tail(new_tail)
+
+    def try_pop(self):
+        """Compatibility pop: one owned frame (copied out of the ring)."""
+        if not self._segments:
+            # fast path: no outstanding leases, advance tail directly
+            pos = self._tail()
+            head = self._head()
+            if head == pos:
+                return None
+            n = self._frame_len_checked(pos, head)
+            if n is None:
+                return None
+            off = (pos + 8) % self.capacity
+            if off + n <= self.capacity:
+                frame = bytes(self._buf[_HDR + off : _HDR + off + n])
+            else:
+                frame = bytes(self._read_copy(pos + 8, n))
+            self._set_tail(pos + 8 + n)
+            return frame
+        # leases outstanding (nested pop during a batch drain): read at the
+        # cursor and defer the tail advance behind the older leases
+        lease = self.try_pop_view()
+        if lease is None:
+            return None
+        frame = bytes(lease.view)
+        self._release(lease, strict=False)
         return frame
 
     def close(self) -> None:
+        self._segments.clear()
         self._buf = None
-        self._shm.close()
+        try:
+            self._shm.close()
+        except BufferError:
+            # a leased view still references the mapping; keep the segment
+            # object alive (the OS reclaims the mapping at process exit)
+            # rather than crash teardown or warn from a doomed __del__
+            _leaked_segments.append(self._shm)
 
     def unlink(self) -> None:
         try:
@@ -126,7 +417,13 @@ def _ring_name(prefix: str, src: int, dst: int) -> str:
 
 
 class ShmEndpoint(CommBackend):
-    """Attaches to the rings of one node: n-1 inbound, n-1 outbound."""
+    """Attaches to the rings of one node: n-1 inbound, n-1 outbound.
+
+    ``recv_many`` hands out leased zero-copy views (``zero_copy_recv`` is
+    set); callers return the window space with ``release()``.
+    """
+
+    zero_copy_recv = True
 
     def __init__(self, prefix: str, node_id: int, num_nodes: int):
         self.node_id = node_id
@@ -142,10 +439,19 @@ class ShmEndpoint(CommBackend):
             if src != node_id
         }
         self._rr = sorted(self._in)  # round-robin poll order
+        self._leases: list[RingLease] = []  # issued by recv_many, unreleased
+        # a frame must fit one ring (8-byte length prefix included)
+        self.max_frame_nbytes = (
+            min(r.capacity for r in self._out.values()) - 8 if self._out else None
+        )
 
     def send(self, dst: int, frame) -> None:
         self._check_dst(dst)
         self._out[dst].push(frame)
+
+    def send_many(self, dst: int, frames) -> None:
+        self._check_dst(dst)
+        self._out[dst].push_many(frames)
 
     def recv(self, timeout: float | None = None) -> bytes | None:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -161,7 +467,38 @@ class ShmEndpoint(CommBackend):
             # adaptive backoff: hot-spin briefly (latency), then yield
             time.sleep(0 if spins < 2048 else 1e-4)
 
+    def recv_many(self, max_frames: int = 64, timeout: float | None = None) -> list:
+        """Up to ``max_frames`` leased frame views, ``[]`` on timeout.
+
+        One ``pop_many`` (= one eventual tail store) per non-empty inbound
+        ring; views stay valid until :meth:`release`.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        spins = 0
+        while True:
+            views: list = []
+            for src in self._rr:
+                lease = self._in[src].pop_many(max_frames - len(views))
+                if lease is not None:
+                    self._leases.append(lease)
+                    views.extend(lease.views)
+                    if len(views) >= max_frames:
+                        break
+            if views:
+                return views
+            spins += 1
+            if deadline is not None and time.monotonic() > deadline:
+                return []
+            time.sleep(0 if spins < 2048 else 1e-4)
+
+    def release(self) -> None:
+        leases, self._leases = self._leases, []
+        for lease in leases:
+            if not lease.released:
+                lease.release()
+
     def close(self) -> None:
+        self._leases.clear()
         for r in self._out.values():
             r.close()
         for r in self._in.values():

@@ -5,6 +5,16 @@ listener plus one reader thread per inbound connection feeding a single
 inbox.  Slowest backend, but the only one that crosses machine boundaries —
 used in tests to prove the wire protocol is process-image independent
 (heterogeneous binaries: a worker launched as a fresh interpreter).
+
+Hot path:
+
+* sends are *gathered* — ``sendmsg`` writes ``len || frame`` (and, for
+  ``send_many``, a whole batch of them) in one syscall with no
+  concatenation copy;
+* the reader is *buffered* — one big ``recv_into`` per syscall, then every
+  complete frame in the buffer is sliced out, so under load one syscall
+  yields many frames; frames larger than the buffer are streamed straight
+  into their own allocation (no repeated buffer growth).
 """
 
 from __future__ import annotations
@@ -14,22 +24,34 @@ import socket
 import struct
 import threading
 
-from repro.comm.base import CommBackend, Fabric
+from repro.comm.base import CommBackend, Fabric, as_byte_view as _as_view
 from repro.core.errors import CommError
 
 _LEN = struct.Struct("<Q")
+_RECV_BUF = 1 << 18  # reader syscall granularity
+_IOV_BATCH = 512     # conservative cap under Linux IOV_MAX (1024)
 
 
-def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
-    buf = bytearray(n)
-    view = memoryview(buf)
-    got = 0
+def _recv_exact_into(sock: socket.socket, view: memoryview, got: int = 0) -> bool:
+    n = view.nbytes
     while got < n:
         k = sock.recv_into(view[got:], n - got)
         if k == 0:
-            return None
+            return False
         got += k
-    return bytes(buf)
+    return True
+
+
+def _sendv(sock: socket.socket, buffers: list) -> None:
+    """Gathered send of all ``buffers``, handling partial writes."""
+    views = [_as_view(b) for b in buffers]
+    while views:
+        sent = sock.sendmsg(views[:_IOV_BATCH])
+        while views and sent >= views[0].nbytes:
+            sent -= views[0].nbytes
+            views.pop(0)
+        if sent and views:
+            views[0] = views[0][sent:]
 
 
 class SocketEndpoint(CommBackend):
@@ -47,6 +69,7 @@ class SocketEndpoint(CommBackend):
         self._inbox: queue.SimpleQueue = queue.SimpleQueue()
         self._out: dict[int, socket.socket] = {}
         self._out_lock = threading.Lock()
+        self._send_locks: dict[int, threading.Lock] = {}
         self._closing = threading.Event()
 
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -70,16 +93,40 @@ class SocketEndpoint(CommBackend):
             ).start()
 
     def _read_loop(self, conn: socket.socket) -> None:
+        """Buffered reader: one recv syscall can yield many frames."""
+        pending = bytearray()
+        scratch = memoryview(bytearray(_RECV_BUF))
         try:
             while True:
-                hdr = _recv_exact(conn, _LEN.size)
-                if hdr is None:
+                k = conn.recv_into(scratch)
+                if k == 0:
                     return
-                (n,) = _LEN.unpack(hdr)
-                frame = _recv_exact(conn, n)
-                if frame is None:
-                    return
-                self._inbox.put(frame)
+                pending += scratch[:k]
+                # slice out every complete frame already in the buffer
+                mv = memoryview(pending)
+                total = len(pending)
+                off = 0
+                while total - off >= _LEN.size:
+                    (n,) = _LEN.unpack_from(mv, off)
+                    if total - off - _LEN.size < n:
+                        break
+                    self._inbox.put(bytes(mv[off + 8 : off + 8 + n]))
+                    off += 8 + n
+                mv.release()
+                if off:
+                    del pending[:off]
+                # oversized frame: stream the remainder straight into its
+                # final buffer instead of growing `pending` chunk by chunk
+                if len(pending) >= _LEN.size:
+                    (n,) = _LEN.unpack_from(pending, 0)
+                    if n > _RECV_BUF:
+                        frame = bytearray(n)
+                        have = len(pending) - 8
+                        frame[:have] = memoryview(pending)[8:]
+                        del pending[:]
+                        if not _recv_exact_into(conn, memoryview(frame), have):
+                            return
+                        self._inbox.put(frame)
         except OSError:
             return
 
@@ -88,28 +135,51 @@ class SocketEndpoint(CommBackend):
             sock = self._out.get(dst)
             if sock is not None:
                 return sock
-            sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            # the peer's listener may not be up yet: bounded retry
+            # the peer's listener may not be up yet (a fresh-interpreter
+            # worker can take seconds to import): time-bounded retry, and a
+            # mid-handshake abort/reset gets a fresh socket rather than
+            # escaping the loop
             import time
 
-            for attempt in range(200):
+            deadline = time.monotonic() + 15.0
+            while True:
+                sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 try:
                     sock.connect((self._host, self._base_port + dst))
                     break
-                except ConnectionRefusedError:
+                except (ConnectionRefusedError, ConnectionAbortedError,
+                        ConnectionResetError, TimeoutError):
+                    sock.close()
+                    if time.monotonic() > deadline:
+                        raise CommError(f"cannot connect to node {dst}") from None
                     time.sleep(0.02)
-            else:
-                raise CommError(f"cannot connect to node {dst}")
             self._out[dst] = sock
+            self._send_locks[dst] = threading.Lock()
             return sock
 
     def send(self, dst: int, frame) -> None:
         self._check_dst(dst)
         sock = self._connect(dst)
-        data = bytes(frame)
+        mv = _as_view(frame)
         try:
-            sock.sendall(_LEN.pack(len(data)) + data)
+            with self._send_locks[dst]:
+                _sendv(sock, [_LEN.pack(mv.nbytes), mv])
+        except OSError as e:
+            raise CommError(f"send to node {dst} failed: {e}") from e
+
+    def send_many(self, dst: int, frames) -> None:
+        """One gathered syscall per ~256 frames: ``len||frame`` iovec pairs."""
+        self._check_dst(dst)
+        sock = self._connect(dst)
+        iov: list = []
+        for frame in frames:
+            mv = _as_view(frame)
+            iov.append(_LEN.pack(mv.nbytes))
+            iov.append(mv)
+        try:
+            with self._send_locks[dst]:
+                _sendv(sock, iov)
         except OSError as e:
             raise CommError(f"send to node {dst} failed: {e}") from e
 
@@ -118,6 +188,19 @@ class SocketEndpoint(CommBackend):
             return self._inbox.get(timeout=timeout)
         except queue.Empty:
             return None
+
+    def recv_many(self, max_frames: int = 64, timeout: float | None = None) -> list:
+        """Drain up to ``max_frames`` from the inbox (frames are owned)."""
+        try:
+            out = [self._inbox.get(timeout=timeout)]
+        except queue.Empty:
+            return []
+        while len(out) < max_frames:
+            try:
+                out.append(self._inbox.get_nowait())
+            except queue.Empty:
+                break
+        return out
 
     def close(self) -> None:
         self._closing.set()
@@ -140,12 +223,15 @@ class SocketFabric(Fabric):
     def __init__(self, num_nodes: int, base_port: int = 0, host: str = "127.0.0.1"):
         self.num_nodes = num_nodes
         self.host = host
-        if base_port == 0:
-            # pick a free contiguous region by binding a probe socket
+        while base_port == 0:
+            # pick a free contiguous region by binding a probe socket;
+            # re-probe if the region would run past the port range
             probe = socket.socket()
             probe.bind((host, 0))
-            base_port = probe.getsockname()[1] + 1000
+            candidate = probe.getsockname()[1] + 1000
             probe.close()
+            if candidate + num_nodes <= 65535:
+                base_port = candidate
         self.base_port = base_port
         self._endpoints: dict[int, SocketEndpoint] = {}
 

@@ -16,6 +16,30 @@ Header layout (32 bytes, little-endian):
     u32  src_node     sender node id (for replies / reverse offload)
     u64  msg_id       correlates replies with futures
     u64  payload_len  bytes following the header
+
+Batched-frame segment layout (the coalesced hot path)
+-----------------------------------------------------
+
+Transports move frames either one at a time (``send``/``recv``) or
+coalesced (``send_many``/``recv_many``).  On the wire a coalesced batch is
+simply the concatenation of the per-frame transport encodings — for the shm
+ring and the socket stream that is::
+
+    u64 len_0 || frame_0 || u64 len_1 || frame_1 || ... || u64 len_{n-1} || frame_{n-1}
+
+i.e. exactly what ``n`` individual sends would produce, so batching is a
+pure *publication* optimisation (one ring-counter store / one syscall per
+batch instead of per frame) and the receiver cannot tell — and need not
+care — how the sender grouped frames.  ``decode_fast`` is called once per
+frame on a zero-copy view into the receive window; ``payload_len`` is
+validated against the view so a short/corrupt segment cannot silently
+alias a neighbouring frame's bytes.
+
+Zero-copy lifetime rule: payload views returned by :func:`decode_fast` /
+:func:`split_frame` alias the frame.  When the frame itself is a leased
+transport view (see ``repro.comm.shm``), the view is only valid until the
+lease is released — anything that outlives dispatch (futures, retained
+arrays) must copy first.
 """
 
 from __future__ import annotations
@@ -114,13 +138,25 @@ def encode_frame(
 
 def decode_fast(frame):
     """Hot-path decode: (key, flags, src_node, msg_id, payload_view) tuple,
-    no dataclass allocation.  Validation reduced to the magic check."""
-    magic, _version, flags, key, src_node, msg_id, payload_len = (
-        HEADER_STRUCT.unpack_from(frame, 0)
-    )
+    no dataclass allocation.  Validation reduced to the magic check plus a
+    payload-length bounds check (a truncated frame must fail loudly here —
+    a silently short memoryview would surface as a corrupt argument deep
+    inside a handler)."""
+    try:
+        magic, _version, flags, key, src_node, msg_id, payload_len = (
+            HEADER_STRUCT.unpack_from(frame, 0)
+        )
+    except struct.error as e:
+        raise MessageFormatError(f"frame shorter than header: {e}") from None
     if magic != MAGIC:
         raise MessageFormatError(f"bad magic 0x{magic:08x}")
-    return key, flags, src_node, msg_id, memoryview(frame)[
+    view = memoryview(frame)
+    if view.nbytes - HEADER_NBYTES < payload_len:
+        raise MessageFormatError(
+            f"truncated frame: header says {payload_len} payload bytes, "
+            f"frame carries {view.nbytes - HEADER_NBYTES}"
+        )
+    return key, flags, src_node, msg_id, view[
         HEADER_NBYTES : HEADER_NBYTES + payload_len
     ]
 

@@ -133,6 +133,11 @@ def register_migratable(
 
     ``nbytes_fixed`` enables use in *static* handler specs (fixed wire size);
     without it the type is only usable on the dynamic path.
+
+    ``encode`` must be deterministic (same value -> same bytes, in particular
+    the same length): the dynamic pack path measures frames with one encode
+    call and packs with another, so a length that varies between calls would
+    corrupt the frame.
     """
     name = type_name or f"{py_type.__module__}:{py_type.__qualname__}"
     codec = _Codec(name, py_type, encode, decode, nbytes_fixed)
@@ -313,78 +318,161 @@ _T_DICT = 9
 _T_CUSTOM = 10
 
 
-def _pack_into(out: bytearray, value: Any) -> None:
+def _as_flat_view(value) -> memoryview:
+    """1-D uint8 memoryview of any bytes-like, without copying when possible."""
+    mv = value if isinstance(value, memoryview) else memoryview(value)
+    if mv.format != "B" or mv.ndim != 1:
+        try:
+            mv = mv.cast("B")
+        except TypeError:  # non-contiguous exotic view: flatten via a copy
+            mv = memoryview(bytes(mv))
+    return mv
+
+
+def dynamic_nbytes(value: Any) -> int:
+    """Exact packed size of ``value`` under the dynamic encoding.
+
+    A cheap measuring pre-pass mirroring :func:`pack_dynamic_into`'s dispatch
+    order, so frames can be allocated at their final size up front — no
+    bytearray growth reallocs (which cost an extra full copy or two on
+    multi-megabyte put/get payloads).
+    """
     if value is None:
-        out.append(_T_NONE)
-    elif isinstance(value, (bool, np.bool_)):
-        out.append(_T_BOOL)
-        out.append(1 if value else 0)
-    elif isinstance(value, (int, np.integer)):
-        out.append(_T_INT)
-        out += struct.pack("<q", int(value))
-    elif isinstance(value, (float, np.floating)):
-        out.append(_T_FLOAT)
-        out += struct.pack("<d", float(value))
-    elif isinstance(value, (bytes, bytearray, memoryview)):
-        raw = bytes(value)
-        out.append(_T_BYTES)
-        out += struct.pack("<Q", len(raw))
-        out += raw
-    elif isinstance(value, str):
-        raw = value.encode("utf-8")
-        out.append(_T_STR)
-        out += struct.pack("<Q", len(raw))
-        out += raw
-    elif codec_for(value) is not None:
-        codec = codec_for(value)
+        return 1
+    if isinstance(value, (bool, np.bool_)):
+        return 2
+    if isinstance(value, (int, np.integer)):
+        return 9
+    if isinstance(value, (float, np.floating)):
+        return 9
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        return 9 + _as_flat_view(value).nbytes
+    if isinstance(value, str):
+        return 9 + len(value.encode("utf-8"))
+    codec = codec_for(value)
+    if codec is not None:
         name = codec.type_name.encode("utf-8")
-        raw = codec.encode(value)
-        out.append(_T_CUSTOM)
-        out += struct.pack("<H", len(name))
-        out += name
-        out += struct.pack("<Q", len(raw))
-        out += raw
-    elif hasattr(value, "shape") and hasattr(value, "dtype"):
-        arr = np.ascontiguousarray(np.asarray(value))
-        if arr.dtype.kind not in "biufcV":
-            raise NotBitwiseMigratableError(f"cannot migrate dtype {arr.dtype}")
-        dt = arr.dtype.str.encode("ascii")  # includes endianness, e.g. '<f4'
-        out.append(_T_NDARRAY)
-        out.append(len(dt))
-        out += dt
-        out.append(arr.ndim)
-        for d in arr.shape:
-            out += struct.pack("<Q", d)
-        # bulk leaf: single copy via the buffer protocol (no tobytes temp)
-        out += arr.reshape(-1).view(np.uint8).data
-    elif isinstance(value, list):
-        out.append(_T_LIST)
-        out += struct.pack("<Q", len(value))
-        for item in value:
-            _pack_into(out, item)
-    elif isinstance(value, tuple):
-        out.append(_T_TUPLE)
-        out += struct.pack("<Q", len(value))
-        for item in value:
-            _pack_into(out, item)
-    elif isinstance(value, dict):
-        out.append(_T_DICT)
-        out += struct.pack("<Q", len(value))
+        return 11 + len(name) + len(codec.encode(value))
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.asarray(value)
+        return (
+            3
+            + len(arr.dtype.str)
+            + 8 * arr.ndim
+            + arr.size * arr.dtype.itemsize
+        )
+    if isinstance(value, (list, tuple)):
+        return 9 + sum(dynamic_nbytes(v) for v in value)
+    if isinstance(value, dict):
+        n = 9
         for k, v in value.items():
             if not isinstance(k, str):
                 raise MigratableError("dynamic dict keys must be str")
-            _pack_into(out, k)
-            _pack_into(out, v)
-    else:
-        raise NotBitwiseMigratableError(
-            f"type {type(value).__qualname__} has no migratable codec"
-        )
+            n += dynamic_nbytes(k) + dynamic_nbytes(v)
+        return n
+    raise NotBitwiseMigratableError(
+        f"type {type(value).__qualname__} has no migratable codec"
+    )
+
+
+def pack_dynamic_into(buf: bytearray, off: int, value: Any) -> int:
+    """Pack ``value`` into presized ``buf`` at ``off``; returns the end offset.
+
+    ``buf`` must have at least :func:`dynamic_nbytes` bytes of room after
+    ``off`` — callers allocate the frame once (header + payload) and pack in
+    place, which is the zero-intermediate-copy fast path the transports
+    build on.
+    """
+    if value is None:
+        buf[off] = _T_NONE
+        return off + 1
+    if isinstance(value, (bool, np.bool_)):
+        buf[off] = _T_BOOL
+        buf[off + 1] = 1 if value else 0
+        return off + 2
+    if isinstance(value, (int, np.integer)):
+        buf[off] = _T_INT
+        struct.pack_into("<q", buf, off + 1, int(value))
+        return off + 9
+    if isinstance(value, (float, np.floating)):
+        buf[off] = _T_FLOAT
+        struct.pack_into("<d", buf, off + 1, float(value))
+        return off + 9
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        mv = _as_flat_view(value)
+        n = mv.nbytes
+        buf[off] = _T_BYTES
+        struct.pack_into("<Q", buf, off + 1, n)
+        off += 9
+        buf[off : off + n] = mv
+        return off + n
+    if isinstance(value, str):
+        raw = value.encode("utf-8")
+        buf[off] = _T_STR
+        struct.pack_into("<Q", buf, off + 1, len(raw))
+        off += 9
+        buf[off : off + len(raw)] = raw
+        return off + len(raw)
+    codec = codec_for(value)
+    if codec is not None:
+        name = codec.type_name.encode("utf-8")
+        raw = codec.encode(value)
+        buf[off] = _T_CUSTOM
+        struct.pack_into("<H", buf, off + 1, len(name))
+        off += 3
+        buf[off : off + len(name)] = name
+        off += len(name)
+        struct.pack_into("<Q", buf, off, len(raw))
+        off += 8
+        buf[off : off + len(raw)] = raw
+        return off + len(raw)
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.asarray(value)
+        if arr.dtype.kind not in "biufcV":
+            raise NotBitwiseMigratableError(f"cannot migrate dtype {arr.dtype}")
+        dt = arr.dtype.str.encode("ascii")  # includes endianness, e.g. '<f4'
+        buf[off] = _T_NDARRAY
+        buf[off + 1] = len(dt)
+        off += 2
+        buf[off : off + len(dt)] = dt
+        off += len(dt)
+        buf[off] = arr.ndim
+        off += 1
+        for d in arr.shape:
+            struct.pack_into("<Q", buf, off, d)
+            off += 8
+        nb = arr.size * arr.dtype.itemsize
+        if nb:
+            # bulk leaf: single copy straight into the frame (no tobytes temp)
+            dst = np.frombuffer(buf, np.uint8, count=nb, offset=off)
+            np.copyto(dst, np.ascontiguousarray(arr).reshape(-1).view(np.uint8))
+        return off + nb
+    if isinstance(value, (list, tuple)):
+        buf[off] = _T_LIST if isinstance(value, list) else _T_TUPLE
+        struct.pack_into("<Q", buf, off + 1, len(value))
+        off += 9
+        for item in value:
+            off = pack_dynamic_into(buf, off, item)
+        return off
+    if isinstance(value, dict):
+        buf[off] = _T_DICT
+        struct.pack_into("<Q", buf, off + 1, len(value))
+        off += 9
+        for k, v in value.items():
+            if not isinstance(k, str):
+                raise MigratableError("dynamic dict keys must be str")
+            off = pack_dynamic_into(buf, off, k)
+            off = pack_dynamic_into(buf, off, v)
+        return off
+    raise NotBitwiseMigratableError(
+        f"type {type(value).__qualname__} has no migratable codec"
+    )
 
 
 def pack_dynamic(value: Any) -> bytes:
     """Self-describing encoding of a pytree of migratable leaves."""
-    out = bytearray()
-    _pack_into(out, value)
+    out = bytearray(dynamic_nbytes(value))
+    pack_dynamic_into(out, 0, value)
     return bytes(out)
 
 

@@ -1,0 +1,14 @@
+"""Version-compatibility shims for Pallas-TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and grew
+``jax.sharding.AxisType``) across 0.4 -> 0.5; the kernels support both so the
+suite runs on whichever jax the image bakes in.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)

@@ -24,6 +24,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 
@@ -89,7 +91,7 @@ def decode_attention(q, k, v, lengths, *, block_k=512, interpret=False):
             pltpu.VMEM((qpk, 1), jnp.float32),
             pltpu.VMEM((qpk, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _ssd_kernel(x_ref, dt_ref, ll_ref, b_ref, c_ref, h0_ref, y_ref, hN_ref,
                 h_ref, *, L, nc):
@@ -98,7 +100,7 @@ def ssd_chunked_kernel(x, dt, loglam, Bm, Cm, h0=None, *, chunk=256,
             jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

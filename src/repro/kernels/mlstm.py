@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 
 def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
                   h_ref, cN_ref, nN_ref, mN_ref, C_ref, n_ref, m_ref, *,
@@ -141,7 +143,7 @@ def mlstm_chunked_kernel(q, k, v, i_pre, f_pre, state=None, *, chunk=256,
             pltpu.VMEM((1, dk), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

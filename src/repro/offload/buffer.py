@@ -79,6 +79,11 @@ class BufferRegistry:
             raise OffloadError(f"dangling buffer handle {ptr.handle}")
         return arr
 
+    def flat(self, ptr: BufferPtr) -> np.ndarray:
+        """1-D zero-copy view of a buffer — the put/get data plane addresses
+        buffers by flat element offset (chunked transfers slice this view)."""
+        return self.deref(ptr).reshape(-1)
+
     def free(self, ptr: BufferPtr) -> None:
         with self._lock:
             if self._buffers.pop(ptr.handle, None) is None:

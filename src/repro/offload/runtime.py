@@ -9,6 +9,23 @@ One :class:`NodeRuntime` per process/thread-node:
   frame carries a ``msg_id`` the result is packed and sent back as a REPLY
   frame (errors as REPLY|ERROR with the remote traceback).
 
+Hot path (the paper's Fig. 3 metric is this module's cost):
+
+* the event loop drains frames in *batches* via ``recv_many`` — on
+  zero-copy transports (shm rings) the frames are leased views into the
+  receive window, decoded in place and only copied when something outlives
+  the dispatch (a reply resolving a future, a non-direct execution policy);
+* replies and oneway sends produced while draining a batch are parked in an
+  egress queue and flushed as one coalesced ``send_many`` per destination —
+  one transport publication per drain iteration instead of per message;
+* frames are packed at their exact final size (header + measured payload)
+  so multi-megabyte put/get payloads see a single copy into the frame.
+
+Handlers receive argument views that alias the inbound frame.  On leased
+transports those views die when the batch is released, so a handler that
+*retains* a payload (stores an array, returns it by reference) must copy —
+everything else rides the bitwise fast path copy-free.
+
 Internal handlers (registered at import, i.e. "static initialisation", with
 explicit names so they sort deterministically — cf. the paper's
 ``terminate_functor`` appearing in its Fig. 7 dump):
@@ -27,9 +44,13 @@ offloaded user code dereferences :class:`BufferPtr` arguments and how
 from __future__ import annotations
 
 import contextvars
+import sys
 import threading
+import time
 import traceback
 from typing import Any
+
+import numpy as np
 
 from repro.comm.base import CommBackend
 from repro.core import migratable as mig
@@ -46,15 +67,78 @@ from repro.core.message import (
     MAGIC,
     VERSION,
     decode_fast,
-    encode_frame,
 )
-from repro.core.migratable import _pack_into, static_payload_nbytes
+from repro.core.migratable import static_payload_nbytes
 from repro.core.registry import HandlerTable, default_registry
 from repro.offload.buffer import BufferPtr, BufferRegistry
 
 _current_node: contextvars.ContextVar["NodeRuntime | None"] = contextvars.ContextVar(
     "ham_current_node", default=None
 )
+
+_DRAIN_BATCH = 64  # frames pulled per recv_many in the event loop
+_BIG_FRAME = 1 << 16  # above this, frames come from the pooled allocator
+
+
+class _FramePool:
+    """Refcount-checked reuse of large frame buffers.
+
+    Freshly ``np.empty``-allocated multi-megabyte frames pay a page-fault
+    storm on first touch (~40 us/MB); reusing warm buffers removes it.  A
+    pooled buffer is handed out again only when *nothing outside the pool*
+    references its backing array — transports drop their reference once the
+    frame is delivered, while a reply frame pinned by a zero-copy result
+    array stays referenced (and therefore un-reusable) until the caller
+    drops the result.  The refcount check makes reuse safe without any
+    explicit free protocol.
+    """
+
+    def __init__(self, max_items: int = 8):
+        self._items: list[np.ndarray] = []
+        self._max = max_items
+        self._lock = threading.Lock()
+
+    def take(self, nbytes: int) -> memoryview:
+        with self._lock:
+            # index-based scan: enumerate() would reuse its yield tuple and
+            # keep a hidden extra reference to the candidate, breaking the
+            # refcount test.  A free buffer is referenced exactly by the pool
+            # list, the local `arr`, and getrefcount's argument => 3.
+            for i in range(len(self._items)):
+                arr = self._items[i]
+                if arr.nbytes >= nbytes and sys.getrefcount(arr) == 3:
+                    self._items.append(self._items.pop(i))  # LRU to the back
+                    return memoryview(arr)[:nbytes]
+        # round up so slightly-different frame sizes share buffers
+        alloc = (nbytes + 0xFFFF) & ~0xFFFF
+        arr = np.empty(alloc, dtype=np.uint8)
+        with self._lock:
+            self._items.append(arr)
+            if len(self._items) > self._max:
+                # evict the oldest *free* buffer (busy ones must stay tracked)
+                for i in range(len(self._items)):
+                    old = self._items[i]
+                    if sys.getrefcount(old) == 3:
+                        del self._items[i]
+                        break
+        return memoryview(arr)[:nbytes]
+
+
+_frame_pool = _FramePool()
+
+
+def _alloc_frame(nbytes: int):
+    """Writable frame buffer of ``nbytes``.
+
+    ``bytearray(n)`` zero-fills — a full extra memory pass on multi-megabyte
+    put/get payloads that the packer immediately overwrites.  Large frames
+    therefore come from the (uninitialised, refcount-pooled) numpy allocator,
+    wrapped in a memoryview so every consumer sees a flat byte buffer; small
+    frames stay bytearray (lower constant cost).
+    """
+    if nbytes >= _BIG_FRAME:
+        return _frame_pool.take(nbytes)
+    return bytearray(nbytes)
 
 
 def current_node() -> "NodeRuntime":
@@ -81,19 +165,24 @@ def _h_free(node_id, handle):
 
 
 def _h_put(node_id, handle, offset, array):
-    buf = current_node().buffers.deref(BufferPtr(node_id, handle))
-    flat = buf.reshape(-1)
+    # `array` may alias the inbound frame (zero-copy unpack); the slice
+    # assignment below is the single payload copy of the put path
+    flat = current_node().buffers.flat(BufferPtr(node_id, handle))
     n = array.size
-    flat[offset : offset + n] = array.reshape(-1).astype(buf.dtype, copy=False)
+    flat[offset : offset + n] = array.reshape(-1).astype(flat.dtype, copy=False)
     return None
 
 
 def _h_get(node_id, handle, offset, count):
-    buf = current_node().buffers.deref(BufferPtr(node_id, handle))
-    flat = buf.reshape(-1)
+    node = current_node()
+    # return VIEWS: the reply is packed (= copied) before this handler's
+    # dispatch ends, so the get path pays exactly one payload copy
+    if count < 0 and not offset:
+        return node.buffers.deref(BufferPtr(node_id, handle))  # keeps shape
+    flat = node.buffers.flat(BufferPtr(node_id, handle))
     if count < 0:
-        return flat[offset:].copy() if offset else buf.copy()
-    return flat[offset : offset + count].copy()
+        return flat[offset:]
+    return flat[offset : offset + count]
 
 
 def _h_ping(token):
@@ -103,7 +192,8 @@ def _h_ping(token):
 def _h_forward(dst, frame_bytes):
     """Relay an embedded frame one hop (offload over fabric).  The final
     target replies straight to the origin recorded in the inner header."""
-    current_node().endpoint.send(dst, frame_bytes)
+    node = current_node()
+    node._send_frame(dst, frame_bytes)
     return None
 
 
@@ -154,7 +244,14 @@ class NodeRuntime:
         self.inline = inline
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self.stats = {"handled": 0, "replies": 0, "errors": 0, "sent": 0}
+        self._sync_seq = 0  # inline futureless-sync sequence counter
+        # egress coalescing: replies/oneways emitted while the event-loop
+        # thread drains a batch are grouped into one send_many per dst
+        self._egress: list[tuple[int, Any]] = []
+        self._draining = False
+        self._loop_tid: int | None = None
+        self.stats = {"handled": 0, "replies": 0, "errors": 0, "sent": 0,
+                      "batches": 0}
 
     # -- sending ------------------------------------------------------------
 
@@ -167,9 +264,42 @@ class NodeRuntime:
         """Fire-and-forget (msg_id 0 => no reply)."""
         self._send_request(dst, function, 0)
 
+    def _send_frame(self, dst: int, frame) -> None:
+        """Transport egress: coalesced while the loop thread drains a batch,
+        immediate otherwise (user threads never see queueing)."""
+        cap = getattr(self.endpoint, "max_frame_nbytes", None)
+        if cap is not None and len(frame) > cap:
+            # fail fast, HERE: parking an oversized frame in the egress queue
+            # would defer the error past the handler's error-reply wrapping
+            from repro.core.errors import CommError
+
+            raise CommError(
+                f"frame of {len(frame)} bytes exceeds transport frame "
+                f"capacity {cap}"
+            )
+        if self._draining and threading.get_ident() == self._loop_tid:
+            self._egress.append((dst, frame))
+        else:
+            self.endpoint.send(dst, frame)
+
+    def _flush_egress(self) -> None:
+        if not self._egress or threading.get_ident() != self._loop_tid:
+            return
+        egress, self._egress = self._egress, []
+        if len(egress) == 1:
+            dst, frame = egress[0]
+            self.endpoint.send(dst, frame)
+            return
+        by_dst: dict[int, list] = {}
+        for dst, frame in egress:
+            by_dst.setdefault(dst, []).append(frame)
+        for dst, frames in by_dst.items():
+            self.endpoint.send_many(dst, frames)
+
     def _send_request(self, dst: int, function: Function, msg_id: int) -> None:
-        # zero-extra-copy frame assembly: payload is packed straight into
-        # the frame buffer after the 32-byte header (the bitwise fast path)
+        # zero-extra-copy frame assembly: the frame is allocated at its exact
+        # final size and the payload packed straight in after the 32-byte
+        # header (the bitwise fast path; no bytearray growth reallocs)
         record = function.record
         key = self.table.key_of(record.stable_name)
         if record.is_static:
@@ -179,13 +309,14 @@ class NodeRuntime:
                             out=memoryview(frame)[HEADER_NBYTES:])
             flags = 0
         else:
-            frame = bytearray(HEADER_NBYTES)
-            _pack_into(frame, list(function.args))
-            n = len(frame) - HEADER_NBYTES
+            args = list(function.args)
+            n = mig.dynamic_nbytes(args)
+            frame = _alloc_frame(HEADER_NBYTES + n)
+            mig.pack_dynamic_into(frame, HEADER_NBYTES, args)
             flags = FLAG_DYNAMIC
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags, key,
                                 self.node_id, msg_id, n)
-        self.endpoint.send(dst, frame)
+        self._send_frame(dst, frame)
         self.stats["sent"] += 1
 
     def send_sync(self, dst: int, function: Function, timeout: float | None = 30.0):
@@ -199,16 +330,15 @@ class NodeRuntime:
         """Futureless fast path (the Fig. 3 configuration): the caller
         thread polls its endpoint for the reply — no Future allocation, no
         Event wakeup, no table lock.  Interleaved requests still execute."""
-        _time = __import__("time")
-        self._sync_seq = getattr(self, "_sync_seq", 0) + 1
+        self._sync_seq += 1
         msg_id = 0x8000_0000_0000_0000 | self._sync_seq
         self._send_request(dst, function, msg_id)
         recv = self.endpoint.recv
-        deadline = None if timeout is None else _time.monotonic() + timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             frame = recv(timeout=0.1)
             if frame is None:
-                if deadline is not None and _time.monotonic() > deadline:
+                if deadline is not None and time.monotonic() > deadline:
                     raise TimeoutError("inline sync offload timed out")
                 continue
             key, flags, src, mid, payload = decode_fast(frame)
@@ -225,13 +355,15 @@ class NodeRuntime:
         """Caller-thread polling: the lowest-latency mode (no wakeup hop).
         Interleaved inbound requests are still served, so reverse offload
         works even in inline mode."""
-        import time
-
+        # a handler waiting mid-batch must not deadlock on its own parked
+        # egress (e.g. a request it just sent): push it out before blocking
+        self._flush_egress()
         deadline = None if timeout is None else time.monotonic() + timeout
         while not fut.done():
             frame = self.endpoint.recv(timeout=0.1)
             if frame is not None:
                 self._handle_frame(frame)
+                self._flush_egress()
             elif deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError("inline sync offload timed out")
         return fut.get(0)
@@ -249,11 +381,15 @@ class NodeRuntime:
 
     # -- receiving ------------------------------------------------------------
 
-    def _handle_frame(self, frame: bytes) -> None:
-        # hot path: the paper's metric is exactly this function's cost
+    def _handle_frame(self, frame, owned: bool = True) -> None:
+        # hot path: the paper's metric is exactly this function's cost.
+        # ``owned=False`` marks a leased transport view: anything escaping
+        # this call (futures, deferred execution) must copy first.
         key, flags, src, msg_id, payload = decode_fast(frame)
         if flags & FLAG_REPLY:
             self.stats["replies"] += 1
+            if not owned:
+                payload = bytes(payload)  # escapes into the future table
             if flags & FLAG_ERROR:
                 err = mig.unpack_dynamic(payload)
                 self.futures.reject(msg_id, err["msg"], err.get("tb", ""))
@@ -262,8 +398,11 @@ class NodeRuntime:
             return
         record = self.table.handler_at(key)
         if type(self.policy) is DirectPolicy:  # skip the closure on the hot path
+            # executes before the lease is released — views are safe in place
             self._execute(record, key, src, msg_id, payload)
         else:
+            if not owned:
+                payload = bytes(payload)  # outlives the drain iteration
             self.policy.submit(lambda: self._execute(record, key, src, msg_id,
                                                      payload))
 
@@ -277,32 +416,73 @@ class NodeRuntime:
             except Exception as e:  # noqa: BLE001 — remote errors must travel
                 self.stats["errors"] += 1
                 if msg_id:
-                    err_payload = mig.pack_dynamic(
-                        {"msg": f"{type(e).__name__}: {e}", "tb": traceback.format_exc()}
-                    )
-                    self.endpoint.send(
-                        src,
-                        encode_frame(key, err_payload, src_node=self.node_id,
-                                     msg_id=msg_id, flags=FLAG_REPLY | FLAG_ERROR),
-                    )
+                    self._send_reply(src, key, msg_id,
+                                     {"msg": f"{type(e).__name__}: {e}",
+                                      "tb": traceback.format_exc()},
+                                     FLAG_REPLY | FLAG_ERROR)
                 return
             if msg_id:
-                frame = bytearray(HEADER_NBYTES)
-                _pack_into(frame, result)
-                HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, FLAG_REPLY,
-                                        key, self.node_id, msg_id,
-                                        len(frame) - HEADER_NBYTES)
-                self.endpoint.send(src, frame)
+                try:
+                    self._send_reply(src, key, msg_id, result, FLAG_REPLY)
+                except Exception as e:  # noqa: BLE001 — e.g. reply exceeds the
+                    # transport frame limit: the caller must get an error, not
+                    # a dead worker and a timeout
+                    self.stats["errors"] += 1
+                    self._send_reply(
+                        src, key, msg_id,
+                        {"msg": f"{type(e).__name__}: {e}",
+                         "tb": traceback.format_exc()},
+                        FLAG_REPLY | FLAG_ERROR,
+                    )
         finally:
             _current_node.reset(token)
+
+    def _send_reply(self, dst: int, key: int, msg_id: int, result, flags) -> None:
+        n = mig.dynamic_nbytes(result)
+        frame = _alloc_frame(HEADER_NBYTES + n)
+        mig.pack_dynamic_into(frame, HEADER_NBYTES, result)
+        HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags,
+                                key, self.node_id, msg_id, n)
+        self._send_frame(dst, frame)
 
     # -- event loop -----------------------------------------------------------
 
     def run(self, poll_timeout: float = 0.1) -> None:
+        """Batch-drain event loop: pull up to ``_DRAIN_BATCH`` frames per
+        ``recv_many``, dispatch them (decoding in place from leased views on
+        zero-copy transports), release the lease, then flush the coalesced
+        egress — one transport publication per drain iteration."""
+        ep = self.endpoint
+        leased = getattr(ep, "zero_copy_recv", False)
+        self._loop_tid = threading.get_ident()
         while not self._stop.is_set():
-            frame = self.endpoint.recv(timeout=poll_timeout)
-            if frame is not None:
-                self._handle_frame(frame)
+            frames = ep.recv_many(_DRAIN_BATCH, timeout=poll_timeout)
+            if not frames:
+                continue
+            self.stats["batches"] += 1
+            self._draining = True
+            try:
+                for frame in frames:
+                    try:
+                        self._handle_frame(frame, owned=not leased)
+                    except Exception:  # noqa: BLE001 — a poison frame must
+                        # not kill the event loop (remaining frames, futures
+                        # and peers all depend on it staying alive)
+                        self.stats["errors"] += 1
+                        traceback.print_exc()
+            finally:
+                self._draining = False
+                # drop frame refs BEFORE blocking in the next recv_many:
+                # holding them would pin pooled frame buffers (and leased
+                # ring space) across the idle wait
+                frame = frames = None
+                ep.release()  # return window space before the egress flush
+                try:
+                    self._flush_egress()
+                except Exception:  # noqa: BLE001 — a failed send must not
+                    # take down the loop; peers/futures depend on it
+                    self.stats["errors"] += 1
+                    traceback.print_exc()
 
     def start(self) -> "NodeRuntime":
         if self.inline:

@@ -89,6 +89,221 @@ def test_shm_ring_full_detection():
         ring.unlink()
 
 
+# -- zero-copy lease protocol -------------------------------------------------
+
+
+def test_shm_pop_view_aliases_ring_buffer():
+    """The leased payload view must BE ring memory — no per-frame copy."""
+    ring = ShmRing("test_ring_alias", capacity=1 << 12, create=True)
+    try:
+        reader = ShmRing("test_ring_alias")
+        ring.push(b"\xaa" * 32)
+        lease = reader.try_pop_view()
+        assert bytes(lease.view) == b"\xaa" * 32
+        # mutate the shared segment underneath the view: an aliasing view
+        # observes the store, a copied frame cannot
+        from repro.comm.shm import _HDR
+
+        off = reader._tail() + 8  # frame data begins after the u64 length
+        reader._buf[_HDR + off] = 0x55
+        assert lease.view[0] == 0x55
+        lease.release()
+        assert reader._tail() == reader._head()
+        del lease
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_zero_copy_wraparound_and_input_types():
+    """Zero-copy push accepts bytes/bytearray/memoryview; frames straddling
+    the wrap boundary still roundtrip (reassembled into a scratch copy)."""
+    ring = ShmRing("test_ring_zcwrap", capacity=1 << 12, create=True)
+    try:
+        reader = ShmRing("test_ring_zcwrap")
+        for i in range(64):
+            payload = bytes([i]) * 1500  # >1/3 ring: forces wrap handling
+            src = (payload, bytearray(payload), memoryview(payload))[i % 3]
+            ring.push(src, timeout=1.0)
+            lease = reader.try_pop_view()
+            assert lease is not None
+            assert bytes(lease.view) == payload
+            lease.release()
+            del lease
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_lease_backpressure():
+    """Ring space is only reclaimed on release — an unreleased lease keeps
+    the producer blocked even though the frame was consumed."""
+    ring = ShmRing("test_ring_bp", capacity=1 << 10, create=True)
+    try:
+        reader = ShmRing("test_ring_bp")
+        ring.push(b"x" * 900, timeout=0.1)
+        lease = reader.try_pop_view()
+        assert lease is not None
+        with pytest.raises(CommError):  # popped but NOT released: still full
+            ring.push(b"y" * 900, timeout=0.05)
+        lease.release()
+        ring.push(b"y" * 900, timeout=0.5)  # space reclaimed
+        lease2 = reader.try_pop_view()
+        assert bytes(lease2.view) == b"y" * 900
+        lease2.release()
+        del lease, lease2
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_lease_out_of_order_release_rejected():
+    ring = ShmRing("test_ring_ooo", capacity=1 << 12, create=True)
+    try:
+        reader = ShmRing("test_ring_ooo")
+        ring.push(b"first")
+        ring.push(b"second")
+        a = reader.try_pop_view()
+        b = reader.try_pop_view()
+        with pytest.raises(CommError):
+            b.release()  # younger lease first: rejected
+        a.release()
+        b.release()  # now in order
+        with pytest.raises(CommError):
+            b.release()  # double release
+        del a, b
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_push_many_pop_many_batch():
+    """N frames move under one head store / one lease (one tail store)."""
+    ring = ShmRing("test_ring_batch", capacity=1 << 14, create=True)
+    try:
+        reader = ShmRing("test_ring_batch")
+        frames = [bytes([i]) * (i + 1) for i in range(50)]
+        ring.push_many(frames, timeout=1.0)
+        lease = reader.pop_many(max_frames=64)
+        assert [bytes(v) for v in lease.views] == frames
+        assert reader._tail() == 0  # nothing reclaimed until release
+        lease.release()
+        assert reader._tail() == reader._head()
+        # batches larger than the ring are split transparently
+        big = [b"z" * 3000 for _ in range(12)]  # 12*3008 > 16 KiB ring
+        got = []
+
+        def consume():
+            r2 = ShmRing("test_ring_batch")
+            while len(got) < 12:
+                ls = r2.pop_many()
+                if ls is not None:
+                    got.extend(bytes(v) for v in ls.views)
+                    ls.release()
+            ls = None  # drop the last views before unmapping
+            r2.close()
+
+        t = threading.Thread(target=consume)
+        t.start()
+        ring.push_many(big, timeout=5.0)
+        t.join(timeout=10)
+        assert got == big
+        del lease
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_send_many_recv_many_roundtrip(fabric):
+    """Coalesced batch API delivers the same frames, in order, per pair —
+    on every backend (native batching on shm/socket, loop on local)."""
+    a, b = fabric.endpoint(0), fabric.endpoint(1)
+    frames = [bytes([i % 256]) * (1 + i % 97) for i in range(300)]
+    a.send_many(1, frames)
+    got = []
+    deadline = 300
+    while len(got) < len(frames) and deadline:
+        batch = b.recv_many(max_frames=64, timeout=5)
+        got.extend(bytes(f) for f in batch)
+        batch = None  # leased views must not outlive the fabric
+        b.release()
+        deadline -= 1
+    assert got == frames
+
+
+def test_shm_nested_pop_with_outstanding_lease():
+    """A copying try_pop while a lease is outstanding (the handler-recursing-
+    into-recv case) must not corrupt FIFO order or the tail counter."""
+    ring = ShmRing("test_ring_nested", capacity=1 << 12, create=True)
+    try:
+        reader = ShmRing("test_ring_nested")
+        ring.push(b"leased")
+        ring.push(b"copied")
+        ring.push(b"after")
+        lease = reader.try_pop_view()
+        assert bytes(lease.view) == b"leased"
+        assert reader.try_pop() == b"copied"  # deferred behind the lease
+        assert reader._tail() == 0  # nothing reclaimed yet
+        lease.release()
+        assert reader.try_pop() == b"after"
+        assert reader._tail() == reader._head()
+        del lease
+        reader.close()
+    finally:
+        ring.close()
+        ring.unlink()
+
+
+def test_shm_cross_process_wrap_heavy_frames():
+    """Regression: true cross-process traffic with frames near half the ring
+    (constant wrap + counter churn) must never desync the consumer's frame
+    walk.  CPython can tear 8-byte counter stores on shared memory; the ring
+    publishes each counter twice and readers require a stable pair."""
+    import multiprocessing
+
+    cap = 1 << 20
+    ring = ShmRing("test_ring_xproc", capacity=cap, create=True)
+
+    def produce():
+        w = ShmRing("test_ring_xproc")
+        payload = bytes(range(256)) * 1800  # ~460KB: wraps almost every frame
+        for i in range(40):
+            w.push_many([bytes([i]) + payload])
+        w.close()
+
+    p = multiprocessing.get_context("fork").Process(target=produce)
+    p.start()
+    try:
+        got = 0
+        expect_payload = bytes(range(256)) * 1800
+        import time as _t
+
+        deadline = _t.monotonic() + 30
+        while got < 40:
+            assert _t.monotonic() < deadline, f"stalled at frame {got}"
+            lease = ring.pop_many(8)
+            if lease is None:
+                continue
+            for v in lease.views:
+                assert v.nbytes == 1 + len(expect_payload)
+                assert v[0] == got
+                assert bytes(v[1:]) == expect_payload
+                got += 1
+            lease.release()
+        p.join(timeout=10)
+        assert p.exitcode == 0
+    finally:
+        if p.is_alive():
+            p.terminate()
+        ring.close()
+        ring.unlink()
+
+
 def test_shm_concurrent_producer_consumer():
     ring = ShmRing("test_ring_spsc", capacity=1 << 16, create=True)
     out = []

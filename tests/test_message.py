@@ -1,7 +1,7 @@
 """Frame/header codec invariants."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import repro.core as ham
 from repro.core import message as msg
@@ -39,6 +39,23 @@ def test_truncated_frame_rejected():
         msg.split_frame(frame[: msg.HEADER_NBYTES + 3])
     with pytest.raises(ham.MessageFormatError):
         msg.decode_header(frame[:10])
+
+
+def test_decode_fast_rejects_truncated_payload():
+    """Regression: decode_fast must bounds-check payload_len — a truncated
+    frame used to yield a silently short memoryview."""
+    frame = msg.encode_frame(1, b"hello world", msg_id=7)
+    # intact frame decodes fine
+    key, flags, src, msg_id, payload = msg.decode_fast(frame)
+    assert (key, msg_id, bytes(payload)) == (1, 7, b"hello world")
+    # frame cut mid-payload: must raise, not return a short view
+    with pytest.raises(ham.MessageFormatError):
+        msg.decode_fast(frame[: msg.HEADER_NBYTES + 4])
+    with pytest.raises(ham.MessageFormatError):
+        msg.decode_fast(bytes(frame)[: msg.HEADER_NBYTES + 4])
+    # frame cut mid-header: must also raise cleanly
+    with pytest.raises(ham.MessageFormatError):
+        msg.decode_fast(frame[:10])
 
 
 def test_flags_semantics():

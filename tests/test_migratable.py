@@ -2,8 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_compat import given, settings, st
+from _hypothesis_compat import hnp
 
 import repro.core as ham
 from repro.core import migratable as mig

@@ -52,6 +52,82 @@ def test_sync_offload(dom):
     assert dom.sync(1, _f2f(dom.registry, "t/double", 21)) == 42
 
 
+def test_chunked_put_get_roundtrip():
+    """Large WIRE-path transfers split into pipelined segments reassemble
+    exactly (direct_data_plane off so the chunking machinery actually runs)."""
+    reg = _make_registry()
+    dom = OffloadDomain.local(2, registry=reg)
+    dom.direct_data_plane = False
+    try:
+        n = 1 << 16
+        ptr = dom.allocate(1, (n,), "float64")
+        arr = np.arange(n, dtype=np.float64)
+        dom.put(arr, ptr, chunk_nbytes=1 << 14)  # force 32 in-flight segments
+        np.testing.assert_array_equal(dom.get(ptr), arr)
+        part = dom.get(ptr, offset=100, count=1000, chunk_count=128)
+        np.testing.assert_array_equal(part, arr[100:1100])
+        dom.free(ptr)
+    finally:
+        dom.shutdown()
+
+
+def test_oversized_reply_errors_instead_of_killing_worker():
+    """A reply that exceeds the transport frame limit must come back as a
+    RemoteExecutionError — not silently kill the worker's event loop and
+    strand the caller in a timeout."""
+    from repro.comm.shm import ShmFabric
+    from repro.core.registry import default_registry
+    from repro.offload.worker import spawn_shm_workers
+
+    # forked workers re-init the default registry, so the host must use it
+    # too (same-source assumption): internal _ham handlers are enough here
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    fab = ShmFabric(2, capacity=1 << 20)  # 1 MB rings
+    procs = spawn_shm_workers(fab, [1])
+    dom = OffloadDomain(fab, registry=reg)
+    try:
+        assert dom.ping(1, 3, timeout=20.0) == 3
+        n = (1 << 21) // 8  # 2 MB buffer
+        ptr = dom.allocate(1, (n,), "float64")
+        dom.put(np.ones(n), ptr)  # put auto-chunks to the ring size
+        with pytest.raises(ham.RemoteExecutionError, match="capacity"):
+            dom.get(ptr)  # unchunked 2 MB reply cannot fit a 1 MB ring
+        # the worker survived and still serves requests
+        assert dom.ping(1, 7, timeout=10.0) == 7
+        got = dom.get(ptr, count=n, chunk_count=(1 << 19) // 8)
+        assert got.size == n and got[0] == 1.0
+        dom.free(ptr)
+    finally:
+        dom.shutdown()
+        for p in procs:
+            p.join(timeout=5)
+
+
+def test_direct_and_wire_data_plane_agree(dom):
+    """The in-process direct data plane and the wire path are observationally
+    identical (shape, dtype, offsets, partial reads)."""
+    arr = np.arange(512, dtype=np.float64).reshape(32, 16)
+    ptr = dom.allocate(1, arr.shape, "float64")
+    assert dom.direct_data_plane  # default on for in-process workers
+    dom.put(arr, ptr)
+    direct = dom.get(ptr)
+    direct_part = dom.get(ptr, offset=8, count=100)
+    dom.direct_data_plane = False
+    wire = dom.get(ptr)
+    wire_part = dom.get(ptr, offset=8, count=100)
+    dom.direct_data_plane = True
+    assert direct.shape == wire.shape == arr.shape
+    np.testing.assert_array_equal(direct, wire)
+    np.testing.assert_array_equal(direct, arr)
+    np.testing.assert_array_equal(direct_part, wire_part)
+    # results are snapshots, not live views into the buffer
+    dom.put(np.zeros_like(arr), ptr)
+    np.testing.assert_array_equal(direct, arr)
+    dom.free(ptr)
+
+
 def test_async_futures_complete_out_of_order(dom):
     futs = [dom.async_(1 + (i % 2), _f2f(dom.registry, "t/double", i))
             for i in range(10)]

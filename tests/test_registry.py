@@ -1,7 +1,7 @@
 """Registry determinism — the paper's core guarantee (§5.2)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import repro.core as ham
 from repro.core.registry import HandlerRegistry
