@@ -94,10 +94,14 @@ def _frames_per_sec(kind: str, factor: int, n_frames: int) -> float:
     return n_frames / dt
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     fps: dict[str, dict[str, float]] = {}
-    for kind, n_frames in (("shm", 128 * 1024), ("socket", 32 * 1024)):
+    sizes = (
+        (("shm", 4 * 1024), ("socket", 1024)) if smoke
+        else (("shm", 128 * 1024), ("socket", 32 * 1024))
+    )
+    for kind, n_frames in sizes:
         fps[kind] = {}
         for factor in FACTORS:
             rate = _frames_per_sec(kind, factor, n_frames)
@@ -111,12 +115,12 @@ def run() -> list[tuple[str, float, str]]:
     from benchmarks import putget
 
     putget_us: dict[str, float] = {}
-    for name, us, note in putget.run():
+    for name, us, note in putget.run(smoke=smoke):
         short = name.split("/", 1)[1]
         putget_us[short] = round(us, 1)
         rows.append((f"batching/{name}", us, note))
 
-    putget_median_us = putget.run_median()
+    putget_median_us = putget.run_median(smoke=smoke)
     for name, us in putget_median_us.items():
         rows.append((f"batching/putget/{name}_median", us, ""))
 
@@ -134,6 +138,7 @@ def run() -> list[tuple[str, float, str]]:
     }
     report = {
         "schema": "hotpath-v1",
+        "smoke": smoke,
         "frame_nbytes": FRAME_NBYTES,
         "frames_per_sec": {
             kind: {f: round(v, 1) for f, v in per.items()}

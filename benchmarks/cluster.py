@@ -1,0 +1,116 @@
+"""Cluster scheduler throughput: pipelined vs serial offload dispatch.
+
+Sweeps scheduling policy x worker count over a thread-worker pool whose
+handler sleeps a fixed per-call service time (a stand-in for device-side
+work — like compiled jax steps, it releases the GIL, so workers genuinely
+overlap).  Two drive modes per configuration:
+
+* ``serial``    — the pre-cluster pattern: one call in flight, wait the
+  round trip, repeat.  Throughput is pinned near 1/service_time no matter
+  how many workers exist.
+* ``pipelined`` — the scheduler keeps up to ``max_inflight`` calls in
+  flight per worker (credit-based flow control) and completions are
+  harvested with ``as_completed``; throughput scales with the pool.
+
+Writes ``BENCH_cluster.json`` with the sweep and the PR's acceptance check:
+pipelined >= 2x serial at 4 workers.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import repro.cluster.pool  # noqa: F401 — registers _cluster/* pre-init
+from repro.cluster import ClusterPool, Scheduler, as_completed
+from repro.core.closure import f2f
+from repro.core.registry import default_registry
+
+_REPO_ROOT = Path(__file__).resolve().parents[1]
+_JSON_PATH = _REPO_ROOT / "BENCH_cluster.json"
+
+SLEEP_S = 0.002            # per-call service time on the worker
+CALLS = 256                # calls per measured configuration
+NODE_COUNTS = (1, 2, 4)
+POLICIES = ("round_robin", "least_outstanding")
+MAX_INFLIGHT = 16
+
+
+def _throughput(policy: str, num_workers: int, calls: int, sleep_s: float,
+                pipelined: bool) -> float:
+    """Calls/sec of one configuration (fresh pool per run)."""
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    pool = ClusterPool.local(num_workers, registry=reg)
+    try:
+        sched = Scheduler(pool, policy=policy, max_inflight=MAX_INFLIGHT)
+        fn = f2f("_cluster/sleep", sleep_s, registry=reg)
+        # warmup: one round trip per worker (connects + primes the loop)
+        for node in pool.worker_nodes:
+            sched.submit(fn, node=node).get(10)
+        t0 = time.perf_counter()
+        if pipelined:
+            futs = [sched.submit(fn) for _ in range(calls)]
+            for f in as_completed(futs, timeout=120):
+                f.get(0)
+        else:
+            for _ in range(calls):
+                sched.submit(fn).get(30)
+        dt = time.perf_counter() - t0
+        return calls / dt
+    finally:
+        pool.close()
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    calls = 32 if smoke else CALLS
+    sleep_s = SLEEP_S
+    rows: list[tuple[str, float, str]] = []
+    sweep: dict[str, dict] = {}
+    for policy in POLICIES:
+        sweep[policy] = {}
+        for workers in NODE_COUNTS:
+            serial = _throughput(policy, workers, max(8, calls // 4),
+                                 sleep_s, pipelined=False)
+            piped = _throughput(policy, workers, calls, sleep_s,
+                                pipelined=True)
+            speedup = piped / serial
+            sweep[policy][str(workers)] = {
+                "serial_calls_per_s": round(serial, 1),
+                "pipelined_calls_per_s": round(piped, 1),
+                "speedup": round(speedup, 2),
+            }
+            rows.append((
+                f"cluster/{policy}_w{workers}_pipelined", 1e6 / piped,
+                f"{piped:,.0f} calls/s ({speedup:.1f}x vs serial)",
+            ))
+    accept = {
+        policy: sweep[policy]["4"]["speedup"] >= 2.0 for policy in POLICIES
+    }
+    report = {
+        "schema": "cluster-v1",
+        "service_time_s": sleep_s,
+        "calls": calls,
+        "max_inflight": MAX_INFLIGHT,
+        "smoke": smoke,
+        "sweep": sweep,
+        "acceptance": {
+            "pipelined_ge_2x_serial_at_4_workers": accept,
+        },
+    }
+    _JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    for policy in POLICIES:
+        rows.append((
+            f"cluster/{policy}_4w_speedup", sweep[policy]["4"]["speedup"],
+            f"-> {_JSON_PATH.name}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    for name, val, note in run(smoke="--smoke" in sys.argv):
+        print(f"{name},{val:.3f},{note}")

@@ -103,16 +103,17 @@ def bench_switch_scaling(sizes=(2, 16, 64, 256), dim=256) -> list[tuple[int, flo
     return out
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
-    sw = bench_switch_table()
-    dd = bench_dict_dispatch()
+    k = 2 if smoke else 8
+    sw = bench_switch_table(num_handlers=k)
+    dd = bench_dict_dispatch(num_handlers=k)
     rt = bench_retrace()
-    rows.append(("dispatch/switch_table", sw, "HAM device table, 8 branches"))
+    rows.append(("dispatch/switch_table", sw, f"HAM device table, {k} branches"))
     rows.append(("dispatch/dict_jitted", dd, "executable swap per call"))
     rows.append(("dispatch/retrace", rt, "re-jit per call"))
     rows.append(("dispatch/SPEEDUP_vs_retrace", rt / sw, "ratio"))
-    for k, us in bench_switch_scaling():
+    for k, us in bench_switch_scaling(sizes=(2, 16) if smoke else (2, 16, 64, 256)):
         rows.append((f"dispatch/switch_{k}_branches", us, "O(1) table scaling"))
     return rows
 

@@ -15,6 +15,7 @@ validation criterion is a large HAM-vs-naive ratio on identical transport.
 from __future__ import annotations
 
 import statistics
+import sys
 import time
 
 import repro.offload.demo_handlers  # noqa: F401  (registers demo/empty*)
@@ -24,7 +25,11 @@ from repro.comm.socket import SocketFabric
 from repro.core.closure import f2f
 from repro.core.registry import default_registry
 from repro.offload.api import OffloadDomain
-from repro.offload.worker import spawn_shm_workers, spawn_socket_worker_subprocess
+from repro.offload.worker import (
+    reap,
+    spawn_shm_workers,
+    spawn_socket_worker_subprocess,
+)
 
 from benchmarks import naive_rpc
 
@@ -73,14 +78,16 @@ def bench_ham_local_inline(n=2000) -> float:
 def bench_ham_shm(n=1000) -> float:
     _ensure_init()
     fabric = ShmFabric(2)
-    procs = spawn_shm_workers(fabric, [1],
-                              setup_modules=["repro.offload.demo_handlers"])
-    dom = OffloadDomain(fabric, inline_host=True)
-    call = f2f("demo/empty_static")
-    us = _median_us(lambda: dom.sync(1, call), n)
-    dom.shutdown()
-    for p in procs:
-        p.join(5)
+    # setup_modules auto-derived from the host registry: whatever modules
+    # registered handlers here get imported by the worker too (same-source)
+    procs = spawn_shm_workers(fabric, [1])
+    try:
+        dom = OffloadDomain(fabric, inline_host=True)
+        call = f2f("demo/empty_static")
+        us = _median_us(lambda: dom.sync(1, call), n)
+        dom.shutdown()
+    finally:
+        reap(procs)
     return us
 
 
@@ -88,15 +95,17 @@ def bench_ham_socket(n=1000) -> float:
     _ensure_init()
     fabric = SocketFabric(2)
     fabric.endpoint(0)
-    proc = spawn_socket_worker_subprocess(
-        1, 2, fabric.base_port, ["repro.offload.demo_handlers"]
-    )
-    dom = OffloadDomain(fabric, inline_host=True)
-    dom.ping(1, timeout=30.0)  # wait for interpreter start
-    call = f2f("demo/empty_static")
-    us = _median_us(lambda: dom.sync(1, call), n)
-    dom.shutdown()
-    proc.wait(10)
+    proc = spawn_socket_worker_subprocess(1, 2, fabric.base_port)
+    try:
+        dom = OffloadDomain(fabric, inline_host=True)
+        dom.ping(1, timeout=30.0)  # wait for interpreter start
+        call = f2f("demo/empty_static")
+        us = _median_us(lambda: dom.sync(1, call), n)
+        dom.shutdown()
+    finally:
+        # reap even on failure: an orphaned worker would hold the CI step's
+        # output pipe open and hang the job
+        reap([proc])
     return us
 
 
@@ -149,22 +158,28 @@ def bench_payload_pair(nbytes=1 << 20, n=300):
     return ham_us, naive_us
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    # smoke: one-repeat-class sizes so CI can execute every code path fast
+    n_fast = 40 if smoke else 2000
+    n_proc = 20 if smoke else 1000
     rows = []
-    local_inline = bench_ham_local_inline()
+    local_inline = bench_ham_local_inline(n_fast)
     rows.append(("offload/ham_local_inline", local_inline, "empty fn RTT"))
-    rows.append(("offload/ham_local", bench_ham_local(), "empty fn RTT"))
-    rows.append(("offload/ham_shm", bench_ham_shm(), "forked worker"))
-    rows.append(("offload/ham_socket", bench_ham_socket(), "fresh interpreter"))
-    naive_local = bench_naive_local()
+    rows.append(("offload/ham_local", bench_ham_local(n_fast), "empty fn RTT"))
+    rows.append(("offload/ham_shm", bench_ham_shm(n_proc), "forked worker"))
+    rows.append(("offload/ham_socket", bench_ham_socket(n_proc),
+                 "fresh interpreter"))
+    naive_local = bench_naive_local(n_fast)
     rows.append(("offload/naive_local", naive_local, "pickle+name lookup"))
-    naive_socket = bench_naive_socket()
+    naive_socket = bench_naive_socket(20 if smoke else 500)
     rows.append(("offload/naive_socket", naive_socket, "pickle+name lookup"))
     rows.append(
         ("offload/RATIO_naive_over_ham_empty", naive_local / local_inline,
          "same-transport control (see dispatch/* for the vendor-class gap)")
     )
-    ham_mb, naive_mb = bench_payload_pair()
+    ham_mb, naive_mb = bench_payload_pair(
+        nbytes=1 << 16 if smoke else 1 << 20, n=10 if smoke else 300
+    )
     rows.append(("offload/ham_1MB_args", ham_mb, "typed bitwise payload"))
     rows.append(("offload/naive_1MB_args", naive_mb, "pickled payload"))
     rows.append(("offload/RATIO_naive_over_ham_1MB", naive_mb / ham_mb, ""))
@@ -172,5 +187,5 @@ def run() -> list[tuple[str, float, str]]:
 
 
 if __name__ == "__main__":
-    for name, val, note in run():
+    for name, val, note in run(smoke="--smoke" in sys.argv):
         print(f"{name},{val:.2f},{note}")

@@ -18,7 +18,12 @@ from repro.core.registry import default_registry
 from repro.offload.api import OffloadDomain
 
 
-def run() -> list[tuple[str, float, str]]:
+#: (nbytes, label) per measured transfer size; smoke trims to the smallest
+_SIZES = ((1 << 16, "64KB"), (1 << 22, "4MB"), (1 << 26, "64MB"))
+_SIZES_SMOKE = ((1 << 16, "64KB"),)
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     reg = default_registry()
     if not reg.initialised:
         reg.init()
@@ -27,11 +32,11 @@ def run() -> list[tuple[str, float, str]]:
     for wire in (False, True):
         dom.direct_data_plane = not wire
         prefix = "wire_" if wire else ""
-        for nbytes, label in ((1 << 16, "64KB"), (1 << 22, "4MB"), (1 << 26, "64MB")):
+        for nbytes, label in (_SIZES_SMOKE if smoke else _SIZES):
             arr = np.random.default_rng(1).standard_normal(nbytes // 8)
             ptr = dom.allocate(1, arr.shape, "float64")
             t0 = time.perf_counter()
-            reps = max(4, (1 << 27) // nbytes)  # >=32 reps at 4MB
+            reps = 1 if smoke else max(4, (1 << 27) // nbytes)  # >=32 at 4MB
             for _ in range(reps):
                 dom.put(arr, ptr)
             dt = (time.perf_counter() - t0) / reps
@@ -48,7 +53,7 @@ def run() -> list[tuple[str, float, str]]:
     return rows
 
 
-def run_median() -> dict[str, float]:
+def run_median(smoke: bool = False) -> dict[str, float]:
     """Median us per put/get call, one timing sample per call.
 
     Reports the default (direct in-process) data plane and the wire path
@@ -59,11 +64,15 @@ def run_median() -> dict[str, float]:
         reg.init()
     dom = OffloadDomain.local(2)
     out: dict[str, float] = {}
+    size_reps = (
+        ((1 << 16, "64KB", 3),) if smoke
+        else ((1 << 16, "64KB", 400), (1 << 22, "4MB", 48),
+              (1 << 26, "64MB", 8))
+    )
     for wire in (False, True):
         dom.direct_data_plane = not wire
         prefix = "wire_" if wire else ""
-        for nbytes, label, reps in ((1 << 16, "64KB", 400), (1 << 22, "4MB", 48),
-                                    (1 << 26, "64MB", 8)):
+        for nbytes, label, reps in size_reps:
             arr = np.random.default_rng(1).standard_normal(nbytes // 8)
             ptr = dom.allocate(1, arr.shape, "float64")
             for op, fn in (("put", lambda: dom.put(arr, ptr)),

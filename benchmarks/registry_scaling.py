@@ -42,13 +42,15 @@ def bench_lookup(n: int, calls=20000) -> tuple[float, float]:
     return t_key, t_handler
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
-    for n in (100, 1000, 10000):
+    sizes = (100, 1000) if smoke else (100, 1000, 10000)
+    for n in sizes:
         rows.append((f"registry/init_{n}", bench_init(n), "sort+key assignment"))
-    tk, th = bench_lookup(10000)
-    rows.append(("registry/key_of", tk, "type->key, 10k handlers"))
-    rows.append(("registry/handler_at", th, "key->handler, 10k handlers"))
+    big = sizes[-1]
+    tk, th = bench_lookup(big, calls=200 if smoke else 20000)
+    rows.append(("registry/key_of", tk, f"type->key, {big} handlers"))
+    rows.append(("registry/handler_at", th, f"key->handler, {big} handlers"))
     return rows
 
 

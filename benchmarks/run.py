@@ -8,6 +8,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
 * ``registry/*``   — §5.2 init/lookup complexity
 * ``serialise/*``  — static bitwise pack vs self-describing vs pickle
 * ``putget/*``     — offload data-plane bandwidth
+* ``cluster/*``    — pipelined scheduler throughput vs serial round trips
+
+``--smoke`` runs every section at tiny sizes with one repeat — a CI
+tripwire, not a measurement: the ``BENCH_*.json`` files it writes are
+uploaded as PR artifacts so perf regressions leave a trace, but only
+full runs produce comparable numbers.
 
 Roofline terms per (arch × shape × mesh) are produced by the dry-run
 (``python -m repro.launch.dryrun --all``), not here — they need the
@@ -16,13 +22,20 @@ Roofline terms per (arch × shape × mesh) are produced by the dry-run
 
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    args = argparse.ArgumentParser(description=__doc__)
+    args.add_argument("--smoke", action="store_true",
+                      help="tiny sizes, 1 repeat (CI tripwire)")
+    opts = args.parse_args(argv)
+
     from benchmarks import (
         batching,
+        cluster,
         device_dispatch,
         offload_overhead,
         putget,
@@ -37,13 +50,14 @@ def main() -> None:
         ("serialisation", serialisation.run),
         ("putget", putget.run),
         ("batching (coalesced hot path -> BENCH_hotpath.json)", batching.run),
+        ("cluster (scheduler pipelining -> BENCH_cluster.json)", cluster.run),
     ]
     failures = 0
     print("name,us_per_call,derived")
     for title, fn in sections:
         print(f"# --- {title} ---")
         try:
-            for name, val, note in fn():
+            for name, val, note in fn(smoke=opts.smoke):
                 print(f"{name},{val:.3f},{note}", flush=True)
         except Exception:  # noqa: BLE001
             failures += 1

@@ -27,31 +27,36 @@ def _median_us(fn, n=2000, warmup=100) -> float:
     return statistics.median(ts)
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rows = []
-    for size, label in ((64, "64B"), (64 * 1024, "64KB"), (4 * 1024 * 1024, "4MB")):
+    sizes = (
+        ((64, "64B"),) if smoke
+        else ((64, "64B"), (64 * 1024, "64KB"), (4 * 1024 * 1024, "4MB"))
+    )
+    n = 20 if smoke else 2000
+    for size, label in sizes:
         arr = np.random.default_rng(0).standard_normal(size // 8)
         args = (arr, 3, 2.5)
         specs = tuple(mig.spec_of(a) for a in args)
         rows.append((
             f"serialise/static_pack_{label}",
-            _median_us(lambda: mig.pack_static(args, specs)),
+            _median_us(lambda: mig.pack_static(args, specs), n),
             f"{size}B payload",
         ))
         rows.append((
             f"serialise/dynamic_pack_{label}",
-            _median_us(lambda: mig.pack_dynamic(list(args))),
+            _median_us(lambda: mig.pack_dynamic(list(args)), n),
             "self-describing TLV",
         ))
         rows.append((
             f"serialise/pickle_{label}",
-            _median_us(lambda: pickle.dumps(args)),
+            _median_us(lambda: pickle.dumps(args), n),
             "vendor-analogue",
         ))
         payload = mig.pack_static(args, specs)
         rows.append((
             f"serialise/static_unpack_{label}",
-            _median_us(lambda: mig.unpack_static(payload, specs)),
+            _median_us(lambda: mig.unpack_static(payload, specs), n),
             "zero-copy views",
         ))
     return rows

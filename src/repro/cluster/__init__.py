@@ -1,0 +1,19 @@
+"""Cluster layer: worker pools + policy scheduling over the offload runtime.
+
+``ClusterPool`` owns worker lifecycle (spawn/attach, liveness, restart,
+reap); ``Scheduler`` routes ``async_offload`` calls by policy with
+credit-based flow control and fails over on worker death.  See the module
+docstrings for the policy and backpressure contracts.
+"""
+
+from repro.cluster.pool import ClusterPool, register_cluster_handlers
+from repro.cluster.scheduler import POLICIES, Scheduler, as_completed, gather
+
+__all__ = [
+    "ClusterPool",
+    "Scheduler",
+    "POLICIES",
+    "as_completed",
+    "gather",
+    "register_cluster_handlers",
+]

@@ -1,0 +1,428 @@
+"""Cluster worker pool: lifecycle + liveness for a set of HAM offload nodes.
+
+HAM-Offload (paper §2) targets one hand-picked node per call; this module
+supplies the fleet underneath a :class:`~repro.cluster.scheduler.Scheduler`:
+
+* :class:`ClusterPool` owns one fabric's worth of workers — in-process
+  threads (``local``), forked processes over shared-memory rings (``shm``,
+  the SCIF/DMA analogue), or fresh interpreters over TCP (``socket``, the
+  heterogeneous-binaries case);
+* a monitor thread watches liveness and announces deaths to subscribers
+  (the scheduler fails that node's in-flight futures and reroutes);
+* dead workers can be restarted in place (``auto_restart=True`` or an
+  explicit :meth:`ClusterPool.restart`): the fabric drops frames queued
+  toward the corpse, the host endpoint forgets stale transport state, and a
+  replacement attaches under the same node id;
+* :meth:`ClusterPool.close` reaps every child and tears the fabric down —
+  together with ``ShmFabric``'s atexit unlink this is the fix for the
+  ``/dev/shm`` segment leak when a child dies mid-run.
+
+Fault-injection helpers (``kill``) are first-class: a scheduler that cannot
+be tested against a dying worker cannot be trusted with one.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.comm.local import LocalFabric
+from repro.core.closure import f2f
+from repro.core.errors import RegistrySealedError
+from repro.core.executor import DirectPolicy
+from repro.core.registry import default_registry
+from repro.offload.api import OffloadDomain
+from repro.offload.runtime import NodeRuntime
+from repro.offload.worker import (
+    reap,
+    spawn_shm_workers,
+    spawn_socket_worker_subprocess,
+)
+
+
+# --------------------------------------------------------------------------
+# pool-exercisable handlers (registered at import = static initialisation,
+# like runtime's _ham/* set) — used by benchmarks and liveness tests
+# --------------------------------------------------------------------------
+
+
+def _h_sleep(seconds):
+    """Blocking I/O stand-in: holds a worker busy without burning CPU."""
+    time.sleep(float(seconds))
+    return float(seconds)
+
+
+def _h_spin(n):
+    """CPU-bound stand-in: a bounded arithmetic loop."""
+    x = 0
+    for i in range(int(n)):
+        x += i
+    return x
+
+
+def _h_touch(ptr):
+    """Data-local stand-in: dereference a buffer_ptr and reduce it — only
+    executable on the owning node, so it exercises locality routing."""
+    from repro.offload.api import deref
+
+    return float(deref(ptr).sum())
+
+
+def _h_reset_peer(node_id):
+    """Drop this node's cached transport toward a restarted peer — relays
+    (offload over fabric) cache worker->worker connections the host's own
+    reset cannot reach."""
+    from repro.offload.runtime import current_node
+
+    current_node().endpoint.reset_peer(int(node_id))
+    return None
+
+
+def register_cluster_handlers(registry=None) -> None:
+    """Register the pool's demo/probe handlers.  Safe to call repeatedly;
+    silently skipped on an already-sealed registry (then callers must have
+    registered these before ``init()`` themselves)."""
+    reg = registry or default_registry()
+    for name, fn in (
+        ("_cluster/sleep", _h_sleep),
+        ("_cluster/spin", _h_spin),
+        ("_cluster/touch", _h_touch),
+        ("_cluster/reset_peer", _h_reset_peer),
+    ):
+        try:
+            reg.register(fn, name=name)
+        except RegistrySealedError:
+            return
+
+
+register_cluster_handlers()
+
+
+# --------------------------------------------------------------------------
+# worker handles (one per launch mode)
+# --------------------------------------------------------------------------
+
+
+class _ThreadWorker:
+    """In-process worker: a NodeRuntime on its own event-loop thread."""
+
+    def __init__(self, node_id: int, runtime: NodeRuntime, pool: "ClusterPool"):
+        self.node_id = node_id
+        self.runtime = runtime
+        self._pool = pool
+
+    def alive(self) -> bool:
+        t = self.runtime._thread
+        return t is not None and t.is_alive()
+
+    def kill(self) -> None:
+        # closest analogue of a crash for a thread: stop the event loop cold
+        self.runtime.request_stop()
+
+    def reap(self, timeout: float = 5.0) -> None:
+        self.runtime.stop(timeout)
+
+    def respawn(self) -> "_ThreadWorker":
+        pool = self._pool
+        rt = NodeRuntime(
+            self.node_id,
+            pool.fabric.endpoint(self.node_id),
+            pool.domain._table,
+            policy=pool._policy_factory(),
+        ).start()
+        pool.domain._inproc[self.node_id] = rt  # direct data plane follows
+        return _ThreadWorker(self.node_id, rt, pool)
+
+
+class _ForkWorker:
+    """Forked child over shm rings (spawn_shm_workers)."""
+
+    def __init__(self, node_id: int, proc, pool: "ClusterPool"):
+        self.node_id = node_id
+        self.proc = proc
+        self._pool = pool
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def kill(self) -> None:
+        self.proc.kill()
+
+    def reap(self, timeout: float = 5.0) -> None:
+        reap([self.proc], timeout)
+
+    def respawn(self) -> "_ForkWorker":
+        pool = self._pool
+        proc = spawn_shm_workers(pool.fabric, [self.node_id],
+                                 pool._setup_modules)[0]
+        return _ForkWorker(self.node_id, proc, pool)
+
+
+class _SubprocessWorker:
+    """Fresh-interpreter child over TCP (spawn_socket_worker_subprocess)."""
+
+    def __init__(self, node_id: int, popen, pool: "ClusterPool"):
+        self.node_id = node_id
+        self.proc = popen
+        self._pool = pool
+
+    def alive(self) -> bool:
+        return self.proc.poll() is None
+
+    def kill(self) -> None:
+        self.proc.kill()
+
+    def reap(self, timeout: float = 5.0) -> None:
+        reap([self.proc], timeout)
+
+    def respawn(self) -> "_SubprocessWorker":
+        pool = self._pool
+        popen = spawn_socket_worker_subprocess(
+            self.node_id, pool.fabric.num_nodes, pool.fabric.base_port,
+            pool._setup_modules,
+        )
+        return _SubprocessWorker(self.node_id, popen, pool)
+
+
+# --------------------------------------------------------------------------
+# the pool
+# --------------------------------------------------------------------------
+
+
+class ClusterPool:
+    """Owns the workers of one offload domain and watches them.
+
+    Subscribers (``on_death`` / ``on_restart``) are called from the monitor
+    thread with the node id; the scheduler uses these to fail in-flight
+    futures and to re-admit a node into the routing set.  Callbacks must not
+    block — they run on the liveness path.
+    """
+
+    def __init__(
+        self,
+        domain: OffloadDomain,
+        workers: dict,
+        *,
+        monitor_interval: float = 0.1,
+        auto_restart: bool = False,
+        setup_modules=None,
+        policy_factory=DirectPolicy,
+    ):
+        self.domain = domain
+        self.fabric = domain.fabric
+        self.host = domain.host
+        self._workers = dict(workers)
+        self._dead: set[int] = set()
+        self._lock = threading.Lock()
+        self._death_cbs: list = []
+        self._restart_cbs: list = []
+        #: None => auto-derive from the host registry at each spawn
+        #: (registered_setup_modules), so restarts track late registrations
+        self._setup_modules = (
+            None if setup_modules is None else list(setup_modules)
+        )
+        self._policy_factory = policy_factory
+        self.auto_restart = auto_restart
+        self._closed = False
+        self._stop = threading.Event()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, args=(monitor_interval,),
+            name="ham-cluster-monitor", daemon=True,
+        )
+        self._monitor.start()
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def local(cls, num_workers: int, *, registry=None,
+              policy_factory=DirectPolicy, **kw) -> "ClusterPool":
+        """Thread workers in this process (node 0 is the host)."""
+        reg = registry or default_registry()
+        fabric = LocalFabric(num_workers + 1)
+        domain = OffloadDomain(fabric, registry=reg,
+                               policy_factory=policy_factory)
+        pool = cls.__new__(cls)
+        workers = {}
+        for node in range(1, num_workers + 1):
+            rt = NodeRuntime(node, fabric.endpoint(node), domain._table,
+                             policy=policy_factory()).start()
+            domain._inproc[node] = rt  # direct put/get shortcut stays live
+            workers[node] = _ThreadWorker(node, rt, pool)
+        pool.__init__(domain, workers, policy_factory=policy_factory, **kw)
+        return pool
+
+    @classmethod
+    def shm(cls, num_workers: int, *, registry=None, capacity: int = 1 << 24,
+            setup_modules=None, **kw) -> "ClusterPool":
+        """Forked processes over shared-memory rings.
+
+        ``setup_modules=None`` auto-derives the worker import list from the
+        host's default registry (same-source key agreement by construction).
+        """
+        from repro.comm.shm import ShmFabric
+
+        reg = registry or default_registry()
+        fabric = ShmFabric(num_workers + 1, capacity=capacity)
+        procs = spawn_shm_workers(fabric, list(range(1, num_workers + 1)),
+                                  setup_modules)
+        domain = OffloadDomain(fabric, registry=reg)
+        pool = cls.__new__(cls)
+        workers = {
+            node: _ForkWorker(node, proc, pool)
+            for node, proc in zip(range(1, num_workers + 1), procs)
+        }
+        pool.__init__(domain, workers, setup_modules=setup_modules, **kw)
+        return pool
+
+    @classmethod
+    def socket(cls, num_workers: int, *, registry=None, setup_modules=None,
+               **kw) -> "ClusterPool":
+        """Fresh-interpreter workers over loopback TCP (``setup_modules``
+        as in :meth:`shm` — None auto-derives from the host registry)."""
+        from repro.comm.socket import SocketFabric
+
+        reg = registry or default_registry()
+        fabric = SocketFabric(num_workers + 1)
+        popens = [
+            spawn_socket_worker_subprocess(node, num_workers + 1,
+                                           fabric.base_port, setup_modules)
+            for node in range(1, num_workers + 1)
+        ]
+        domain = OffloadDomain(fabric, registry=reg)
+        pool = cls.__new__(cls)
+        workers = {
+            node: _SubprocessWorker(node, popen, pool)
+            for node, popen in zip(range(1, num_workers + 1), popens)
+        }
+        pool.__init__(domain, workers, setup_modules=setup_modules, **kw)
+        return pool
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def worker_nodes(self) -> list[int]:
+        return sorted(self._workers)
+
+    def live_nodes(self) -> list[int]:
+        with self._lock:
+            return sorted(n for n in self._workers if n not in self._dead)
+
+    def is_alive(self, node: int) -> bool:
+        with self._lock:
+            return node in self._workers and node not in self._dead
+
+    def ping_all(self, timeout: float = 20.0) -> None:
+        """Round-trip every worker once (startup barrier for process pools)."""
+        for node in self.worker_nodes:
+            self.domain.ping(node, node, timeout=timeout)
+
+    # -- liveness ----------------------------------------------------------
+
+    def on_death(self, cb) -> None:
+        self._death_cbs.append(cb)
+
+    def on_restart(self, cb) -> None:
+        self._restart_cbs.append(cb)
+
+    def _monitor_loop(self, interval: float) -> None:
+        while not self._stop.wait(interval):
+            for node in self.worker_nodes:
+                with self._lock:
+                    handle = self._workers.get(node)
+                    announced = node in self._dead
+                if handle is None or announced:
+                    continue
+                if not handle.alive():
+                    self._announce_death(node)
+
+    def _announce_death(self, node: int) -> None:
+        with self._lock:
+            if node in self._dead:
+                return
+            self._dead.add(node)
+        for cb in self._death_cbs:
+            try:
+                cb(node)
+            except Exception:  # noqa: BLE001 — one bad subscriber must not
+                # stop death propagation to the others
+                import traceback
+
+                traceback.print_exc()
+        if self.auto_restart and not self._closed:
+            try:
+                self.restart(node)
+            except Exception:  # noqa: BLE001
+                import traceback
+
+                traceback.print_exc()
+
+    def kill(self, node: int) -> None:
+        """Fault injection: hard-stop a worker (no goodbye on the wire)."""
+        self._workers[node].kill()
+
+    def restart(self, node: int) -> None:
+        """Replace a dead worker in place under the same node id.
+
+        Order matters: reap the corpse, purge fabric state addressed to it
+        (queued frames belong to already-failed calls), drop the host's
+        cached transport toward it, then attach the replacement and announce.
+        """
+        with self._lock:
+            handle = self._workers[node]
+        handle.reap(1.0)
+        self.fabric.prepare_restart(node)
+        self.host.endpoint.reset_peer(node)
+        # surviving workers may cache worker->worker transport toward the
+        # corpse (relay paths); tell them to forget it too
+        for peer in self.live_nodes():
+            if peer != node:
+                try:
+                    self.domain.oneway(
+                        peer,
+                        f2f("_cluster/reset_peer", node,
+                            registry=self.domain.registry),
+                    )
+                except Exception:  # noqa: BLE001 — advisory; a peer that
+                    # never cached a connection has nothing to reset
+                    pass
+        replacement = handle.respawn()
+        with self._lock:
+            self._workers[node] = replacement
+            self._dead.discard(node)
+        for cb in self._restart_cbs:
+            try:
+                cb(node)
+            except Exception:  # noqa: BLE001
+                import traceback
+
+                traceback.print_exc()
+
+    # -- teardown ----------------------------------------------------------
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop monitoring, terminate + reap every worker, tear down the
+        domain/fabric (unlinking shm segments).  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._monitor.join(timeout=2.0)
+        for node in self.live_nodes():
+            try:
+                self.domain.oneway(
+                    node, f2f("_ham/terminate", registry=self.domain.registry)
+                )
+            except Exception:  # noqa: BLE001 — best-effort on teardown
+                pass
+        for handle in self._workers.values():
+            try:
+                handle.reap(timeout)
+            except Exception:  # noqa: BLE001
+                pass
+        self.domain.shutdown(timeout)
+
+    def __enter__(self) -> "ClusterPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

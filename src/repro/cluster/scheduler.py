@@ -1,0 +1,284 @@
+"""Policy-driven scheduler with credit-based flow control over a ClusterPool.
+
+The paper's ``offload::async`` takes an explicit target node; this layer
+picks the node, keeps many calls in flight per worker, and survives worker
+death — the futurized, load-balanced dispatch direction of HPX ("Closing the
+Performance Gap with Modern C++") and the data-centric routing of Active
+Access (Besta et al.), built on HAM's unchanged message layer.
+
+Scheduling policies
+-------------------
+
+``policy=`` selects how :meth:`Scheduler.submit` routes a call whose target
+was not pinned with ``node=``:
+
+* ``"round_robin"`` — cycle through live workers in node order.  Stateless
+  and fair for uniform work; degrades when call costs vary (a slow call
+  holds up its node while the cycle keeps loading it evenly).
+* ``"least_outstanding"`` — pick the live worker with the fewest in-flight
+  calls (ties break toward the lowest node id).  The default: it is
+  adaptive join-shortest-queue — slow workers accumulate outstanding calls
+  and automatically shed new load to faster ones.
+* ``"locality"`` — scan the call's arguments for migratable values with a
+  registered locality hook (``buffer_ptr`` reports its owning node; see
+  ``migratable.register_migratable(locality=...)``) and prefer the live
+  node holding the most referenced buffers; calls with no locality votes
+  (or whose owner is dead) fall back to least-outstanding.  This routes
+  compute to data instead of data to compute.
+
+Credit-based flow control (the backpressure contract)
+-----------------------------------------------------
+
+Every worker has ``max_inflight`` *credits*.  ``submit`` consumes one
+credit on its target before the frame is sent and the credit is returned
+when the call's future completes (result, remote error, or node death) —
+so per-node in-flight frames are bounded by construction:
+
+* a slow worker saturates its credits and ``submit`` **blocks** the caller
+  (bounded by ``submit_timeout``, then :class:`OffloadError`) instead of
+  ballooning the transport queue / shm ring behind the worker;
+* policy routing only considers nodes with a free credit when any exists,
+  so one stuck worker does not stall traffic that other workers could
+  absorb — blocking happens only when the whole pool is saturated (or the
+  call is pinned);
+* credits are per-scheduler state, not a wire protocol: the transport's own
+  bounded rings remain the hard backstop underneath.
+
+Failure semantics
+-----------------
+
+The pool's monitor announces a dead worker; the scheduler then (1) removes
+the node from the routing set, (2) fails every tracked in-flight future on
+that node with :class:`RemoteExecutionError` *through the host's future
+table* — popping the table entry, so a straggler reply from a restarted
+node id is dropped rather than resurrecting a failed future — and (3)
+routes subsequent submits to the survivors.  On restart the node rejoins
+with a fresh credit pool.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Iterable
+
+from repro.core import migratable as mig
+from repro.core.closure import Function
+from repro.core.errors import NodeDownError, OffloadError
+from repro.core.future import Future, as_completed, gather
+from repro.cluster.pool import ClusterPool
+
+__all__ = ["Scheduler", "as_completed", "gather"]
+
+POLICIES = ("round_robin", "least_outstanding", "locality")
+
+
+class Scheduler:
+    """Routes ``submit`` calls across a :class:`ClusterPool` (module docs
+    define the policy and flow-control contracts)."""
+
+    def __init__(
+        self,
+        pool: ClusterPool,
+        *,
+        policy: str = "least_outstanding",
+        max_inflight: int = 32,
+        submit_timeout: float | None = 30.0,
+    ):
+        if policy not in POLICIES:
+            raise OffloadError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.pool = pool
+        self.host = pool.host
+        self.policy = policy
+        self.max_inflight = int(max_inflight)
+        self.submit_timeout = submit_timeout
+        self._lock = threading.Lock()
+        self._live: set[int] = set(pool.worker_nodes)
+        self._inflight: dict[int, dict[int, Future]] = {
+            n: {} for n in pool.worker_nodes
+        }
+        self._credits: dict[int, threading.Semaphore] = {
+            n: threading.Semaphore(self.max_inflight) for n in pool.worker_nodes
+        }
+        self._rr = 0
+        self.stats = {
+            "submitted": 0,
+            "completed": 0,
+            "failed_inflight": 0,
+            "locality_hits": 0,
+            "routed": {n: 0 for n in pool.worker_nodes},
+        }
+        pool.on_death(self._on_worker_death)
+        pool.on_restart(self._on_worker_restart)
+        # reconcile deaths announced BEFORE we subscribed (e.g. a worker
+        # that crashed during pool startup): _on_worker_death is idempotent,
+        # so racing a concurrent announcement is harmless
+        for n in pool.worker_nodes:
+            if not pool.is_alive(n):
+                self._on_worker_death(n)
+
+    # -- routing -----------------------------------------------------------
+
+    def _pick(self, function: Function) -> int | None:
+        """Choose a live target under the active policy (caller holds no
+        lock; this takes it).  Returns None when no workers are live."""
+        with self._lock:
+            live = sorted(self._live)
+            if not live:
+                return None
+            # prefer nodes with a free credit so one saturated worker does
+            # not block traffic the others could take (flow-control contract)
+            uncongested = [
+                n for n in live
+                if len(self._inflight[n]) < self.max_inflight
+            ]
+            candidates = uncongested or live
+            if self.policy == "locality":
+                votes = mig.scan_locality(function.args)
+                alive_votes = {n: c for n, c in votes.items() if n in self._live}
+                if alive_votes:
+                    self.stats["locality_hits"] += 1
+                    # most buffers win; break ties toward the shorter queue
+                    return max(
+                        alive_votes,
+                        key=lambda n: (alive_votes[n], -len(self._inflight[n])),
+                    )
+            if self.policy == "round_robin":
+                self._rr += 1
+                return candidates[self._rr % len(candidates)]
+            return min(candidates, key=lambda n: (len(self._inflight[n]), n))
+
+    def submit(self, function: Function, *, node: int | None = None) -> Future:
+        """Route ``function`` to a worker and return its future.
+
+        ``node=`` pins the target (raises :class:`NodeDownError` if it is
+        dead — pinned calls are not rerouted; reroute-on-death applies to
+        policy-routed traffic).  Blocks for a credit when the target is
+        saturated; :class:`OffloadError` after ``submit_timeout``.
+
+        A *pinned* submit waits on its node's credit for the whole timeout
+        (that node is the request).  A *policy-routed* submit must not get
+        stuck behind one slow worker while another frees up, so it waits in
+        short slices and re-picks between them — it blocks for the full
+        timeout only when the entire pool stays saturated.
+        """
+        import time
+
+        deadline = (
+            None if self.submit_timeout is None
+            else time.monotonic() + self.submit_timeout
+        )
+        while True:
+            if node is not None:
+                if not self._is_live(node):
+                    raise NodeDownError(f"worker {node} is down")
+                target = node
+            else:
+                target = self._pick(function)
+                if target is None:
+                    raise OffloadError("no live workers in the pool")
+            sem = self._credits[target]
+            remaining = (
+                None if deadline is None else max(0.0, deadline - time.monotonic())
+            )
+            if node is None:
+                slice_s = 0.05 if remaining is None else min(0.05, remaining)
+                acquired = sem.acquire(timeout=slice_s)
+            elif remaining is not None:
+                acquired = sem.acquire(timeout=remaining)
+            else:
+                acquired = sem.acquire()
+            if not acquired:
+                if deadline is None or time.monotonic() < deadline:
+                    continue  # slice expired: re-pick with fresh queue state
+                raise OffloadError(
+                    f"backpressure timeout: worker {target} held "
+                    f"{self.max_inflight} in-flight calls for "
+                    f"{self.submit_timeout}s"
+                )
+            if self._is_live(target):
+                break
+            # target died between pick and credit grant: put the credit
+            # back and re-route (or fail a pinned call)
+            sem.release()
+            if node is not None:
+                raise NodeDownError(f"worker {node} is down")
+        try:
+            fut = self.host.send_async(target, function)
+        except Exception:
+            sem.release()  # no future exists to return the credit later
+            raise
+        with self._lock:
+            self.stats["submitted"] += 1
+            self.stats["routed"][target] = self.stats["routed"].get(target, 0) + 1
+            still_live = target in self._live
+            if still_live:
+                self._inflight[target][fut.msg_id] = fut
+        fut.add_done_callback(lambda f, n=target: self._on_done(n, f))
+        if not still_live:
+            # death raced the send: the death handler never saw this future,
+            # so fail it here (reject pops the table entry — a stray reply
+            # from a restarted node id is dropped, not delivered)
+            self.host.futures.reject(
+                fut.msg_id, f"worker {target} died with this call in flight", ""
+            )
+        return fut
+
+    def map(self, functions: Iterable[Function]) -> list[Future]:
+        """Submit a batch; completions pipeline (harvest via as_completed)."""
+        return [self.submit(fn) for fn in functions]
+
+    def drain(self, timeout: float | None = 60.0) -> None:
+        """Block until every tracked in-flight call completes."""
+        with self._lock:
+            futs = [f for d in self._inflight.values() for f in d.values()]
+        for _ in as_completed(futs, timeout):
+            pass
+
+    # -- introspection -----------------------------------------------------
+
+    def _is_live(self, node: int) -> bool:
+        with self._lock:
+            return node in self._live
+
+    def live_nodes(self) -> list[int]:
+        with self._lock:
+            return sorted(self._live)
+
+    def outstanding(self, node: int | None = None) -> int:
+        with self._lock:
+            if node is not None:
+                return len(self._inflight.get(node, ()))
+            return sum(len(d) for d in self._inflight.values())
+
+    # -- completion / failure plumbing ------------------------------------
+
+    def _on_done(self, node: int, fut: Future) -> None:
+        with self._lock:
+            d = self._inflight.get(node)
+            if d is not None:
+                d.pop(fut.msg_id, None)
+            sem = self._credits.get(node)
+            self.stats["completed"] += 1
+        if sem is not None:
+            sem.release()
+
+    def _on_worker_death(self, node: int) -> None:
+        """Pool monitor callback: fail this node's in-flight calls and stop
+        routing to it (failure-semantics contract in the module docs)."""
+        with self._lock:
+            self._live.discard(node)
+            stale = self._inflight.get(node, {})
+            self._inflight[node] = {}
+            self.stats["failed_inflight"] += len(stale)
+        for msg_id in list(stale):
+            # reject -> RemoteExecutionError at every waiter, and the popped
+            # table entry drops any straggler reply for this msg_id
+            self.host.futures.reject(
+                msg_id, f"worker {node} died with this call in flight", ""
+            )
+
+    def _on_worker_restart(self, node: int) -> None:
+        with self._lock:
+            self._live.add(node)
+            self._inflight[node] = {}
+            self._credits[node] = threading.Semaphore(self.max_inflight)

@@ -80,6 +80,12 @@ class CommBackend:
         No-op unless ``zero_copy_recv`` is set.
         """
 
+    def reset_peer(self, dst: int) -> None:
+        """Drop cached transport state toward ``dst`` (a worker that died and
+        is being replaced): stale connections/cursors must not leak into the
+        restarted peer.  No-op for connectionless backends.
+        """
+
     def close(self) -> None:
         pass
 
@@ -97,6 +103,14 @@ class Fabric:
 
     def endpoint(self, node_id: int) -> CommBackend:
         raise NotImplementedError
+
+    def prepare_restart(self, node_id: int) -> None:
+        """Make the fabric safe for a replacement process to attach as
+        ``node_id`` after the original died: discard frames queued toward the
+        dead node (their futures were already failed by the failure detector;
+        redelivering them to the replacement would resurrect cancelled work).
+        No-op where nothing is buffered in the fabric itself.
+        """
 
     def close(self) -> None:
         pass

@@ -61,3 +61,13 @@ class LocalFabric(Fabric):
 
     def endpoint(self, node_id: int) -> LocalEndpoint:
         return self._endpoints[node_id]
+
+    def prepare_restart(self, node_id: int) -> None:
+        """Drain frames queued toward a dead node's inbox — they belong to
+        calls the failure detector already failed (see Fabric docs)."""
+        inbox = self._endpoints[node_id]._inbox
+        while True:
+            try:
+                inbox.get_nowait()
+            except queue.Empty:
+                return

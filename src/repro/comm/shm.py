@@ -394,6 +394,18 @@ class ShmRing:
         self._release(lease, strict=False)
         return frame
 
+    def drop_pending(self) -> None:
+        """Discard every queued-but-unconsumed frame (tail := head).
+
+        Only safe while the ring's consumer is not running — used by the
+        fabric before attaching a *replacement* consumer process: frames
+        addressed to the dead worker were already failed by the failure
+        detector, so redelivering them would resurrect cancelled calls.
+        """
+        self._segments.clear()
+        self._next_read = 0
+        self._set_tail(self._head())
+
     def close(self) -> None:
         self._segments.clear()
         self._buf = None
@@ -506,30 +518,51 @@ class ShmEndpoint(CommBackend):
 
 
 class ShmFabric(Fabric):
-    """Creates all directed rings; parent process owns segment lifetime."""
+    """Creates all directed rings; parent process owns segment lifetime.
+
+    Segment lifetime is guarded twice: an explicit :meth:`close` (the normal
+    path) and an ``atexit`` hook — so a host that errors out between fabric
+    creation and teardown (or a test that aborts mid-run while a child is
+    dead) still unlinks its ``/dev/shm`` segments instead of leaking them
+    until reboot.
+    """
 
     def __init__(self, num_nodes: int, capacity: int = 1 << 24, prefix: str | None = None):
+        import atexit
         import os
         import uuid
 
         self.num_nodes = num_nodes
         self.prefix = prefix or f"ham{os.getpid()}_{uuid.uuid4().hex[:8]}"
-        self._rings = []
+        self._rings: dict[tuple[int, int], ShmRing] = {}
+        self._closed = False
         for src in range(num_nodes):
             for dst in range(num_nodes):
                 if src != dst:
-                    self._rings.append(
-                        ShmRing(
-                            _ring_name(self.prefix, src, dst),
-                            capacity=capacity,
-                            create=True,
-                        )
+                    self._rings[(src, dst)] = ShmRing(
+                        _ring_name(self.prefix, src, dst),
+                        capacity=capacity,
+                        create=True,
                     )
+        atexit.register(self.close)
 
     def endpoint(self, node_id: int) -> ShmEndpoint:
         return ShmEndpoint(self.prefix, node_id, self.num_nodes)
 
+    def prepare_restart(self, node_id: int) -> None:
+        """Clear the dead node's inbound rings so a replacement consumer
+        starts from an empty queue (see Fabric.prepare_restart)."""
+        for (_, dst), ring in self._rings.items():
+            if dst == node_id:
+                ring.drop_pending()
+
     def close(self) -> None:
-        for r in self._rings:
+        if self._closed:
+            return
+        self._closed = True
+        import atexit
+
+        atexit.unregister(self.close)
+        for r in self._rings.values():
             r.close()
             r.unlink()

@@ -183,6 +183,18 @@ class SocketEndpoint(CommBackend):
         except OSError as e:
             raise CommError(f"send to node {dst} failed: {e}") from e
 
+    def reset_peer(self, dst: int) -> None:
+        """Forget the cached outbound connection to ``dst``: the next send
+        redials, reaching the replacement process listening on dst's port."""
+        with self._out_lock:
+            sock = self._out.pop(dst, None)
+            self._send_locks.pop(dst, None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
     def recv(self, timeout: float | None = None) -> bytes | None:
         try:
             return self._inbox.get(timeout=timeout)

@@ -31,7 +31,7 @@ from repro.core.errors import (
     UnstableNameError,
 )
 from repro.core.executor import DirectPolicy, ExecutionPolicy, QueuePolicy, ThreadPoolPolicy
-from repro.core.future import Future, FutureTable
+from repro.core.future import Future, FutureTable, as_completed, gather
 from repro.core.migratable import (
     ArraySpec,
     OpaqueSpec,
@@ -62,7 +62,7 @@ __all__ = [
     "SpecMismatchError", "MessageFormatError", "UnknownHandlerError",
     "CommError", "NodeDownError", "OffloadError", "RemoteExecutionError",
     "ExecutionPolicy", "DirectPolicy", "QueuePolicy", "ThreadPoolPolicy",
-    "Future", "FutureTable",
+    "Future", "FutureTable", "as_completed", "gather",
     "ArraySpec", "ScalarSpec", "OpaqueSpec",
     "spec_of", "is_bitwise_migratable", "register_migratable",
     "pack_static", "unpack_static", "pack_dynamic", "unpack_dynamic",

@@ -2,14 +2,24 @@
 ``future<double>``; §4.3: ``offload_result_msg`` routes the result back).
 
 A :class:`FutureTable` correlates reply messages with outstanding futures via
-the 64-bit ``msg_id`` in the frame header.
+the 64-bit ``msg_id`` in the frame header.  Each future remembers its
+``msg_id`` so higher layers (the cluster scheduler) can cancel/fail a
+specific in-flight call through the table — popping the entry there means a
+stale reply from a dead-then-restarted worker is dropped instead of
+resurrecting an already-failed future.
+
+:func:`as_completed` turns a set of futures into a completion-order stream —
+the pipelining primitive: callers harvest results as replies arrive instead
+of serialising on submission order.
 """
 
 from __future__ import annotations
 
 import itertools
+import queue as _queue
 import threading
-from typing import Any, Callable
+import time
+from typing import Any, Callable, Iterable, Iterator
 
 from repro.core.errors import RemoteExecutionError
 
@@ -17,7 +27,7 @@ from repro.core.errors import RemoteExecutionError
 class Future:
     """Single-assignment result container with blocking ``get``."""
 
-    __slots__ = ("_event", "_result", "_error", "_callbacks", "_lock")
+    __slots__ = ("_event", "_result", "_error", "_callbacks", "_lock", "msg_id")
 
     def __init__(self):
         self._event = threading.Event()
@@ -25,6 +35,8 @@ class Future:
         self._error: BaseException | None = None
         self._callbacks: list[Callable[["Future"], None]] = []
         self._lock = threading.Lock()
+        #: reply-correlation id in the owning FutureTable (0 = untracked)
+        self.msg_id: int = 0
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -63,6 +75,57 @@ class Future:
             raise self._error
         return self._result
 
+    def exception(self) -> BaseException | None:
+        """The stored error of a completed future (None while pending/ok)."""
+        return self._error
+
+
+def as_completed(
+    futures: Iterable[Future], timeout: float | None = None
+) -> Iterator[Future]:
+    """Yield ``futures`` in *completion* order — the pipelining iterator.
+
+    Like ``concurrent.futures.as_completed``: each yielded future is done
+    (its ``get(0)`` returns immediately), so a caller draining a fan-out of
+    offloads overlaps its own post-processing with the still-in-flight
+    remainder.  ``timeout`` bounds the total wait across all futures;
+    expiry raises :class:`TimeoutError` with the undone count.
+
+    Requires someone else (an event-loop thread) to resolve the futures —
+    do not use from an ``inline`` host, which pumps its own endpoint.
+    """
+    futs = list(futures)
+    done_q: _queue.SimpleQueue[Future] = _queue.SimpleQueue()
+    for f in futs:
+        f.add_done_callback(done_q.put)  # runs immediately if already done
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for i in range(len(futs)):
+        remaining = None if deadline is None else deadline - time.monotonic()
+        if remaining is not None and remaining <= 0:
+            raise TimeoutError(
+                f"{len(futs) - i} of {len(futs)} futures undone at timeout"
+            )
+        try:
+            yield done_q.get(timeout=remaining)
+        except _queue.Empty:
+            raise TimeoutError(
+                f"{len(futs) - i} of {len(futs)} futures undone at timeout"
+            ) from None
+
+
+def gather(futures: Iterable[Future], timeout: float | None = None) -> list:
+    """Results of ``futures`` in *submission* order, waiting in completion
+    order — one shared deadline instead of per-future timeouts, and
+    **fail-fast**: the first future to complete with an error raises it
+    immediately (a hung sibling must not bury a real remote error under a
+    generic deadline TimeoutError)."""
+    futs = list(futures)
+    for f in as_completed(futs, timeout):
+        exc = f.exception()
+        if exc is not None:
+            raise exc
+    return [f.get(0) for f in futs]
+
 
 class FutureTable:
     """msg_id -> Future correlation for reply routing."""
@@ -75,6 +138,7 @@ class FutureTable:
     def create(self) -> tuple[int, Future]:
         fut = Future()
         msg_id = next(self._counter)
+        fut.msg_id = msg_id
         with self._lock:
             self._pending[msg_id] = fut
         return msg_id, fut

@@ -115,6 +115,7 @@ class _Codec:
     encode: Callable[[Any], bytes]          # converting constructor
     decode: Callable[[bytes], Any]          # conversion operator
     nbytes_fixed: int | None                # None => dynamic size only
+    locality: Callable[[Any], int | None] | None = None  # owning node hint
 
 
 _CODECS_BY_TYPE: dict[type, _Codec] = {}
@@ -128,6 +129,7 @@ def register_migratable(
     *,
     type_name: str | None = None,
     nbytes_fixed: int | None = None,
+    locality: Callable[[Any], int | None] | None = None,
 ) -> None:
     """Register a ``migratable`` specialisation for ``py_type``.
 
@@ -138,15 +140,54 @@ def register_migratable(
     the same length): the dynamic pack path measures frames with one encode
     call and packs with another, so a length that varies between calls would
     corrupt the frame.
+
+    ``locality`` optionally maps a value to the node that *owns* it (e.g. a
+    ``buffer_ptr``'s address space).  Locality-aware schedulers use it to
+    route a call to the data instead of moving the data to the call — the
+    data-centric dispatch of Active Access.
     """
     name = type_name or f"{py_type.__module__}:{py_type.__qualname__}"
-    codec = _Codec(name, py_type, encode, decode, nbytes_fixed)
+    codec = _Codec(name, py_type, encode, decode, nbytes_fixed, locality)
     _CODECS_BY_TYPE[py_type] = codec
     _CODECS_BY_NAME[name] = codec
 
 
 def codec_for(value: Any) -> _Codec | None:
     return _CODECS_BY_TYPE.get(type(value))
+
+
+def locality_of(value: Any) -> int | None:
+    """Owning node of ``value`` per its codec's locality hook, else None."""
+    codec = _CODECS_BY_TYPE.get(type(value))
+    if codec is None or codec.locality is None:
+        return None
+    return codec.locality(value)
+
+
+def scan_locality(values, max_items: int = 64) -> dict[int, int]:
+    """Locality votes across a shallow pytree of call arguments.
+
+    Returns ``{node: count}`` over every leaf with a registered locality
+    hook, walking at most ``max_items`` leaves (schedulers run this per
+    submit — it must stay O(small)).  Containers are descended one level at
+    a time; everything else is a leaf.
+    """
+    votes: dict[int, int] = {}
+    stack = list(values) if isinstance(values, (list, tuple)) else [values]
+    seen = 0
+    while stack and seen < max_items:
+        v = stack.pop()
+        seen += 1
+        if isinstance(v, (list, tuple)):
+            stack.extend(v)
+            continue
+        if isinstance(v, dict):
+            stack.extend(v.values())
+            continue
+        node = locality_of(v)
+        if node is not None:
+            votes[node] = votes.get(node, 0) + 1
+    return votes
 
 
 def is_bitwise_migratable(value: Any) -> bool:

@@ -258,6 +258,10 @@ class HandlerRegistry:
         with self._lock:
             return sorted(self._pending)
 
+    def pending_records(self) -> list[HandlerRecord]:
+        with self._lock:
+            return [self._pending[k] for k in sorted(self._pending)]
+
     def fork(self) -> "HandlerRegistry":
         """Copy of the pending set (for tests / simulated processes)."""
         clone = HandlerRegistry()

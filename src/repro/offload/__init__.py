@@ -1,5 +1,6 @@
 """HAM-Offload: the offloading framework built on the HAM core (paper §2)."""
 
+from repro.core.future import as_completed, gather
 from repro.offload.api import OffloadDomain, deref, offloaded
 from repro.offload.buffer import BufferPtr, BufferRegistry
 from repro.offload.runtime import NodeRuntime, current_node, register_internal_handlers
@@ -8,4 +9,5 @@ __all__ = [
     "OffloadDomain", "deref", "offloaded",
     "BufferPtr", "BufferRegistry",
     "NodeRuntime", "current_node", "register_internal_handlers",
+    "as_completed", "gather",
 ]

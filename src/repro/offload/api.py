@@ -24,7 +24,7 @@ from repro.comm.local import LocalFabric
 from repro.core.closure import Function, f2f
 from repro.core.errors import OffloadError
 from repro.core.executor import DirectPolicy
-from repro.core.future import Future
+from repro.core.future import Future, as_completed, gather
 from repro.core.message import encode_frame, FLAG_DYNAMIC
 from repro.core.registry import default_registry
 from repro.offload.buffer import BufferPtr
@@ -249,9 +249,12 @@ class OffloadDomain:
             raise RemoteExecutionError(f"{type(e).__name__}: {e}", "") from e
 
     def _wait_all(self, futs: list[Future], timeout: float | None = 60.0) -> list:
+        """Results in submission order, waited in *completion* order: one
+        shared deadline over the whole pipelined batch (chunked put/get,
+        barriers) rather than a fresh timeout per future."""
         if self.host.inline:
             return [self.host._inline_wait(f, timeout) for f in futs]
-        return [f.get(timeout) for f in futs]
+        return gather(futs, timeout)
 
     def free(self, ptr: BufferPtr) -> None:
         self.sync(ptr.node, f2f("_ham/free", ptr.node, ptr.handle,
@@ -268,11 +271,7 @@ class OffloadDomain:
             self.async_(n, f2f("_ham/ping", 0, registry=self.registry))
             for n in self.targets()
         ]
-        for f in futs:
-            if self.host.inline:
-                self.host._inline_wait(f, timeout)
-            else:
-                f.get(timeout)
+        self._wait_all(futs, timeout)
 
     def shutdown(self, timeout: float = 5.0) -> None:
         for n in self.targets():

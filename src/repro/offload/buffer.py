@@ -46,6 +46,9 @@ register_migratable(
     decode=BufferPtr.decode,
     type_name="ham:buffer_ptr",
     nbytes_fixed=_WIRE.size,
+    # a buffer_ptr knows its address space: locality-aware scheduling routes
+    # calls to the node already holding their buffers
+    locality=lambda p: p.node,
 )
 
 

@@ -24,6 +24,25 @@ import sys
 from repro.core.registry import default_registry
 
 
+def registered_setup_modules(registry=None, extra=()) -> list[str]:
+    """Modules whose import (re-)registers the host's handler set.
+
+    A worker must import the SAME registering modules as the host before
+    ``init()``, or the two processes derive different key maps — the
+    paper's same-source assumption.  This derives that module list from
+    the registry itself (every pending handler's defining module), so a
+    host that imported, say, ``repro.cluster.pool`` (which registers
+    ``_cluster/*`` at import) automatically ships it to its workers.
+    ``__main__`` is dropped: script-local handlers cannot be re-imported
+    by a fresh interpreter and must be registered via an importable module.
+    """
+    reg = registry or default_registry()
+    mods = {r.fn.__module__ for r in reg.pending_records()}
+    mods.update(extra)
+    mods.discard("__main__")
+    return sorted(m for m in mods if m)
+
+
 def _worker_body(kind: str, args: dict, node_id: int, setup_modules: list[str]) -> None:
     for mod in setup_modules:
         importlib.import_module(mod)
@@ -44,12 +63,29 @@ def _worker_body(kind: str, args: dict, node_id: int, setup_modules: list[str]) 
     from repro.offload.runtime import NodeRuntime
 
     runtime = NodeRuntime(node_id, endpoint, table)
-    runtime.run()
-    endpoint.close()
+    try:
+        runtime.run()
+    finally:
+        # a handler exception or interpreter teardown must still detach the
+        # endpoint: on shm fabrics a child that exits without closing keeps
+        # /dev/shm mappings referenced (the segment-leak path)
+        endpoint.close()
 
 
-def spawn_shm_workers(fabric, node_ids, setup_modules=()) -> list:
-    """Fork one child per worker node, attached to ``fabric`` (ShmFabric)."""
+def spawn_shm_workers(fabric, node_ids, setup_modules=None) -> list:
+    """Fork one child per worker node, attached to ``fabric`` (ShmFabric).
+
+    ``setup_modules=None`` (default) derives the worker's import list from
+    the host's default registry via :func:`registered_setup_modules`, so
+    both sides agree on the key map by construction.
+
+    Segment-leak contract: the *fabric* owns the ``/dev/shm`` segments and
+    unlinks them from ``ShmFabric.close`` (also registered ``atexit``), so a
+    child dying mid-run cannot leak them; callers must still reap the
+    children (``p.join``/``terminate`` — ``ClusterPool.close`` does both).
+    """
+    if setup_modules is None:
+        setup_modules = registered_setup_modules()
     ctx = multiprocessing.get_context("fork")
     procs = []
     for node_id in node_ids:
@@ -68,12 +104,47 @@ def spawn_shm_workers(fabric, node_ids, setup_modules=()) -> list:
     return procs
 
 
+def reap(procs, timeout: float = 5.0) -> None:
+    """Join with escalation to terminate, then kill — children never outlive
+    the pool (the other half of the segment-leak fix).  Accepts
+    ``multiprocessing.Process`` and ``subprocess.Popen`` handles."""
+    import subprocess
+
+    for p in procs:
+        if hasattr(p, "is_alive"):  # multiprocessing.Process
+            p.join(timeout)
+            if p.is_alive():
+                p.terminate()
+                p.join(1.0)
+            if p.is_alive():
+                p.kill()
+                p.join(1.0)
+        else:  # subprocess.Popen
+            try:
+                p.wait(timeout)
+            except subprocess.TimeoutExpired:
+                p.terminate()
+                try:
+                    p.wait(1.0)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+                    p.wait(1.0)
+
+
 def spawn_socket_worker_subprocess(
-    node_id: int, num_nodes: int, base_port: int, setup_modules=()
+    node_id: int, num_nodes: int, base_port: int, setup_modules=None
 ):
-    """Launch a worker as a *fresh* interpreter over TCP (subprocess)."""
+    """Launch a worker as a *fresh* interpreter over TCP (subprocess).
+
+    ``setup_modules=None`` derives the import list from the host's default
+    registry (see :func:`registered_setup_modules`) — a fresh interpreter
+    has no inherited state, so it must re-run the same static-init imports.
+    """
     import os
     import subprocess
+
+    if setup_modules is None:
+        setup_modules = registered_setup_modules()
 
     spec = {
         "kind": "socket",

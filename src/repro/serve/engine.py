@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.device_table import DeviceHandlerTable
+from repro.core.future import Future
 
 
 @dataclasses.dataclass
@@ -157,8 +158,12 @@ class ServingEngine:
 
     # -- stepping ------------------------------------------------------------------
 
-    def step(self, key: int | None = None) -> None:
-        """One batched decode step through the device dispatch table."""
+    def step(self, key: int | None = None) -> list[tuple[int, int]]:
+        """One batched decode step through the device dispatch table.
+
+        Returns the ``(rid, token)`` pairs emitted this step (empty for a
+        noop step) — the unit a pool driver streams back per completion.
+        """
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if key is None:
             if not active:
@@ -173,14 +178,18 @@ class ServingEngine:
         self.payload = self.dispatch(jnp.asarray(key, jnp.int32), self.payload)
         self.steps_dispatched += 1
         if key == self.key_noop:
-            return
+            return []
         toks = np.asarray(self.payload["tokens"][:, 0])
+        emitted: list[tuple[int, int]] = []
         for slot in active:
             req = self.slot_req[slot]
-            self.outputs[req.rid].append(int(toks[slot]))
+            tok = int(toks[slot])
+            emitted.append((req.rid, tok))
+            self.outputs[req.rid].append(tok)
             self.slot_remaining[slot] -= 1
             if self.slot_remaining[slot] <= 0:
                 self.slot_req[slot] = None
+        return emitted
 
     def run(self, requests: list[Request]) -> dict[int, list[int]]:
         """Serve a request list to completion with continuous batching."""
@@ -195,3 +204,179 @@ class ServingEngine:
                 self.admit(pending.pop(0), slot)
             self.step()
         return self.outputs
+
+
+# --------------------------------------------------------------------------
+# cluster serving: continuous batching driven through the worker pool
+# --------------------------------------------------------------------------
+
+#: engines owned by pool workers, keyed by the identity of the worker's
+#: NodeRuntime — handlers resolve "their" engine via current_node().  (One
+#: entry per live runtime; ClusterServingEngine.close() removes its own.)
+_NODE_ENGINES: dict[int, "ServingEngine"] = {}
+
+
+def _h_serve_admit(prompt, rid, max_new_tokens, temperature):
+    """Admit one request into this node's engine (prefill runs HERE, on the
+    worker, overlapping other workers' decode steps).  Returns the first
+    generated token."""
+    from repro.offload.runtime import current_node
+
+    eng = _NODE_ENGINES[id(current_node())]
+    slot = eng.free_slots()[0]
+    req = Request(
+        prompt=np.asarray(prompt, np.int32),
+        max_new_tokens=int(max_new_tokens),
+        temperature=float(temperature),
+        rid=int(rid),
+    )
+    eng.admit(req, slot)
+    return [int(rid), int(eng.outputs[req.rid][0])]
+
+
+def _h_serve_step():
+    """One decode step of this node's engine; returns the emitted
+    ``[rid, token]`` pairs plus the engine's free-slot count (ground truth
+    for the driver's admission accounting)."""
+    from repro.offload.runtime import current_node
+
+    eng = _NODE_ENGINES[id(current_node())]
+    emitted = eng.step()
+    return [[int(r), int(t)] for r, t in emitted], len(eng.free_slots())
+
+
+def register_serve_handlers(registry=None) -> None:
+    """Register the cluster-serving handlers (call before ``init()``)."""
+    from repro.core.registry import default_registry
+
+    reg = registry or default_registry()
+    for name, fn in (("_serve/admit", _h_serve_admit),
+                     ("_serve/step", _h_serve_step)):
+        reg.register(fn, name=name)
+
+
+class ClusterServingEngine:
+    """Continuous batching sharded across a worker pool.
+
+    One :class:`ServingEngine` replica per pool worker (thread workers —
+    the replicas share the process and its jax devices); the host drives
+    them through a :class:`~repro.cluster.scheduler.Scheduler` with one
+    pipelined step call in flight per active worker, so decode steps for
+    different request slots overlap across workers (compiled jax steps
+    release the GIL).  Admissions are async too: a prefill on worker A
+    overlaps decode on worker B.
+
+    Request routing is admission-time least-loaded; a request then sticks
+    to its worker (its KV cache lives there) — the sticky-session analogue
+    of the scheduler's locality policy.
+    """
+
+    def __init__(self, model, params, *, num_workers: int = 2,
+                 slots_per_worker: int = 2, max_len: int, seed: int = 0,
+                 registry=None):
+        from repro.cluster.pool import ClusterPool, register_cluster_handlers
+        from repro.cluster.scheduler import Scheduler
+        from repro.core.registry import HandlerRegistry
+        from repro.offload.runtime import register_internal_handlers
+
+        if registry is None:
+            registry = HandlerRegistry()
+            register_internal_handlers(registry)
+            register_cluster_handlers(registry)
+            register_serve_handlers(registry)
+            registry.init()
+        self.registry = registry
+        self.slots_per_worker = slots_per_worker
+        self.pool = ClusterPool.local(num_workers, registry=registry)
+        self.sched = Scheduler(self.pool, policy="least_outstanding",
+                               max_inflight=slots_per_worker + 2)
+        self._engine_keys: list[int] = []
+        for i, node in enumerate(self.pool.worker_nodes):
+            rt = self.pool.domain._inproc[node]
+            _NODE_ENGINES[id(rt)] = ServingEngine(
+                model, params, num_slots=slots_per_worker, max_len=max_len,
+                seed=seed + i,
+            )
+            self._engine_keys.append(id(rt))
+
+    def run(self, requests: list[Request],
+            timeout: float = 300.0) -> dict[int, list[int]]:
+        """Serve ``requests`` to completion, pipelining across workers.
+        ``timeout`` bounds the whole drive loop."""
+        import queue as _queue
+        import time
+
+        from repro.core.closure import f2f
+
+        for i, r in enumerate(requests):
+            if r.rid < 0:
+                r.rid = i
+        nodes = self.pool.worker_nodes
+        pending = list(requests)
+        outputs: dict[int, list[int]] = {}
+        # per-node occupancy: `active` is ground truth as of the last reply
+        # from that node; `queued` counts admits submitted but unconfirmed
+        active = {n: 0 for n in nodes}
+        queued = {n: 0 for n in nodes}
+        stepping = {n: False for n in nodes}
+        inflight: dict[Future, tuple[str, int]] = {}
+        # one persistent completion queue for the whole drive: every
+        # submitted future pushes itself here exactly once when done
+        done_q: _queue.SimpleQueue = _queue.SimpleQueue()
+        deadline = time.monotonic() + timeout
+        reg = self.registry
+
+        def track(fut: Future, kind: str, node: int) -> None:
+            inflight[fut] = (kind, node)
+            fut.add_done_callback(done_q.put)
+
+        while pending or inflight or any(active.values()):
+            for node in sorted(nodes, key=lambda n: active[n] + queued[n]):
+                while pending and (active[node] + queued[node]
+                                   < self.slots_per_worker):
+                    req = pending.pop(0)
+                    queued[node] += 1
+                    track(self.sched.submit(
+                        f2f("_serve/admit", np.asarray(req.prompt, np.int32),
+                            int(req.rid), int(req.max_new_tokens),
+                            float(req.temperature), registry=reg),
+                        node=node,
+                    ), "admit", node)
+                if (active[node] or queued[node]) and not stepping[node]:
+                    stepping[node] = True
+                    track(self.sched.submit(
+                        f2f("_serve/step", registry=reg), node=node,
+                    ), "step", node)
+            if not inflight:
+                break
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"cluster serve exceeded {timeout}s with "
+                    f"{len(inflight)} calls in flight"
+                )
+            try:
+                done = done_q.get(timeout=remaining)
+            except _queue.Empty:
+                raise TimeoutError(
+                    f"cluster serve exceeded {timeout}s with "
+                    f"{len(inflight)} calls in flight"
+                ) from None
+            kind, node = inflight.pop(done)
+            if kind == "admit":
+                rid, first = done.get(0)
+                queued[node] -= 1
+                active[node] += 1
+                outputs[rid] = [first]
+            else:
+                stepping[node] = False
+                emitted, free = done.get(0)
+                active[node] = self.slots_per_worker - free
+                for rid, tok in emitted:
+                    outputs[rid].append(tok)
+        return outputs
+
+    def close(self) -> None:
+        for key in self._engine_keys:
+            _NODE_ENGINES.pop(key, None)
+        self.pool.close()

@@ -1,5 +1,43 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running end-to-end test (model training / serving loops)",
+    )
+    config.addinivalue_line(
+        "markers",
+        "fork: forks worker processes over /dev/shm shared memory; skipped "
+        "automatically where fork or /dev/shm is unavailable (CI runners, "
+        "macOS default spawn, sandboxes)",
+    )
+
+
+def _fork_available() -> bool:
+    if not hasattr(os, "fork"):
+        return False
+    try:
+        import multiprocessing
+
+        multiprocessing.get_context("fork")
+    except ValueError:
+        return False
+    return os.path.isdir("/dev/shm") and os.access("/dev/shm", os.W_OK)
+
+
+def pytest_collection_modifyitems(config, items):
+    if _fork_available():
+        return
+    skip_fork = pytest.mark.skip(
+        reason="fork-based cross-process tests need os.fork and a writable /dev/shm"
+    )
+    for item in items:
+        if "fork" in item.keywords:
+            item.add_marker(skip_fork)

@@ -1,0 +1,292 @@
+"""Cluster pool + scheduler: routing policies, credit flow control,
+pipelined completions, worker death/restart, shm segment hygiene."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro.cluster.pool  # noqa: F401 — registers _cluster/* at collection,
+#                            before any test seals the default registry
+from repro.cluster import ClusterPool, Scheduler, as_completed, gather
+from repro.cluster.pool import register_cluster_handlers
+from repro.core.closure import f2f
+from repro.core.errors import (
+    NodeDownError,
+    OffloadError,
+    RemoteExecutionError,
+)
+from repro.core.registry import HandlerRegistry, default_registry
+from repro.offload.runtime import register_internal_handlers
+
+
+def _registry():
+    reg = HandlerRegistry()
+    register_internal_handlers(reg)
+    register_cluster_handlers(reg)
+    reg.init()
+    return reg
+
+
+@pytest.fixture
+def pool():
+    p = ClusterPool.local(3, registry=_registry())
+    yield p
+    p.close()
+
+
+def _sleep(reg, seconds):
+    return f2f("_cluster/sleep", seconds, registry=reg)
+
+
+def _spin(reg, n=10):
+    return f2f("_cluster/spin", n, registry=reg)
+
+
+# -- routing policies --------------------------------------------------------
+
+
+def test_round_robin_spreads_evenly(pool):
+    sched = Scheduler(pool, policy="round_robin")
+    futs = [sched.submit(_spin(pool.domain.registry)) for _ in range(9)]
+    assert gather(futs, 30) == [45] * 9
+    assert sorted(sched.stats["routed"].values()) == [3, 3, 3]
+
+
+def test_least_outstanding_avoids_busy_worker(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, policy="least_outstanding", max_inflight=8)
+    # pile outstanding calls on node 1, then policy-route a burst: node 1's
+    # queue depth (3) always exceeds any transient depth on nodes 2/3 (<=1
+    # spin in flight each), so the burst must avoid it
+    busy = [sched.submit(_sleep(reg, 0.5), node=1) for _ in range(3)]
+    futs = [sched.submit(_spin(reg)) for _ in range(6)]
+    gather(futs, 30)
+    gather(busy, 10)
+    assert sched.stats["routed"][1] == 3  # the pinned calls only
+    assert sched.stats["routed"][2] + sched.stats["routed"][3] == 6
+
+
+def test_locality_routes_to_buffer_owner(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, policy="locality")
+    dom = pool.domain
+    arr = np.arange(16.0)
+    for target in (1, 2, 3):
+        ptr = dom.allocate(target, arr.shape, "float64")
+        dom.put(arr, ptr)
+        fut = sched.submit(f2f("_cluster/touch", ptr, registry=reg))
+        assert fut.get(10) == arr.sum()
+    # every call ran on its buffer's owner — a remote deref would have
+    # raised (pointers are only valid in their own address space)
+    assert sched.stats["routed"] == {1: 1, 2: 1, 3: 1}
+    assert sched.stats["locality_hits"] == 3
+
+
+def test_locality_falls_back_without_votes(pool):
+    sched = Scheduler(pool, policy="locality")
+    assert sched.submit(_spin(pool.domain.registry)).get(10) == 45
+    assert sched.stats["locality_hits"] == 0
+
+
+# -- pipelining --------------------------------------------------------------
+
+
+def test_as_completed_yields_in_completion_order(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=4)
+    slow = sched.submit(_sleep(reg, 0.4), node=1)
+    fast = [sched.submit(_sleep(reg, 0.01), node=2) for _ in range(3)]
+    order = list(as_completed([slow, *fast], timeout=30))
+    assert order[-1] is slow  # the slow call finishes last
+    assert set(order) == {slow, *fast}
+
+
+def test_pipelined_submits_overlap_across_workers(pool):
+    """The acceptance property at test scale: many in-flight sleeps across
+    3 workers must beat the serial round-trip floor by ~worker count."""
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=16)
+    n, per_call = 30, 0.02
+    t0 = time.perf_counter()
+    gather([sched.submit(_sleep(reg, per_call)) for _ in range(n)], 60)
+    dt = time.perf_counter() - t0
+    assert dt < n * per_call * 0.75  # strictly better than serial execution
+
+
+def test_gather_orders_by_submission(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool)
+    futs = [sched.submit(f2f("_cluster/spin", i, registry=reg))
+            for i in (3, 5, 7)]
+    assert gather(futs, 30) == [3, 10, 21]
+
+
+# -- credit-based flow control ----------------------------------------------
+
+
+def test_backpressure_blocks_then_raises(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=2, submit_timeout=0.3)
+    held = [sched.submit(_sleep(reg, 0.8), node=1) for _ in range(2)]
+    t0 = time.perf_counter()
+    with pytest.raises(OffloadError, match="backpressure"):
+        sched.submit(_sleep(reg, 0.8), node=1)  # no credit on node 1
+    assert 0.25 < time.perf_counter() - t0 < 2.0  # blocked, then gave up
+    gather(held, 30)
+    # credits returned on completion: the same pinned submit works now
+    assert sched.submit(_sleep(reg, 0.01), node=1).get(10) == 0.01
+
+
+def test_policy_routes_around_saturated_worker(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=1, submit_timeout=5.0)
+    blocker = sched.submit(_sleep(reg, 0.5), node=1)
+    t0 = time.perf_counter()
+    futs = [sched.submit(_spin(reg)) for _ in range(4)]
+    gather(futs, 30)
+    # the burst never waited on node 1's credit
+    assert time.perf_counter() - t0 < 0.45
+    assert sched.stats["routed"][1] == 1  # only the blocker
+    blocker.get(10)
+
+
+# -- worker failure (thread pool) -------------------------------------------
+
+
+def test_thread_worker_death_fails_queued_calls_and_reroutes(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=8)
+    # occupy node 1 (let its loop start executing the sleep), then queue
+    # more work behind it
+    running = sched.submit(_sleep(reg, 0.3), node=1)
+    time.sleep(0.1)
+    queued = [sched.submit(_spin(reg), node=1) for _ in range(3)]
+    pool.kill(1)  # stops the event loop: queued frames are never drained
+    deadline = time.time() + 10
+    while 1 in sched.live_nodes() and time.time() < deadline:
+        time.sleep(0.02)
+    assert sched.live_nodes() == [2, 3]
+    for f in queued:
+        with pytest.raises(RemoteExecutionError, match="died"):
+            f.get(10)
+    assert sched.stats["failed_inflight"] >= 3
+    # policy traffic reroutes to the survivors
+    assert sched.submit(_spin(reg)).get(10) == 45
+    with pytest.raises(NodeDownError):
+        sched.submit(_spin(reg), node=1)
+    del running  # may have completed or failed depending on drain timing
+
+    pool.restart(1)
+    deadline = time.time() + 10
+    while 1 not in sched.live_nodes() and time.time() < deadline:
+        time.sleep(0.02)
+    assert sched.live_nodes() == [1, 2, 3]
+    assert sched.submit(_spin(reg), node=1).get(10) == 45
+
+
+# -- worker failure (forked processes over shm) ------------------------------
+
+
+def _default_registry_ready():
+    reg = default_registry()
+    register_cluster_handlers(reg)  # no-op if already present/sealed
+    if not reg.initialised:
+        reg.init()
+    return reg
+
+
+@pytest.mark.fork
+def test_fork_worker_killed_mid_stream_fails_inflight_and_reroutes():
+    """The PR's failure-semantics contract, against a REAL process death:
+    kill one forked worker while its calls are in flight; the scheduler
+    must mark it dead, fail those futures with RemoteExecutionError, and
+    route subsequent calls to the survivor."""
+    reg = _default_registry_ready()
+    pool = ClusterPool.shm(2, registry=reg)
+    try:
+        sched = Scheduler(pool, policy="round_robin", max_inflight=8)
+        pool.ping_all()
+        inflight = [sched.submit(_sleep(reg, 3.0), node=1) for _ in range(3)]
+        time.sleep(0.2)  # let the worker start executing
+        pool.kill(1)
+        deadline = time.time() + 10
+        while 1 in sched.live_nodes() and time.time() < deadline:
+            time.sleep(0.05)
+        assert sched.live_nodes() == [2], "scheduler must mark the corpse dead"
+        for f in inflight:
+            with pytest.raises(RemoteExecutionError, match="died"):
+                f.get(10)
+        assert sched.stats["failed_inflight"] == 3
+        results = gather([sched.submit(_spin(reg)) for _ in range(4)], 30)
+        assert results == [45] * 4
+        assert sched.stats["routed"][2] >= 4  # everything rerouted
+    finally:
+        pool.close()
+
+
+@pytest.mark.fork
+def test_fork_worker_restart_rejoins_pool():
+    reg = _default_registry_ready()
+    pool = ClusterPool.shm(2, registry=reg)
+    try:
+        sched = Scheduler(pool, max_inflight=4)
+        pool.ping_all()
+        pool.kill(1)
+        deadline = time.time() + 10
+        while 1 in sched.live_nodes() and time.time() < deadline:
+            time.sleep(0.05)
+        pool.restart(1)
+        deadline = time.time() + 10
+        while 1 not in sched.live_nodes() and time.time() < deadline:
+            time.sleep(0.05)
+        assert sched.live_nodes() == [1, 2]
+        assert sched.submit(_spin(reg), node=1).get(20) == 45
+    finally:
+        pool.close()
+
+
+@pytest.mark.fork
+def test_shm_segments_unlinked_even_when_child_dies():
+    """The segment-leak satellite: a child killed mid-run must not leave
+    its fabric's segments in /dev/shm after ClusterPool.close()."""
+    reg = _default_registry_ready()
+    pool = ClusterPool.shm(2, registry=reg)
+    prefix = pool.fabric.prefix
+    pool.ping_all()
+    assert any(f.startswith(prefix) for f in os.listdir("/dev/shm"))
+    pool.kill(1)
+    time.sleep(0.3)
+    pool.close()
+    assert not any(f.startswith(prefix) for f in os.listdir("/dev/shm"))
+    # close() reaped the children too
+    for handle in pool._workers.values():
+        assert not handle.alive()
+
+
+# -- misc --------------------------------------------------------------------
+
+
+def test_no_live_workers_raises(pool):
+    sched = Scheduler(pool, max_inflight=2)
+    for n in pool.worker_nodes:
+        pool.kill(n)
+    deadline = time.time() + 10
+    while sched.live_nodes() and time.time() < deadline:
+        time.sleep(0.02)
+    with pytest.raises(OffloadError, match="no live workers"):
+        sched.submit(_spin(pool.domain.registry))
+
+
+def test_unknown_policy_rejected(pool):
+    with pytest.raises(OffloadError, match="unknown policy"):
+        Scheduler(pool, policy="fastest_first")
+
+
+def test_future_msg_id_tracks_table_entry(pool):
+    fut = pool.domain.async_(
+        1, f2f("_ham/ping", 9, registry=pool.domain.registry)
+    )
+    assert fut.msg_id > 0
+    assert fut.get(10) == 9

@@ -259,6 +259,7 @@ def test_shm_nested_pop_with_outstanding_lease():
         ring.unlink()
 
 
+@pytest.mark.fork
 def test_shm_cross_process_wrap_heavy_frames():
     """Regression: true cross-process traffic with frames near half the ring
     (constant wrap + counter churn) must never desync the consumer's frame

@@ -71,6 +71,7 @@ def test_chunked_put_get_roundtrip():
         dom.shutdown()
 
 
+@pytest.mark.fork
 def test_oversized_reply_errors_instead_of_killing_worker():
     """A reply that exceeds the transport frame limit must come back as a
     RemoteExecutionError — not silently kill the worker's event loop and

@@ -116,6 +116,35 @@ def test_engine_sampling_temperature(model_and_params):
     assert all(0 <= t < cfg.vocab_size for t in out[0])
 
 
+@pytest.mark.slow
+def test_cluster_serving_matches_single_engine_lengths(model_and_params):
+    """Continuous batching through the worker pool: same requests, same
+    output lengths as the single engine, decode steps overlapping across
+    two workers."""
+    from repro.serve.engine import ClusterServingEngine
+
+    model, params = model_and_params
+    cfg = model.cfg
+    mk = lambda: [  # noqa: E731 — fresh Request objects per engine (rids mutate)
+        Request(prompt=np.arange(3 + i % 3) % cfg.vocab_size,
+                max_new_tokens=2 + i % 3)
+        for i in range(6)
+    ]
+    eng = ClusterServingEngine(model, params, num_workers=2,
+                               slots_per_worker=2, max_len=24)
+    try:
+        out = eng.run(mk())
+    finally:
+        eng.close()
+    ref = ServingEngine(model, params, num_slots=2, max_len=24).run(mk())
+    assert sorted(out) == sorted(ref)
+    assert {r: len(v) for r, v in out.items()} == {
+        r: len(v) for r, v in ref.items()
+    }
+    # both workers actually served traffic
+    assert all(n > 0 for n in eng.sched.stats["routed"].values())
+
+
 def test_noop_branch_preserves_state(model_and_params):
     model, params = model_and_params
     eng = ServingEngine(model, params, num_slots=1, max_len=16)

@@ -8,6 +8,7 @@
 """
 
 import numpy as np
+import pytest
 
 import repro.core as ham
 from repro.core.closure import f2f
@@ -83,6 +84,7 @@ def test_paper_fig2_program():
         dom.shutdown()
 
 
+@pytest.mark.slow
 def test_offloaded_training_via_rpc():
     from repro.configs import get_reduced
     from repro.optim.adamw import AdamWConfig
@@ -104,6 +106,7 @@ def test_offloaded_training_via_rpc():
         dom.shutdown()
 
 
+@pytest.mark.slow
 def test_serving_end_to_end_with_dispatch_table():
     import jax
 
