@@ -12,18 +12,25 @@ overlap).  Two drive modes per configuration:
   flight per worker (credit-based flow control) and completions are
   harvested with ``as_completed``; throughput scales with the pool.
 
-Writes ``BENCH_cluster.json`` with the sweep and the PR's acceptance check:
-pipelined >= 2x serial at 4 workers.
+A second section exercises **elastic resize + sticky sessions**: a live
+pool grows 2 -> 4 workers and shrinks back to 2 (drained) under a
+continuous submit stream — the acceptance check is zero failed calls and a
+throughput gain while grown — and a resize's session-remap fraction is
+measured against the rendezvous-hash fair share.
+
+Writes ``BENCH_cluster.json`` with the sweeps and the acceptance checks:
+pipelined >= 2x serial at 4 workers; resize with zero failures.
 """
 
 from __future__ import annotations
 
 import json
+import threading
 import time
 from pathlib import Path
 
 import repro.cluster.pool  # noqa: F401 — registers _cluster/* pre-init
-from repro.cluster import ClusterPool, Scheduler, as_completed
+from repro.cluster import ClusterPool, Scheduler, SessionRouter, as_completed
 from repro.core.closure import f2f
 from repro.core.registry import default_registry
 
@@ -64,6 +71,102 @@ def _throughput(policy: str, num_workers: int, calls: int, sleep_s: float,
         pool.close()
 
 
+def _resize_under_stream(sleep_s: float, phase_s: float) -> dict:
+    """Grow 2 -> 4 and shrink back to 2 under a continuous submit stream.
+
+    Returns per-phase throughput, the failure count (acceptance: zero) and
+    the session-remap measurement for the grow step.
+    """
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    pool = ClusterPool.local(2, registry=reg)
+    try:
+        sched = Scheduler(pool, max_inflight=MAX_INFLIGHT)
+        fn = f2f("_cluster/sleep", sleep_s, registry=reg)
+        for node in pool.worker_nodes:
+            sched.submit(fn, node=node).get(10)  # warmup
+
+        stop = threading.Event()
+        stamps: list[float] = []   # completion timestamps
+        errors: list[BaseException] = []
+        futs: list = []
+
+        def stream():
+            while not stop.is_set():
+                try:
+                    fut = sched.submit(fn)
+                    fut.add_done_callback(
+                        lambda f: stamps.append(time.perf_counter())
+                    )
+                    futs.append(fut)
+                except BaseException as e:  # noqa: BLE001 — the metric
+                    errors.append(e)
+
+        t = threading.Thread(target=stream)
+        t.start()
+        try:
+            t0 = time.perf_counter()
+            time.sleep(phase_s)
+            added = [pool.add_node(), pool.add_node()]
+            t1 = time.perf_counter()
+            time.sleep(phase_s)
+            t2 = time.perf_counter()
+            for node in added:
+                pool.remove_node(node, drain=True)
+            t3 = time.perf_counter()
+            time.sleep(phase_s)
+            t4 = time.perf_counter()
+        finally:
+            stop.set()
+            t.join()
+        for f in as_completed(list(futs), timeout=60):
+            try:
+                f.get(0)
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        def rate(lo: float, hi: float) -> float:
+            n = sum(1 for s in stamps if lo <= s <= hi)
+            return n / max(hi - lo, 1e-9)
+
+        phases = {
+            "2_workers_calls_per_s": round(rate(t0, t1), 1),
+            "4_workers_calls_per_s": round(rate(t1, t2), 1),
+            "back_to_2_calls_per_s": round(rate(t3, t4), 1),
+        }
+        # sticky sessions vs the same resize: fair-share remap for FRESH
+        # placements, zero remap for pinned live sessions.  Both routers see
+        # the SAME grow (mutable live list) — only the pin table differs.
+        live = [1, 2]
+        router = SessionRouter(lambda: live)
+        keys = [f"bench-s{i}" for i in range(500)]
+        before = {k: router.route(k) for k in keys}
+        live.extend([3, 4])  # the grow the pinned sessions must survive
+        fresh_after = {k: SessionRouter(lambda: live).route(k) for k in keys}
+        moved_fresh = sum(1 for k in keys if before[k] != fresh_after[k])
+        pinned_after = {k: router.route(k) for k in keys}  # pins hold
+        moved_pinned = sum(1 for k in keys if before[k] != pinned_after[k])
+        return {
+            "service_time_s": sleep_s,
+            "grow_shrink": "2 -> 4 -> 2 (drain)",
+            "calls_completed": len(stamps),
+            "failed_calls": len(errors),
+            "throughput": phases,
+            "speedup_4w_over_2w": round(
+                phases["4_workers_calls_per_s"]
+                / max(phases["2_workers_calls_per_s"], 1e-9), 2,
+            ),
+            "sessions": {
+                "keys": len(keys),
+                "fresh_remap_fraction_on_grow": round(moved_fresh / len(keys), 3),
+                "pinned_remap_fraction_on_grow": moved_pinned / len(keys),
+            },
+        }
+    finally:
+        pool.close()
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     calls = 32 if smoke else CALLS
     sleep_s = SLEEP_S
@@ -86,18 +189,28 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
                 f"cluster/{policy}_w{workers}_pipelined", 1e6 / piped,
                 f"{piped:,.0f} calls/s ({speedup:.1f}x vs serial)",
             ))
+    resize = _resize_under_stream(sleep_s, phase_s=0.3 if smoke else 1.0)
+    rows.append((
+        "cluster/resize_4w_over_2w_speedup", resize["speedup_4w_over_2w"],
+        f"{resize['calls_completed']} calls, "
+        f"{resize['failed_calls']} failed during 2->4->2",
+    ))
     accept = {
         policy: sweep[policy]["4"]["speedup"] >= 2.0 for policy in POLICIES
     }
     report = {
-        "schema": "cluster-v1",
+        "schema": "cluster-v2",
         "service_time_s": sleep_s,
         "calls": calls,
         "max_inflight": MAX_INFLIGHT,
         "smoke": smoke,
         "sweep": sweep,
+        "resize": resize,
         "acceptance": {
             "pipelined_ge_2x_serial_at_4_workers": accept,
+            "resize_zero_failed_calls": resize["failed_calls"] == 0,
+            "pinned_sessions_zero_remap_on_grow":
+                resize["sessions"]["pinned_remap_fraction_on_grow"] == 0,
         },
     }
     _JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")

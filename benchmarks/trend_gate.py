@@ -1,0 +1,142 @@
+"""Benchmark trend gate: fail CI when recorded speedups regress.
+
+Compares the *speedup* metrics of freshly produced ``BENCH_cluster.json`` /
+``BENCH_hotpath.json`` against the committed baselines.  Speedups are
+ratios (pipelined/serial, optimised/seed), which makes them roughly
+machine-independent — unlike absolute calls/sec, they are comparable
+between a committed full run and a CI smoke run, so the smoke job can gate
+on them: a speedup collapse means a coalescing/pipelining path stopped
+working, not that the runner was slow.
+
+Usage (the CI bench-smoke job)::
+
+    cp BENCH_cluster.json BENCH_hotpath.json baseline/   # committed values
+    python -m benchmarks.run --smoke                     # rewrites BENCH_*
+    python -m benchmarks.trend_gate --baseline-dir baseline
+
+Exit status 1 when any tracked metric falls below
+``(1 - tolerance) * baseline`` (default tolerance 0.30, i.e. a >30%
+regression), or when a baseline metric is missing from the fresh run (a
+dropped/renamed metric must not silently shrink gate coverage).  Metrics
+not yet in the baseline are reported and skipped — schema growth must not
+break older baselines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parents[1]
+
+#: (file, [path, ...]) — dotted paths of the ratio metrics under gate.
+#: Dict leaves compare key-by-key.
+TRACKED = {
+    "BENCH_cluster.json": [
+        "sweep.round_robin.4.speedup",
+        "sweep.least_outstanding.4.speedup",
+        "resize.speedup_4w_over_2w",
+    ],
+    "BENCH_hotpath.json": [
+        "batching_speedup_x64",
+        "putget_median_speedup_vs_seed",
+    ],
+}
+
+
+def _dig(doc, dotted: str):
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def _leaves(dotted: str, value):
+    """Flatten a metric to (path, float) leaves (dict => one per key)."""
+    if isinstance(value, dict):
+        for k, v in value.items():
+            yield from _leaves(f"{dotted}.{k}", v)
+    elif isinstance(value, (int, float)):
+        yield dotted, float(value)
+
+
+def compare(baseline: dict, fresh: dict, paths, tolerance: float):
+    """Yield (path, base, new, ok|None) for every tracked leaf; ``ok`` is
+    None when the leaf is missing on either side (skipped, not failed).
+    A tracked path absent from the *baseline* is surfaced too — a silent
+    drop would shrink gate coverage on a metric rename with CI green."""
+    for dotted in paths:
+        base_leaves = dict(_leaves(dotted, _dig(baseline, dotted)))
+        new_leaves = dict(_leaves(dotted, _dig(fresh, dotted)))
+        if not base_leaves:
+            yield dotted, None, new_leaves or None, None
+            continue
+        for path, base in sorted(base_leaves.items()):
+            new = new_leaves.get(path)
+            if new is None:
+                yield path, base, None, None
+                continue
+            yield path, base, new, new >= (1.0 - tolerance) * base
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", type=Path, required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", type=Path, default=_REPO_ROOT,
+                    help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression (default 0.30)")
+    opts = ap.parse_args(argv)
+
+    failures = 0
+    checked = 0
+    for fname, paths in TRACKED.items():
+        base_path = opts.baseline_dir / fname
+        fresh_path = opts.fresh_dir / fname
+        if not base_path.exists() or not fresh_path.exists():
+            print(f"SKIP {fname}: missing "
+                  f"{'baseline' if not base_path.exists() else 'fresh'} file")
+            continue
+        baseline = json.loads(base_path.read_text())
+        fresh = json.loads(fresh_path.read_text())
+        for path, base, new, ok in compare(baseline, fresh, paths,
+                                           opts.tolerance):
+            if ok is None:
+                if base is None:
+                    # not in the baseline yet (new metric): skip until a
+                    # refreshed baseline is committed
+                    print(f"SKIP {fname}:{path} (missing in baseline)")
+                else:
+                    # in the baseline but GONE from the fresh run: a dropped
+                    # or renamed metric must not silently shrink coverage
+                    print(f"REGRESSION  {fname}:{path}  baseline={base:.2f}"
+                          "  fresh=MISSING")
+                    checked += 1
+                    failures += 1
+                continue
+            checked += 1
+            floor = (1.0 - opts.tolerance) * base
+            status = "ok" if ok else "REGRESSION"
+            print(f"{status:>10}  {fname}:{path}  baseline={base:.2f}  "
+                  f"fresh={new:.2f}  floor={floor:.2f}")
+            if not ok:
+                failures += 1
+    if checked == 0:
+        print("trend gate: nothing compared — refusing to pass vacuously")
+        return 1
+    if failures:
+        print(f"trend gate: {failures}/{checked} tracked speedups regressed "
+              f">{opts.tolerance:.0%}")
+        return 1
+    print(f"trend gate: {checked} tracked speedups within "
+          f"{opts.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

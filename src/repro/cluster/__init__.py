@@ -1,19 +1,24 @@
 """Cluster layer: worker pools + policy scheduling over the offload runtime.
 
 ``ClusterPool`` owns worker lifecycle (spawn/attach, liveness, restart,
-reap); ``Scheduler`` routes ``async_offload`` calls by policy with
-credit-based flow control and fails over on worker death.  See the module
-docstrings for the policy and backpressure contracts.
+reap, elastic add/remove under traffic); ``Scheduler`` routes
+``async_offload`` calls by policy with credit-based flow control, sticky
+``session=`` affinity (``SessionRouter``), and fails over on worker death.
+See the module docstrings for the policy, backpressure and membership
+contracts.
 """
 
 from repro.cluster.pool import ClusterPool, register_cluster_handlers
 from repro.cluster.scheduler import POLICIES, Scheduler, as_completed, gather
+from repro.cluster.sessions import SessionRouter, rendezvous_hash
 
 __all__ = [
     "ClusterPool",
     "Scheduler",
+    "SessionRouter",
     "POLICIES",
     "as_completed",
     "gather",
     "register_cluster_handlers",
+    "rendezvous_hash",
 ]

@@ -19,6 +19,47 @@ supplies the fleet underneath a :class:`~repro.cluster.scheduler.Scheduler`:
 
 Fault-injection helpers (``kill``) are first-class: a scheduler that cannot
 be tested against a dying worker cannot be trusted with one.
+
+Elastic membership protocol (grow/shrink under live traffic)
+------------------------------------------------------------
+
+The paper fixes the node set at MPI startup and names that as a limitation;
+here membership is runtime state, in the spirit of HPX's AGAS.  Node ids
+are **monotonic and never reused** — a retired id stays invalid forever, so
+a straggler frame addressed to it fails fast instead of reaching an
+unrelated replacement.
+
+:meth:`ClusterPool.add_node` (host-driven, in order):
+
+1. ``fabric.add_node()`` provisions transport resources (shm ring pairs, a
+   port) for the next id;
+2. the host endpoint attaches the id (``attach_peer``);
+3. every live worker is told ``_cluster/attach_peer`` as a **sync** call —
+   when step 4 starts, every survivor can already address the newcomer
+   (the same broadcast role ``restart`` plays with ``_cluster/reset_peer``);
+4. the worker is spawned (same launch mode as the pool), pinged (startup
+   barrier), and its key-map digest is verified against the host table
+   (``verify_peer_digest`` — elastic join re-checks the same-source
+   assumption that static startup checked implicitly);
+5. ``on_join`` subscribers run (the scheduler creates the node's
+   credit/in-flight/stats entries atomically under its lock).
+
+:meth:`ClusterPool.remove_node` (the reverse, with a drain fence):
+
+1. ``on_leave`` subscribers run first — the scheduler *fences* the node
+   (no new submits route to it) and returns a drain waiter;
+2. with ``drain=True`` the waiter blocks until the node's in-flight futures
+   finish (the worker is still alive and replying); with ``drain=False``
+   the death path fails them immediately;
+3. the worker gets ``_ham/terminate`` and is reaped;
+4. the host endpoint and every surviving worker ``detach_peer`` the id
+   (broadcast ``_cluster/detach_peer``), and ``fabric.remove_node``
+   reclaims its resources.
+
+Workers report executor queue depth to the host as ``_cluster/stats``
+oneways (see ``NodeRuntime.enable_depth_report``); the scheduler folds the
+reports into ``least_outstanding`` so host-side in-flight counts are
+corrected by what is actually queued behind each worker.
 """
 
 from __future__ import annotations
@@ -28,9 +69,9 @@ import time
 
 from repro.comm.local import LocalFabric
 from repro.core.closure import f2f
-from repro.core.errors import RegistrySealedError
+from repro.core.errors import OffloadError, RegistrySealedError
 from repro.core.executor import DirectPolicy
-from repro.core.registry import default_registry
+from repro.core.registry import default_registry, verify_peer_digest
 from repro.offload.api import OffloadDomain
 from repro.offload.runtime import NodeRuntime
 from repro.offload.worker import (
@@ -78,16 +119,56 @@ def _h_reset_peer(node_id):
     return None
 
 
+def _h_attach_peer(node_id):
+    """Membership broadcast (grow): make ``node_id`` addressable from this
+    node.  Called sync so the host knows every survivor attached BEFORE the
+    newcomer spawns (protocol step 3 in the module docs)."""
+    from repro.offload.runtime import current_node
+
+    current_node().endpoint.attach_peer(int(node_id))
+    return None
+
+
+def _h_detach_peer(node_id):
+    """Membership broadcast (shrink): retire ``node_id`` on this node —
+    drop its transport state; later sends toward it fail fast."""
+    from repro.offload.runtime import current_node
+
+    current_node().endpoint.detach_peer(int(node_id))
+    return None
+
+
+def _h_stats(node_id, depth):
+    """Queue-depth report (oneway): a worker's executor backlog, folded into
+    the receiving node's ``peer_depth`` for depth-aware scheduling."""
+    from repro.offload.runtime import current_node
+
+    current_node().note_peer_depth(int(node_id), int(depth))
+    return None
+
+
+def _h_digest():
+    """Key-map digest of this node's handler table (hex) — lets an elastic
+    join *verify* the paper's same-source assumption (registry docs)."""
+    from repro.offload.runtime import current_node
+
+    return current_node().table.digest.hex()
+
+
 def register_cluster_handlers(registry=None) -> None:
-    """Register the pool's demo/probe handlers.  Safe to call repeatedly;
-    silently skipped on an already-sealed registry (then callers must have
-    registered these before ``init()`` themselves)."""
+    """Register the pool's control + demo/probe handlers.  Safe to call
+    repeatedly; silently skipped on an already-sealed registry (then callers
+    must have registered these before ``init()`` themselves)."""
     reg = registry or default_registry()
     for name, fn in (
         ("_cluster/sleep", _h_sleep),
         ("_cluster/spin", _h_spin),
         ("_cluster/touch", _h_touch),
         ("_cluster/reset_peer", _h_reset_peer),
+        ("_cluster/attach_peer", _h_attach_peer),
+        ("_cluster/detach_peer", _h_detach_peer),
+        ("_cluster/stats", _h_stats),
+        ("_cluster/digest", _h_digest),
     ):
         try:
             reg.register(fn, name=name)
@@ -129,7 +210,7 @@ class _ThreadWorker:
             pool.fabric.endpoint(self.node_id),
             pool.domain._table,
             policy=pool._policy_factory(),
-        ).start()
+        ).enable_depth_report(dst=pool.domain.host_node).start()
         pool.domain._inproc[self.node_id] = rt  # direct data plane follows
         return _ThreadWorker(self.node_id, rt, pool)
 
@@ -207,15 +288,21 @@ class ClusterPool:
         auto_restart: bool = False,
         setup_modules=None,
         policy_factory=DirectPolicy,
+        mode: str = "local",
     ):
         self.domain = domain
         self.fabric = domain.fabric
         self.host = domain.host
+        self._mode = mode  # launch mode for elastic spawns (local/shm/socket)
         self._workers = dict(workers)
         self._dead: set[int] = set()
+        self._removing: set[int] = set()  # mid-remove: no auto_restart
         self._lock = threading.Lock()
+        self._resize_lock = threading.Lock()  # serialises add/remove/restart
         self._death_cbs: list = []
         self._restart_cbs: list = []
+        self._join_cbs: list = []
+        self._leave_cbs: list = []
         #: None => auto-derive from the host registry at each spawn
         #: (registered_setup_modules), so restarts track late registrations
         self._setup_modules = (
@@ -245,10 +332,12 @@ class ClusterPool:
         workers = {}
         for node in range(1, num_workers + 1):
             rt = NodeRuntime(node, fabric.endpoint(node), domain._table,
-                             policy=policy_factory()).start()
+                             policy=policy_factory()).enable_depth_report(
+                dst=domain.host_node).start()
             domain._inproc[node] = rt  # direct put/get shortcut stays live
             workers[node] = _ThreadWorker(node, rt, pool)
-        pool.__init__(domain, workers, policy_factory=policy_factory, **kw)
+        pool.__init__(domain, workers, policy_factory=policy_factory,
+                      mode="local", **kw)
         return pool
 
     @classmethod
@@ -271,7 +360,8 @@ class ClusterPool:
             node: _ForkWorker(node, proc, pool)
             for node, proc in zip(range(1, num_workers + 1), procs)
         }
-        pool.__init__(domain, workers, setup_modules=setup_modules, **kw)
+        pool.__init__(domain, workers, setup_modules=setup_modules,
+                      mode="shm", **kw)
         return pool
 
     @classmethod
@@ -294,7 +384,8 @@ class ClusterPool:
             node: _SubprocessWorker(node, popen, pool)
             for node, popen in zip(range(1, num_workers + 1), popens)
         }
-        pool.__init__(domain, workers, setup_modules=setup_modules, **kw)
+        pool.__init__(domain, workers, setup_modules=setup_modules,
+                      mode="socket", **kw)
         return pool
 
     # -- introspection -----------------------------------------------------
@@ -324,6 +415,19 @@ class ClusterPool:
     def on_restart(self, cb) -> None:
         self._restart_cbs.append(cb)
 
+    def on_join(self, cb) -> None:
+        """``cb(node)`` after an added worker is up, verified and routable."""
+        self._join_cbs.append(cb)
+
+    def on_leave(self, cb) -> None:
+        """``cb(node)`` at the *start* of a remove — the fence point: the
+        subscriber must stop routing new work to the node immediately.  A
+        callable return value is a drain waiter ``waiter(timeout)`` that
+        ``remove_node(drain=True)`` blocks on before tearing the worker
+        down (the scheduler waits out the node's in-flight futures there).
+        """
+        self._leave_cbs.append(cb)
+
     def _monitor_loop(self, interval: float) -> None:
         while not self._stop.wait(interval):
             for node in self.worker_nodes:
@@ -348,7 +452,9 @@ class ClusterPool:
                 import traceback
 
                 traceback.print_exc()
-        if self.auto_restart and not self._closed:
+        with self._lock:
+            removing = node in self._removing or node not in self._workers
+        if self.auto_restart and not self._closed and not removing:
             try:
                 self.restart(node)
             except Exception:  # noqa: BLE001
@@ -360,13 +466,196 @@ class ClusterPool:
         """Fault injection: hard-stop a worker (no goodbye on the wire)."""
         self._workers[node].kill()
 
+    # -- elastic membership ------------------------------------------------
+
+    def _spawn_worker(self, node: int):
+        """Launch a worker for ``node`` in this pool's launch mode (the
+        fabric must already have the node's transport resources)."""
+        if self._mode == "local":
+            rt = NodeRuntime(
+                node, self.fabric.endpoint(node), self.domain._table,
+                policy=self._policy_factory(),
+            ).enable_depth_report(dst=self.domain.host_node).start()
+            self.domain._inproc[node] = rt  # direct data plane follows
+            return _ThreadWorker(node, rt, self)
+        if self._mode == "shm":
+            proc = spawn_shm_workers(self.fabric, [node],
+                                     self._setup_modules)[0]
+            return _ForkWorker(node, proc, self)
+        if self._mode == "socket":
+            popen = spawn_socket_worker_subprocess(
+                node, self.fabric.num_nodes, self.fabric.base_port,
+                self._setup_modules,
+            )
+            return _SubprocessWorker(node, popen, self)
+        raise OffloadError(f"unknown pool mode {self._mode!r}")
+
+    def add_node(self, *, timeout: float = 30.0) -> int:
+        """Grow the pool by one worker under live traffic; returns its node
+        id.  Protocol (ordering contract in the module docs): provision the
+        fabric, attach the host, sync-broadcast ``_cluster/attach_peer`` to
+        every live worker, spawn, barrier-ping, verify the newcomer's
+        key-map digest, then announce ``on_join``.
+        """
+        if self._closed:
+            raise OffloadError("pool is closed")
+        with self._resize_lock:
+            node = self.fabric.add_node()
+            handle = None
+            try:
+                self.host.endpoint.attach_peer(node)
+                for peer in self.live_nodes():
+                    self.domain.sync(
+                        peer,
+                        f2f("_cluster/attach_peer", node,
+                            registry=self.domain.registry),
+                        timeout,
+                    )
+                handle = self._spawn_worker(node)
+                with self._lock:
+                    self._workers[node] = handle
+                    self._dead.discard(node)
+                self.domain.ping(node, node, timeout=timeout)
+                digest = self.domain.sync(
+                    node,
+                    f2f("_cluster/digest", registry=self.domain.registry),
+                    timeout,
+                )
+                verify_peer_digest(self.domain._table, bytes.fromhex(digest))
+            except Exception:
+                # full rollback — a worker that failed its barrier ping or
+                # digest check must NOT stay a routable member: reap it,
+                # undo the attach broadcasts, reclaim the fabric resources
+                with self._lock:
+                    self._removing.add(node)  # no auto_restart interference
+                    self._workers.pop(node, None)
+                    self._dead.discard(node)
+                try:
+                    if handle is not None:
+                        handle.reap(5.0)
+                finally:
+                    for peer in self.live_nodes():
+                        try:
+                            self.domain.sync(
+                                peer,
+                                f2f("_cluster/detach_peer", node,
+                                    registry=self.domain.registry),
+                                5.0,
+                            )
+                        except Exception:  # noqa: BLE001 — best effort
+                            pass
+                    self.host.endpoint.detach_peer(node)
+                    self.fabric.remove_node(node)
+                    self.domain._inproc.pop(node, None)
+                    with self._lock:
+                        self._removing.discard(node)
+                raise
+            # announce INSIDE the resize lock: a concurrent remove_node of
+            # this id serialises behind us, so a subscriber can never admit
+            # a node that another thread already finished retiring
+            for cb in self._join_cbs:
+                try:
+                    cb(node)
+                except Exception:  # noqa: BLE001 — one bad subscriber must
+                    # not block the others from admitting the node
+                    import traceback
+
+                    traceback.print_exc()
+        return node
+
+    def remove_node(self, node: int, *, drain: bool = True,
+                    timeout: float = 30.0) -> None:
+        """Retire one worker.  ``drain=True`` fences new submits (via
+        ``on_leave``) and waits up to ``timeout`` for the node's in-flight
+        calls to finish before terminating it — calls still running at the
+        deadline are failed (as on death) so the removal always completes;
+        ``drain=False`` fails them immediately.  Either way the id is never
+        reused and every surviving endpoint detaches it (module docs,
+        shrink protocol).
+        """
+        with self._resize_lock:
+            with self._lock:
+                if node not in self._workers:
+                    raise OffloadError(f"no worker with node id {node}")
+                self._removing.add(node)
+                handle = self._workers[node]
+            try:
+                waiters = []
+                for cb in self._leave_cbs:
+                    try:
+                        w = cb(node)
+                    except Exception:  # noqa: BLE001
+                        import traceback
+
+                        traceback.print_exc()
+                        continue
+                    if callable(w):
+                        waiters.append(w)
+                if drain:
+                    try:
+                        for w in waiters:
+                            w(timeout)
+                    except TimeoutError:
+                        # a handler outlived the drain budget: removal must
+                        # still complete (a half-removed node — fenced but
+                        # alive and attached — is worse than a failed call),
+                        # so fail the stragglers through the death path and
+                        # re-run the waiters, which now return immediately
+                        self._announce_death(node)
+                        for w in waiters:
+                            w(5.0)
+                else:
+                    # fail the node's in-flight work through the normal
+                    # death path (subscribers already fenced new submits),
+                    # then run the waiters anyway — the rejected futures
+                    # resolve instantly and subscribers retire node state
+                    self._announce_death(node)
+                    for w in waiters:
+                        w(min(timeout, 5.0))
+                if self.is_alive(node):
+                    try:
+                        self.domain.oneway(
+                            node,
+                            f2f("_ham/terminate",
+                                registry=self.domain.registry),
+                        )
+                    except Exception:  # noqa: BLE001 — best-effort goodbye
+                        pass
+                handle.reap(min(timeout, 5.0))
+                with self._lock:
+                    self._workers.pop(node, None)
+                    self._dead.discard(node)
+                self.host.endpoint.detach_peer(node)
+                for peer in self.live_nodes():
+                    try:
+                        self.domain.sync(
+                            peer,
+                            f2f("_cluster/detach_peer", node,
+                                registry=self.domain.registry),
+                            5.0,
+                        )
+                    except Exception:  # noqa: BLE001 — advisory: a peer that
+                        # never talked to the node has nothing to detach
+                        pass
+                self.fabric.remove_node(node)
+                self.domain._inproc.pop(node, None)
+            finally:
+                with self._lock:
+                    self._removing.discard(node)
+
     def restart(self, node: int) -> None:
         """Replace a dead worker in place under the same node id.
 
         Order matters: reap the corpse, purge fabric state addressed to it
         (queued frames belong to already-failed calls), drop the host's
         cached transport toward it, then attach the replacement and announce.
+        Serialised with add/remove under ``_resize_lock``: a respawn reads
+        the fabric's member set, which a concurrent resize is mutating.
         """
+        with self._resize_lock:
+            self._restart_locked(node)
+
+    def _restart_locked(self, node: int) -> None:
         with self._lock:
             handle = self._workers[node]
         handle.reap(1.0)

@@ -15,16 +15,49 @@ was not pinned with ``node=``:
 * ``"round_robin"`` — cycle through live workers in node order.  Stateless
   and fair for uniform work; degrades when call costs vary (a slow call
   holds up its node while the cycle keeps loading it evenly).
-* ``"least_outstanding"`` — pick the live worker with the fewest in-flight
-  calls (ties break toward the lowest node id).  The default: it is
-  adaptive join-shortest-queue — slow workers accumulate outstanding calls
-  and automatically shed new load to faster ones.
+* ``"least_outstanding"`` — pick the live worker with the lowest *load
+  estimate*: host-side in-flight calls **plus** the worker's last reported
+  executor queue depth (``_cluster/stats`` oneways — see
+  ``NodeRuntime.enable_depth_report``).  Ties break toward the lowest node
+  id.  The default: it is adaptive join-shortest-queue, and the depth term
+  also covers load the host did not submit (worker-to-worker traffic,
+  another scheduler sharing the pool).
 * ``"locality"`` — scan the call's arguments for migratable values with a
   registered locality hook (``buffer_ptr`` reports its owning node; see
   ``migratable.register_migratable(locality=...)``) and prefer the live
-  node holding the most referenced buffers; calls with no locality votes
-  (or whose owner is dead) fall back to least-outstanding.  This routes
-  compute to data instead of data to compute.
+  node owning the most referenced buffer *bytes* (votes are weighted by
+  ``nbytes``: one node holding a 100 MB buffer outweighs one holding three
+  8-byte scalars — moving the call is cheap, moving the data is not);
+  calls with no locality votes (or whose owner is dead) fall back to
+  least-outstanding.  This routes compute to data instead of data to
+  compute.
+
+Sticky sessions
+---------------
+
+``submit(fn, session=key)`` routes through a :class:`SessionRouter`
+(``Scheduler.sessions``): the first call of a session places it on a live
+worker by rendezvous hash, subsequent calls stick to that worker, and the
+session is re-placed only when its worker leaves the live set (see
+``repro.cluster.sessions`` for the invariants).  A session submit behaves
+like a pinned submit for flow control — it waits on its worker's credit —
+but re-routes instead of failing when the worker dies mid-wait.
+
+Elastic resize
+--------------
+
+The scheduler subscribes to the pool's ``on_join``/``on_leave``:
+
+* **join** (added or restarted worker): its credit pool, in-flight map and
+  stats entries are created atomically under the scheduler lock, then the
+  node enters the routing set;
+* **leave** (``ClusterPool.remove_node``): the node leaves the routing set
+  *immediately* (the fence — new submits can no longer pick it) and the
+  pool receives a drain waiter; with ``drain=True`` the waiter blocks until
+  the node's tracked in-flight futures resolve, then retires its
+  credit/in-flight/depth state and evicts its sessions.  In-flight calls
+  complete normally during a drain because the worker is only terminated
+  after the waiter returns.
 
 Credit-based flow control (the backpressure contract)
 -----------------------------------------------------
@@ -66,6 +99,7 @@ from repro.core.closure import Function
 from repro.core.errors import NodeDownError, OffloadError
 from repro.core.future import Future, as_completed, gather
 from repro.cluster.pool import ClusterPool
+from repro.cluster.sessions import SessionRouter
 
 __all__ = ["Scheduler", "as_completed", "gather"]
 
@@ -105,10 +139,15 @@ class Scheduler:
             "completed": 0,
             "failed_inflight": 0,
             "locality_hits": 0,
+            "session_routed": 0,
             "routed": {n: 0 for n in pool.worker_nodes},
         }
+        #: sticky-session affinity over this scheduler's live set
+        self.sessions = SessionRouter(self.live_nodes)
         pool.on_death(self._on_worker_death)
-        pool.on_restart(self._on_worker_restart)
+        pool.on_restart(self._on_worker_join)
+        pool.on_join(self._on_worker_join)
+        pool.on_leave(self._on_worker_leave)
         # reconcile deaths announced BEFORE we subscribed (e.g. a worker
         # that crashed during pool startup): _on_worker_death is idempotent,
         # so racing a concurrent announcement is harmless
@@ -117,6 +156,13 @@ class Scheduler:
                 self._on_worker_death(n)
 
     # -- routing -----------------------------------------------------------
+
+    def _load(self, node: int) -> int:
+        """Load estimate: host-side in-flight plus the worker's last
+        reported queue depth (0 until a report arrives).  The two overlap —
+        a call the host counts may also sit in the worker's queue — but the
+        estimate is monotone in both, which is all ranking needs."""
+        return len(self._inflight[node]) + self.host.peer_depth.get(node, 0)
 
     def _pick(self, function: Function) -> int | None:
         """Choose a live target under the active policy (caller holds no
@@ -133,36 +179,46 @@ class Scheduler:
             ]
             candidates = uncongested or live
             if self.policy == "locality":
+                # votes are nbytes-weighted: route to where the bulk of the
+                # referenced data lives, not to whoever owns the most ptrs
                 votes = mig.scan_locality(function.args)
                 alive_votes = {n: c for n, c in votes.items() if n in self._live}
                 if alive_votes:
                     self.stats["locality_hits"] += 1
-                    # most buffers win; break ties toward the shorter queue
+                    # most bytes win; break ties toward the shorter queue
                     return max(
                         alive_votes,
-                        key=lambda n: (alive_votes[n], -len(self._inflight[n])),
+                        key=lambda n: (alive_votes[n], -self._load(n)),
                     )
             if self.policy == "round_robin":
                 self._rr += 1
                 return candidates[self._rr % len(candidates)]
-            return min(candidates, key=lambda n: (len(self._inflight[n]), n))
+            return min(candidates, key=lambda n: (self._load(n), n))
 
-    def submit(self, function: Function, *, node: int | None = None) -> Future:
+    def submit(self, function: Function, *, node: int | None = None,
+               session=None) -> Future:
         """Route ``function`` to a worker and return its future.
 
         ``node=`` pins the target (raises :class:`NodeDownError` if it is
         dead — pinned calls are not rerouted; reroute-on-death applies to
-        policy-routed traffic).  Blocks for a credit when the target is
-        saturated; :class:`OffloadError` after ``submit_timeout``.
+        policy-routed traffic).  ``session=`` routes through the sticky
+        :class:`SessionRouter` instead of the policy: same worker for the
+        session's lifetime, re-placed only if that worker leaves the live
+        set.  Blocks for a credit when the target is saturated;
+        :class:`OffloadError` after ``submit_timeout``.
 
         A *pinned* submit waits on its node's credit for the whole timeout
         (that node is the request).  A *policy-routed* submit must not get
         stuck behind one slow worker while another frees up, so it waits in
         short slices and re-picks between them — it blocks for the full
-        timeout only when the entire pool stays saturated.
+        timeout only when the entire pool stays saturated.  A *session*
+        submit waits like a pinned one (its worker is the session), but a
+        death during the wait re-places the session rather than failing.
         """
         import time
 
+        if node is not None and session is not None:
+            raise OffloadError("submit takes node= or session=, not both")
         deadline = (
             None if self.submit_timeout is None
             else time.monotonic() + self.submit_timeout
@@ -172,15 +228,25 @@ class Scheduler:
                 if not self._is_live(node):
                     raise NodeDownError(f"worker {node} is down")
                 target = node
+            elif session is not None:
+                target = self.sessions.route(session)
+                if target is None:
+                    raise OffloadError("no live workers in the pool")
             else:
                 target = self._pick(function)
                 if target is None:
                     raise OffloadError("no live workers in the pool")
-            sem = self._credits[target]
+            sem = self._credits.get(target)
+            if sem is None:
+                continue  # node retired between route and credit lookup
             remaining = (
                 None if deadline is None else max(0.0, deadline - time.monotonic())
             )
             if node is None:
+                # policy AND session submits wait in slices: a session stays
+                # on its pinned worker while it lives (route keeps returning
+                # the pin), but a death mid-wait is noticed within a slice
+                # and re-placed instead of burning the whole timeout
                 slice_s = 0.05 if remaining is None else min(0.05, remaining)
                 acquired = sem.acquire(timeout=slice_s)
             elif remaining is not None:
@@ -195,32 +261,47 @@ class Scheduler:
                     f"{self.max_inflight} in-flight calls for "
                     f"{self.submit_timeout}s"
                 )
-            if self._is_live(target):
+            # reserve the in-flight slot ATOMICALLY with the liveness check:
+            # a fence (remove_node) or death between "target is live" and
+            # the insert would otherwise miss this call — the drain waiter
+            # would not wait for it, or a drained removal would spuriously
+            # fail a call its still-alive worker was about to serve
+            msg_id, fut = self.host.futures.create()
+            with self._lock:
+                live_now = target in self._live and target in self._inflight
+                if live_now:
+                    self._inflight[target][msg_id] = fut
+                    self.stats["submitted"] += 1
+                    if session is not None:
+                        self.stats["session_routed"] += 1
+                    self.stats["routed"][target] = (
+                        self.stats["routed"].get(target, 0) + 1
+                    )
+            if live_now:
                 break
-            # target died between pick and credit grant: put the credit
-            # back and re-route (or fail a pinned call)
+            # target fenced/died between pick and credit grant: put the
+            # credit back, drop the unused future, and re-route (or fail a
+            # pinned call; a session submit re-places on the next iteration)
+            self.host.futures.discard(msg_id)
             sem.release()
             if node is not None:
                 raise NodeDownError(f"worker {node} is down")
         try:
-            fut = self.host.send_async(target, function)
+            self.host._send_request(target, function, msg_id)
         except Exception:
-            sem.release()  # no future exists to return the credit later
+            # the frame never left: withdraw the reservation.  If a death
+            # handler raced us it already rejected the future (discard is
+            # then a no-op) — either way no reply can arrive for the id.
+            with self._lock:
+                d = self._inflight.get(target)
+                if d is not None:
+                    d.pop(msg_id, None)
+            self.host.futures.discard(msg_id)
+            sem.release()
             raise
-        with self._lock:
-            self.stats["submitted"] += 1
-            self.stats["routed"][target] = self.stats["routed"].get(target, 0) + 1
-            still_live = target in self._live
-            if still_live:
-                self._inflight[target][fut.msg_id] = fut
+        # registered after the send: if a death handler already rejected
+        # the future, the callback runs immediately and returns the credit
         fut.add_done_callback(lambda f, n=target: self._on_done(n, f))
-        if not still_live:
-            # death raced the send: the death handler never saw this future,
-            # so fail it here (reject pops the table entry — a stray reply
-            # from a restarted node id is dropped, not delivered)
-            self.host.futures.reject(
-                fut.msg_id, f"worker {target} died with this call in flight", ""
-            )
         return fut
 
     def map(self, functions: Iterable[Function]) -> list[Future]:
@@ -264,12 +345,15 @@ class Scheduler:
 
     def _on_worker_death(self, node: int) -> None:
         """Pool monitor callback: fail this node's in-flight calls and stop
-        routing to it (failure-semantics contract in the module docs)."""
+        routing to it (failure-semantics contract in the module docs).
+        Sessions pinned to the node re-place lazily on their next submit."""
         with self._lock:
             self._live.discard(node)
             stale = self._inflight.get(node, {})
-            self._inflight[node] = {}
+            if node in self._inflight:
+                self._inflight[node] = {}
             self.stats["failed_inflight"] += len(stale)
+            self.host.peer_depth.pop(node, None)  # stale busy signal
         for msg_id in list(stale):
             # reject -> RemoteExecutionError at every waiter, and the popped
             # table entry drops any straggler reply for this msg_id
@@ -277,8 +361,40 @@ class Scheduler:
                 msg_id, f"worker {node} died with this call in flight", ""
             )
 
-    def _on_worker_restart(self, node: int) -> None:
+    def _on_worker_join(self, node: int) -> None:
+        """Pool callback for an added *or restarted* worker: create (or
+        reset) its routing state atomically, then admit it (resize contract
+        in the module docs)."""
         with self._lock:
-            self._live.add(node)
             self._inflight[node] = {}
             self._credits[node] = threading.Semaphore(self.max_inflight)
+            self.stats["routed"].setdefault(node, 0)
+            self.host.peer_depth.pop(node, None)
+            self._live.add(node)
+
+    def _on_worker_leave(self, node: int):
+        """Pool callback at the start of ``remove_node``: fence the node
+        (out of the routing set immediately) and hand back a drain waiter
+        that retires its state once its in-flight futures resolve."""
+        with self._lock:
+            self._live.discard(node)
+
+        def _drain_and_retire(timeout: float | None = 30.0) -> None:
+            with self._lock:
+                futs = list(self._inflight.get(node, {}).values())
+            for _ in as_completed(futs, timeout):
+                pass
+            self._retire_node(node)
+
+        return _drain_and_retire
+
+    def _retire_node(self, node: int) -> None:
+        """Atomically drop a removed node's credit/in-flight/depth state and
+        evict its sessions (their next submit re-places them).  The id is
+        never reused, so nothing can resurrect the entries."""
+        with self._lock:
+            self._live.discard(node)
+            self._inflight.pop(node, None)
+            self._credits.pop(node, None)
+            self.host.peer_depth.pop(node, None)
+        self.sessions.evict_node(node)

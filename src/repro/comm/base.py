@@ -10,6 +10,24 @@ VEO/DMA.  Here the portable set is:
 
 A backend moves opaque *frames* (header || payload, see core.message) between
 integer-identified nodes.  It knows nothing about handlers.
+
+Elastic membership
+------------------
+
+The paper fixes the node set at MPI startup; here the fabric is *elastic*:
+
+* ``Fabric.add_node()`` allocates the next node id (ids are monotonic and
+  never reused — a retired id stays dead forever, which is what lets
+  stragglers addressed to it be dropped instead of misdelivered) and
+  provisions whatever transport resources the new node needs (shm rings, a
+  port, an inbox slot).
+* ``Fabric.remove_node(node_id)`` retires an id and reclaims its resources.
+* ``CommBackend.attach_peer(node_id)`` / ``detach_peer(node_id)`` are the
+  *per-endpoint* half: every already-running endpoint must be told about a
+  membership change, because endpoints cache per-peer state (rings, sockets,
+  the valid-destination set).  The cluster layer broadcasts these as
+  ``_cluster/attach_peer`` / ``_cluster/detach_peer`` control messages —
+  see ``repro.cluster.pool`` for the ordering contract.
 """
 
 from __future__ import annotations
@@ -86,6 +104,30 @@ class CommBackend:
         restarted peer.  No-op for connectionless backends.
         """
 
+    def attach_peer(self, node_id: int) -> None:
+        """Make ``node_id`` a valid peer of this endpoint (elastic grow).
+
+        Called on every *running* endpoint when the fabric adds a node —
+        after the fabric has provisioned the node's transport resources and
+        before the new node sends its first frame.  Default: widen the
+        valid-destination range.
+        """
+        self.num_nodes = max(self.num_nodes, node_id + 1)
+
+    def detach_peer(self, node_id: int) -> None:
+        """Forget peer ``node_id`` (elastic shrink): drop cached transport
+        state and stop accepting it as a destination.  The id is never
+        reused, so a late send toward it must fail fast rather than queue.
+        """
+        self.reset_peer(node_id)
+
+    def pending_frames(self) -> int:
+        """Best-effort count of inbound frames queued in the transport that
+        this endpoint has not yet received.  Feeds the runtime's queue-depth
+        reports; 0 when the backend cannot tell cheaply.
+        """
+        return 0
+
     def close(self) -> None:
         pass
 
@@ -103,6 +145,26 @@ class Fabric:
 
     def endpoint(self, node_id: int) -> CommBackend:
         raise NotImplementedError
+
+    def nodes(self) -> list[int]:
+        """Current member node ids.  Dense ``range(num_nodes)`` by default;
+        elastic fabrics may have holes after ``remove_node``."""
+        return list(range(self.num_nodes))
+
+    def add_node(self) -> int:
+        """Provision transport resources for one new node and return its id
+        (monotonic, never reused).  Running endpoints still need
+        ``attach_peer`` before they accept the id as a destination.
+        """
+        raise NotImplementedError(f"{type(self).__name__} is not elastic")
+
+    def remove_node(self, node_id: int) -> None:
+        """Retire ``node_id`` and reclaim its transport resources.  The
+        caller must have detached every running endpoint first
+        (``detach_peer`` broadcast) — frames in flight toward a reclaimed
+        resource are dropped, not redelivered.
+        """
+        raise NotImplementedError(f"{type(self).__name__} is not elastic")
 
     def prepare_restart(self, node_id: int) -> None:
         """Make the fabric safe for a replacement process to attach as

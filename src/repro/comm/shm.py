@@ -394,6 +394,21 @@ class ShmRing:
         self._release(lease, strict=False)
         return frame
 
+    def pending_frame_count(self, max_count: int = 32) -> int:
+        """Consumer-side count of fully-published, unread frames (capped at
+        ``max_count`` — this feeds queue-depth *estimates*, not accounting).
+        Read-only walk over the length prefixes; safe under SPSC."""
+        pos = self._read_pos()
+        head = self._head()
+        count = 0
+        while pos != head and count < max_count:
+            n = self._frame_len_checked(pos, head)
+            if n is None:
+                break
+            pos += 8 + n
+            count += 1
+        return count
+
     def drop_pending(self) -> None:
         """Discard every queued-but-unconsumed frame (tail := head).
 
@@ -433,44 +448,101 @@ class ShmEndpoint(CommBackend):
 
     ``recv_many`` hands out leased zero-copy views (``zero_copy_recv`` is
     set); callers return the window space with ``release()``.
+
+    ``peers`` names the member node ids to attach rings for (defaults to the
+    dense ``range(num_nodes)``); an elastic fabric with holes after
+    ``remove_node`` must pass its live set, since rings for retired ids no
+    longer exist.  ``attach_peer``/``detach_peer`` adjust the ring set of a
+    *running* endpoint when membership changes.
     """
 
     zero_copy_recv = True
 
-    def __init__(self, prefix: str, node_id: int, num_nodes: int):
+    def __init__(self, prefix: str, node_id: int, num_nodes: int, peers=None):
         self.node_id = node_id
         self.num_nodes = num_nodes
-        self._out = {
-            dst: ShmRing(_ring_name(prefix, node_id, dst))
-            for dst in range(num_nodes)
-            if dst != node_id
-        }
-        self._in = {
-            src: ShmRing(_ring_name(prefix, src, node_id))
-            for src in range(num_nodes)
-            if src != node_id
-        }
+        self._prefix = prefix
+        if peers is None:
+            peers = range(num_nodes)
+        peers = [p for p in peers if p != node_id]
+        self._out = {dst: ShmRing(_ring_name(prefix, node_id, dst)) for dst in peers}
+        self._in = {src: ShmRing(_ring_name(prefix, src, node_id)) for src in peers}
         self._rr = sorted(self._in)  # round-robin poll order
         self._leases: list[RingLease] = []  # issued by recv_many, unreleased
+        self._refresh_frame_cap()
+
+    def _refresh_frame_cap(self) -> None:
         # a frame must fit one ring (8-byte length prefix included)
         self.max_frame_nbytes = (
             min(r.capacity for r in self._out.values()) - 8 if self._out else None
         )
 
-    def send(self, dst: int, frame) -> None:
+    def _check_dst(self, dst: int) -> None:
+        if dst == self.node_id or dst not in self._out:
+            raise CommError(
+                f"invalid destination {dst} (node {self.node_id}; peers "
+                f"{sorted(self._out)})"
+            )
+
+    def attach_peer(self, node_id: int) -> None:
+        """Open the ring pair toward a newly added member (the fabric owner
+        must have created the segments already)."""
+        if node_id == self.node_id or node_id in self._out:
+            return
+        self._out[node_id] = ShmRing(_ring_name(self._prefix, self.node_id, node_id))
+        self._in[node_id] = ShmRing(_ring_name(self._prefix, node_id, self.node_id))
+        self._rr = sorted(self._in)
+        self.num_nodes = max(self.num_nodes, node_id + 1)
+        self._refresh_frame_cap()
+
+    def detach_peer(self, node_id: int) -> None:
+        """Close this endpoint's ring pair toward a retired member.  Later
+        sends toward the id fail fast (``_check_dst``)."""
+        out = self._out.pop(node_id, None)
+        inn = self._in.pop(node_id, None)
+        self._rr = sorted(self._in)
+        for ring in (out, inn):
+            if ring is not None:
+                ring.close()
+        if out is not None:
+            self._refresh_frame_cap()
+
+    def _out_ring(self, dst: int) -> ShmRing:
+        """Outbound ring for ``dst``, raising CommError (the documented
+        retired-peer contract) when a concurrent detach_peer removed or
+        closed it between the destination check and the push."""
         self._check_dst(dst)
-        self._out[dst].push(frame)
+        ring = self._out.get(dst)
+        if ring is None or ring._buf is None:
+            raise CommError(f"destination {dst} was removed from the fabric")
+        return ring
+
+    def send(self, dst: int, frame) -> None:
+        try:
+            self._out_ring(dst).push(frame)
+        except (TypeError, ValueError) as e:  # ring closed mid-push
+            raise CommError(f"peer {dst} detached during send") from e
 
     def send_many(self, dst: int, frames) -> None:
-        self._check_dst(dst)
-        self._out[dst].push_many(frames)
+        try:
+            self._out_ring(dst).push_many(frames)
+        except (TypeError, ValueError) as e:
+            raise CommError(f"peer {dst} detached during send") from e
 
     def recv(self, timeout: float | None = None) -> bytes | None:
         deadline = None if timeout is None else time.monotonic() + timeout
         spins = 0
         while True:
             for src in self._rr:
-                frame = self._in[src].try_pop()
+                # detach_peer (another thread) may retire a ring mid-poll:
+                # a missing/closed ring reads as empty, never as an error
+                ring = self._in.get(src)
+                if ring is None or ring._buf is None:
+                    continue
+                try:
+                    frame = ring.try_pop()
+                except (TypeError, ValueError):  # closed under our feet
+                    continue
                 if frame is not None:
                     return frame
             spins += 1
@@ -490,7 +562,13 @@ class ShmEndpoint(CommBackend):
         while True:
             views: list = []
             for src in self._rr:
-                lease = self._in[src].pop_many(max_frames - len(views))
+                ring = self._in.get(src)
+                if ring is None or ring._buf is None:
+                    continue  # retired by detach_peer mid-poll
+                try:
+                    lease = ring.pop_many(max_frames - len(views))
+                except (TypeError, ValueError):  # closed under our feet
+                    continue
                 if lease is not None:
                     self._leases.append(lease)
                     views.extend(lease.views)
@@ -509,6 +587,20 @@ class ShmEndpoint(CommBackend):
             if not lease.released:
                 lease.release()
 
+    def pending_frames(self) -> int:
+        """Published-but-unread frames across the inbound rings (capped per
+        ring; an estimate for queue-depth reports, not accounting)."""
+        total = 0
+        for src in self._rr:
+            ring = self._in.get(src)
+            if ring is None or ring._buf is None:
+                continue
+            try:
+                total += ring.pending_frame_count()
+            except (TypeError, ValueError):
+                continue
+        return total
+
     def close(self) -> None:
         self._leases.clear()
         for r in self._out.values():
@@ -525,6 +617,13 @@ class ShmFabric(Fabric):
     creation and teardown (or a test that aborts mid-run while a child is
     dead) still unlinks its ``/dev/shm`` segments instead of leaking them
     until reboot.
+
+    Elastic membership: :meth:`add_node` creates the new node's ring pairs
+    toward every current member (segments exist before any endpoint attaches
+    them); :meth:`remove_node` unlinks a retired node's rings.  Node ids are
+    monotonic and never reused.  Already-running *remote* endpoints map the
+    new rings via their own ``attach_peer`` (broadcast by the cluster
+    layer) — the fabric owner only manages segment lifetime.
     """
 
     def __init__(self, num_nodes: int, capacity: int = 1 << 24, prefix: str | None = None):
@@ -533,8 +632,11 @@ class ShmFabric(Fabric):
         import uuid
 
         self.num_nodes = num_nodes
+        self.capacity = capacity
         self.prefix = prefix or f"ham{os.getpid()}_{uuid.uuid4().hex[:8]}"
         self._rings: dict[tuple[int, int], ShmRing] = {}
+        self._nodes: set[int] = set(range(num_nodes))
+        self._next_id = num_nodes
         self._closed = False
         for src in range(num_nodes):
             for dst in range(num_nodes):
@@ -547,7 +649,34 @@ class ShmFabric(Fabric):
         atexit.register(self.close)
 
     def endpoint(self, node_id: int) -> ShmEndpoint:
-        return ShmEndpoint(self.prefix, node_id, self.num_nodes)
+        return ShmEndpoint(self.prefix, node_id, self.num_nodes,
+                           peers=sorted(self._nodes))
+
+    def nodes(self) -> list[int]:
+        return sorted(self._nodes)
+
+    def add_node(self) -> int:
+        node_id = self._next_id
+        self._next_id += 1
+        for peer in sorted(self._nodes):
+            self._rings[(node_id, peer)] = ShmRing(
+                _ring_name(self.prefix, node_id, peer),
+                capacity=self.capacity, create=True,
+            )
+            self._rings[(peer, node_id)] = ShmRing(
+                _ring_name(self.prefix, peer, node_id),
+                capacity=self.capacity, create=True,
+            )
+        self._nodes.add(node_id)
+        self.num_nodes = max(self.num_nodes, node_id + 1)
+        return node_id
+
+    def remove_node(self, node_id: int) -> None:
+        self._nodes.discard(node_id)
+        for pair in [p for p in self._rings if node_id in p]:
+            ring = self._rings.pop(pair)
+            ring.close()
+            ring.unlink()
 
     def prepare_restart(self, node_id: int) -> None:
         """Clear the dead node's inbound rings so a replacement consumer

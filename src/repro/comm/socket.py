@@ -66,6 +66,7 @@ class SocketEndpoint(CommBackend):
         self.num_nodes = num_nodes
         self._host = host
         self._base_port = base_port
+        self._removed: set[int] = set()  # retired peers: fail fast, never dial
         self._inbox: queue.SimpleQueue = queue.SimpleQueue()
         self._out: dict[int, socket.socket] = {}
         self._out_lock = threading.Lock()
@@ -195,6 +196,25 @@ class SocketEndpoint(CommBackend):
             except OSError:
                 pass
 
+    def _check_dst(self, dst: int) -> None:
+        if dst in self._removed:
+            from repro.core.errors import CommError as _CE
+
+            raise _CE(f"destination {dst} was removed from the fabric")
+        super()._check_dst(dst)
+
+    def attach_peer(self, node_id: int) -> None:
+        """Widen the valid-destination range (connections are dialled lazily
+        by port, so a new peer needs no resources until the first send)."""
+        self._removed.discard(node_id)
+        self.num_nodes = max(self.num_nodes, node_id + 1)
+
+    def detach_peer(self, node_id: int) -> None:
+        """Retire a peer: close any cached connection and refuse later sends
+        toward the id (ids are never reused)."""
+        self._removed.add(node_id)
+        self.reset_peer(node_id)
+
     def recv(self, timeout: float | None = None) -> bytes | None:
         try:
             return self._inbox.get(timeout=timeout)
@@ -214,6 +234,9 @@ class SocketEndpoint(CommBackend):
                 break
         return out
 
+    def pending_frames(self) -> int:
+        return self._inbox.qsize()
+
     def close(self) -> None:
         self._closing.set()
         try:
@@ -232,6 +255,10 @@ class SocketFabric(Fabric):
     """Same-host fabric over loopback TCP (endpoints may live anywhere that
     can reach ``host:base_port+i``)."""
 
+    #: ports reserved past the initial node count so add_node stays inside
+    #: the probed free region
+    GROW_HEADROOM = 64
+
     def __init__(self, num_nodes: int, base_port: int = 0, host: str = "127.0.0.1"):
         self.num_nodes = num_nodes
         self.host = host
@@ -242,10 +269,12 @@ class SocketFabric(Fabric):
             probe.bind((host, 0))
             candidate = probe.getsockname()[1] + 1000
             probe.close()
-            if candidate + num_nodes <= 65535:
+            if candidate + num_nodes + self.GROW_HEADROOM <= 65535:
                 base_port = candidate
         self.base_port = base_port
         self._endpoints: dict[int, SocketEndpoint] = {}
+        self._nodes: set[int] = set(range(num_nodes))
+        self._next_id = num_nodes
 
     def endpoint(self, node_id: int) -> SocketEndpoint:
         if node_id not in self._endpoints:
@@ -253,6 +282,27 @@ class SocketFabric(Fabric):
                 node_id, self.num_nodes, self.base_port, self.host
             )
         return self._endpoints[node_id]
+
+    def nodes(self) -> list[int]:
+        return sorted(self._nodes)
+
+    def add_node(self) -> int:
+        node_id = self._next_id
+        if self.base_port + node_id > 65535:
+            raise CommError(
+                f"cannot add node {node_id}: port {self.base_port + node_id} "
+                "out of range"
+            )
+        self._next_id += 1
+        self._nodes.add(node_id)
+        self.num_nodes = max(self.num_nodes, node_id + 1)
+        return node_id
+
+    def remove_node(self, node_id: int) -> None:
+        self._nodes.discard(node_id)
+        ep = self._endpoints.pop(node_id, None)
+        if ep is not None:
+            ep.close()
 
     def close(self) -> None:
         for ep in self._endpoints.values():

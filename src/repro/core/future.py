@@ -159,6 +159,14 @@ class FutureTable:
         fut.set_exception(RemoteExecutionError(message, remote_traceback))
         return True
 
+    def discard(self, msg_id: int) -> bool:
+        """Drop a pending entry WITHOUT completing the future — for a
+        created-but-never-sent msg_id (e.g. a scheduler that reserved a
+        future, then lost its target to a membership fence before sending).
+        A later reply for the id is ignored; safe if already completed."""
+        with self._lock:
+            return self._pending.pop(msg_id, None) is not None
+
     def fail_all(self, exc: BaseException) -> int:
         """Reject every outstanding future (node-death path)."""
         with self._lock:

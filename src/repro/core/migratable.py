@@ -116,6 +116,9 @@ class _Codec:
     decode: Callable[[bytes], Any]          # conversion operator
     nbytes_fixed: int | None                # None => dynamic size only
     locality: Callable[[Any], int | None] | None = None  # owning node hint
+    #: bytes the value stands for AT its owning node (a buffer_ptr's remote
+    #: buffer size) — weights locality votes; None => weight 1
+    locality_nbytes: Callable[[Any], int] | None = None
 
 
 _CODECS_BY_TYPE: dict[type, _Codec] = {}
@@ -130,6 +133,7 @@ def register_migratable(
     type_name: str | None = None,
     nbytes_fixed: int | None = None,
     locality: Callable[[Any], int | None] | None = None,
+    locality_nbytes: Callable[[Any], int] | None = None,
 ) -> None:
     """Register a ``migratable`` specialisation for ``py_type``.
 
@@ -144,10 +148,14 @@ def register_migratable(
     ``locality`` optionally maps a value to the node that *owns* it (e.g. a
     ``buffer_ptr``'s address space).  Locality-aware schedulers use it to
     route a call to the data instead of moving the data to the call — the
-    data-centric dispatch of Active Access.
+    data-centric dispatch of Active Access.  ``locality_nbytes`` sizes that
+    vote: the bytes the value stands for at its owner (a buffer_ptr's
+    remote buffer size), so a node holding 100 MB outweighs one holding
+    three 8-byte scalars regardless of pointer count.
     """
     name = type_name or f"{py_type.__module__}:{py_type.__qualname__}"
-    codec = _Codec(name, py_type, encode, decode, nbytes_fixed, locality)
+    codec = _Codec(name, py_type, encode, decode, nbytes_fixed, locality,
+                   locality_nbytes)
     _CODECS_BY_TYPE[py_type] = codec
     _CODECS_BY_NAME[name] = codec
 
@@ -165,12 +173,19 @@ def locality_of(value: Any) -> int | None:
 
 
 def scan_locality(values, max_items: int = 64) -> dict[int, int]:
-    """Locality votes across a shallow pytree of call arguments.
+    """Byte-weighted locality votes across a shallow pytree of arguments.
 
-    Returns ``{node: count}`` over every leaf with a registered locality
+    Returns ``{node: weight}`` over every leaf with a registered locality
     hook, walking at most ``max_items`` leaves (schedulers run this per
     submit — it must stay O(small)).  Containers are descended one level at
     a time; everything else is a leaf.
+
+    A leaf's vote weighs its ``locality_nbytes`` (the data it stands for at
+    its owner — a buffer_ptr's remote buffer size), clamped to >= 1 so a
+    value of unknown size still counts.  Routing to the most-bytes node is
+    what makes "move the compute, not the data" true when buffer sizes are
+    skewed: under the old count-per-pointer scheme a node owning one 8-byte
+    scalar could outvote a node owning a 100 MB tensor.
     """
     votes: dict[int, int] = {}
     stack = list(values) if isinstance(values, (list, tuple)) else [values]
@@ -184,9 +199,16 @@ def scan_locality(values, max_items: int = 64) -> dict[int, int]:
         if isinstance(v, dict):
             stack.extend(v.values())
             continue
-        node = locality_of(v)
-        if node is not None:
-            votes[node] = votes.get(node, 0) + 1
+        codec = _CODECS_BY_TYPE.get(type(v))
+        if codec is None or codec.locality is None:
+            continue
+        node = codec.locality(v)
+        if node is None:
+            continue
+        weight = 1
+        if codec.locality_nbytes is not None:
+            weight = max(1, int(codec.locality_nbytes(v)))
+        votes[node] = votes.get(node, 0) + weight
     return votes
 
 

@@ -241,6 +241,19 @@ class HandlerRegistry:
             self._table = HandlerTable(list(self._pending.values()))
             return self._table
 
+    def reinit(self) -> HandlerTable:
+        """Re-seal after late registrations — the elastic-membership path.
+
+        A process that registered handlers after ``init()`` (in
+        ``allow_late_registration`` mode) re-derives the key table here,
+        keeping its late-registration setting; every other member derives
+        the identical table from the same source, no negotiation (paper
+        §5.2).  Whether members actually agree is checked separately:
+        ``verify_peer_digest`` compares table digests, and
+        ``ClusterPool.add_node`` runs that check on every elastic join.
+        """
+        return self.init(allow_late_registration=self._allow_late)
+
     @property
     def table(self) -> HandlerTable:
         if self._table is None:

@@ -102,7 +102,9 @@ class OffloadDomain:
         return self.fabric.num_nodes
 
     def targets(self) -> list[int]:
-        return [n for n in range(self.num_nodes) if n != self.host_node]
+        # fabric.nodes() rather than range(): elastic fabrics have holes
+        # after remove_node, and retired ids must not be addressed
+        return [n for n in self.fabric.nodes() if n != self.host_node]
 
     # -- RPC surface ------------------------------------------------------------
 
@@ -135,13 +137,13 @@ class OffloadDomain:
     # -- data plane (paper Fig. 2: allocate/put/get) -----------------------------
 
     def allocate(self, node: int, shape, dtype) -> BufferPtr:
-        tag, n, handle = self.sync(
+        tag, n, handle, nbytes = self.sync(
             node,
             f2f("_ham/alloc", list(int(d) for d in shape), str(np.dtype(dtype)),
                 registry=self.registry),
         )
         assert tag == "ptr"
-        return BufferPtr(n, handle)
+        return BufferPtr(n, handle, nbytes)
 
     #: default transfer segment: put payloads above this are split into
     #: pipelined chunks, so transfers (a) always fit the shm ring window

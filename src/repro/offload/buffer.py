@@ -2,10 +2,13 @@
 pointers that combine an address space or process identifier with a local
 pointer").
 
-A :class:`BufferPtr` is (node, handle): 16 bytes on the wire, registered as a
-fixed-size ``migratable`` so it can ride the *static* fast path inside
-offloaded closures — exactly like the paper's bitwise-copyable
-``buffer_ptr`` arguments in Fig. 2.
+A :class:`BufferPtr` is (node, handle, nbytes): 24 bytes on the wire,
+registered as a fixed-size ``migratable`` so it can ride the *static* fast
+path inside offloaded closures — exactly like the paper's bitwise-copyable
+``buffer_ptr`` arguments in Fig. 2.  ``nbytes`` records the buffer's extent
+at its owner, which is what lets locality-aware scheduling weigh votes by
+the data actually behind a pointer instead of by pointer count (a pointer
+of unknown provenance carries ``nbytes=0`` and votes with weight 1).
 
 The per-node :class:`BufferRegistry` maps handles to live numpy arrays; only
 the owning node may dereference (pointers are "in general only valid within
@@ -23,21 +26,22 @@ import numpy as np
 from repro.core.errors import OffloadError
 from repro.core.migratable import register_migratable
 
-_WIRE = struct.Struct("<qq")
+_WIRE = struct.Struct("<qqq")
 
 
 @dataclasses.dataclass(frozen=True)
 class BufferPtr:
     node: int
     handle: int
+    nbytes: int = 0  # buffer extent at the owner; 0 = unknown
 
     def encode(self) -> bytes:
-        return _WIRE.pack(self.node, self.handle)
+        return _WIRE.pack(self.node, self.handle, self.nbytes)
 
     @staticmethod
     def decode(raw: bytes) -> "BufferPtr":
-        node, handle = _WIRE.unpack(raw)
-        return BufferPtr(node, handle)
+        node, handle, nbytes = _WIRE.unpack(raw)
+        return BufferPtr(node, handle, nbytes)
 
 
 register_migratable(
@@ -47,8 +51,10 @@ register_migratable(
     type_name="ham:buffer_ptr",
     nbytes_fixed=_WIRE.size,
     # a buffer_ptr knows its address space: locality-aware scheduling routes
-    # calls to the node already holding their buffers
+    # calls to the node already holding their buffers, weighted by how much
+    # data sits behind the pointer
     locality=lambda p: p.node,
+    locality_nbytes=lambda p: p.nbytes,
 )
 
 
@@ -67,7 +73,7 @@ class BufferRegistry:
             handle = self._next
             self._next += 1
             self._buffers[handle] = arr
-        return BufferPtr(self.node_id, handle)
+        return BufferPtr(self.node_id, handle, arr.nbytes)
 
     def deref(self, ptr: BufferPtr) -> np.ndarray:
         if ptr.node != self.node_id:

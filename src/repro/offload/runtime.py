@@ -156,7 +156,7 @@ def current_node() -> "NodeRuntime":
 def _h_alloc(shape, dtype):
     node = current_node()
     ptr = node.buffers.allocate(shape, dtype)
-    return ("ptr", ptr.node, ptr.handle)
+    return ("ptr", ptr.node, ptr.handle, ptr.nbytes)
 
 
 def _h_free(node_id, handle):
@@ -252,6 +252,80 @@ class NodeRuntime:
         self._loop_tid: int | None = None
         self.stats = {"handled": 0, "replies": 0, "errors": 0, "sent": 0,
                       "batches": 0}
+        # -- queue-depth feedback (scheduler's remote-load signal) ---------
+        #: last depth reported BY each peer via _cluster/stats oneways
+        #: (populated on the node peers report to — normally the host)
+        self.peer_depth: dict[int, int] = {}
+        self._depth_dst: int | None = None       # report target (None = off)
+        self._depth_interval = 0.05
+        self._depth_record = None                # _cluster/stats HandlerRecord
+        self._depth_last_sent = 0
+        self._depth_last_t = 0.0
+        self._batch_remaining = 0                # frames left in current drain
+
+    # -- queue-depth feedback ----------------------------------------------
+
+    def enable_depth_report(self, dst: int = 0,
+                            interval: float = 0.05) -> "NodeRuntime":
+        """Report this node's queue depth to ``dst`` (normally the host) as
+        ``_cluster/stats`` oneways — at most one per ``interval`` while busy,
+        plus an immediate zero report when the queue drains, so the receiver
+        never acts on a stale busy signal.  Silently disabled when the
+        handler table has no ``_cluster/stats`` entry (non-cluster domains).
+        """
+        try:
+            self._depth_record = self.table.record_of("_cluster/stats")
+        except Exception:  # noqa: BLE001 — UnknownHandlerError et al.
+            self._depth_record = None
+            return self
+        self._depth_dst = dst
+        self._depth_interval = interval
+        return self
+
+    def note_peer_depth(self, node_id: int, depth: int) -> None:
+        """Receiver side of the depth protocol (called by _cluster/stats)."""
+        self.peer_depth[int(node_id)] = int(depth)
+
+    def queue_depth(self) -> int:
+        """Requests this node has accepted but not finished executing: the
+        rest of the current drain batch plus what the transport has queued.
+        The remote half of the scheduler's join-shortest-queue signal."""
+        try:
+            pending = self.endpoint.pending_frames()
+        except Exception:  # noqa: BLE001 — estimate only, never fail dispatch
+            pending = 0
+        return self._batch_remaining + pending
+
+    def _maybe_report_depth(self, force_zero: bool = False) -> None:
+        """Emit a depth report if one is due.  Sends bypass the egress queue
+        (a depth report parked behind the batch it describes is useless)."""
+        if self._depth_dst is None:
+            return
+        now = time.monotonic()
+        if not force_zero and now - self._depth_last_t < self._depth_interval:
+            # rate limit busy reports — and skip the depth walk entirely
+            # between ticks (this runs per frame on the hot path); the
+            # busy->idle edge is caught by the force_zero call from the
+            # loop's idle branch, which bypasses the limit
+            return
+        depth = 0 if force_zero else self.queue_depth()
+        if depth == self._depth_last_sent:
+            return
+        record = self._depth_record
+        args = (self.node_id, depth)
+        n = mig.dynamic_nbytes(list(args))
+        frame = bytearray(HEADER_NBYTES + n)
+        mig.pack_dynamic_into(frame, HEADER_NBYTES, list(args))
+        HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, FLAG_DYNAMIC,
+                                self.table.key_of(record.stable_name),
+                                self.node_id, 0, n)
+        try:
+            self.endpoint.send(self._depth_dst, frame)
+        except Exception:  # noqa: BLE001 — advisory traffic must never kill
+            # the loop (e.g. the host endpoint is tearing down)
+            return
+        self._depth_last_sent = depth
+        self._depth_last_t = now
 
     # -- sending ------------------------------------------------------------
 
@@ -458,11 +532,18 @@ class NodeRuntime:
         while not self._stop.is_set():
             frames = ep.recv_many(_DRAIN_BATCH, timeout=poll_timeout)
             if not frames:
+                # idle: retract any stale busy signal so the scheduler does
+                # not keep routing around a worker that already drained
+                self._maybe_report_depth(force_zero=True)
                 continue
             self.stats["batches"] += 1
             self._draining = True
+            self._batch_remaining = len(frames)
             try:
                 for frame in frames:
+                    # report BEFORE executing: a long handler must not hide
+                    # the queue that is forming behind it
+                    self._maybe_report_depth()
                     try:
                         self._handle_frame(frame, owned=not leased)
                     except Exception:  # noqa: BLE001 — a poison frame must
@@ -470,8 +551,10 @@ class NodeRuntime:
                         # and peers all depend on it staying alive)
                         self.stats["errors"] += 1
                         traceback.print_exc()
+                    self._batch_remaining -= 1
             finally:
                 self._draining = False
+                self._batch_remaining = 0
                 # drop frame refs BEFORE blocking in the next recv_many:
                 # holding them would pin pooled frame buffers (and leased
                 # ring space) across the idle wait

@@ -50,7 +50,8 @@ def _worker_body(kind: str, args: dict, node_id: int, setup_modules: list[str]) 
     if kind == "shm":
         from repro.comm.shm import ShmEndpoint
 
-        endpoint = ShmEndpoint(args["prefix"], node_id, args["num_nodes"])
+        endpoint = ShmEndpoint(args["prefix"], node_id, args["num_nodes"],
+                               peers=args.get("peers"))
     elif kind == "socket":
         from repro.comm.socket import SocketEndpoint
 
@@ -63,6 +64,9 @@ def _worker_body(kind: str, args: dict, node_id: int, setup_modules: list[str]) 
     from repro.offload.runtime import NodeRuntime
 
     runtime = NodeRuntime(node_id, endpoint, table)
+    # queue-depth feedback to the host (node 0); a no-op unless the handler
+    # set includes _cluster/stats (i.e. the host runs a cluster scheduler)
+    runtime.enable_depth_report(dst=0)
     try:
         runtime.run()
     finally:
@@ -93,7 +97,7 @@ def spawn_shm_workers(fabric, node_ids, setup_modules=None) -> list:
             target=_worker_body,
             args=(
                 "shm",
-                {"prefix": fabric.prefix, "num_nodes": fabric.num_nodes},
+                _shm_args(fabric),
                 node_id,
                 list(setup_modules),
             ),
@@ -102,6 +106,17 @@ def spawn_shm_workers(fabric, node_ids, setup_modules=None) -> list:
         p.start()
         procs.append(p)
     return procs
+
+
+def _shm_args(fabric) -> dict:
+    """Endpoint-construction args for a worker attaching to ``fabric``.
+    ``peers`` carries the live member set — an elastic fabric may have holes
+    (retired ids) whose segments no longer exist."""
+    return {
+        "prefix": fabric.prefix,
+        "num_nodes": fabric.num_nodes,
+        "peers": fabric.nodes(),
+    }
 
 
 def reap(procs, timeout: float = 5.0) -> None:
@@ -131,6 +146,18 @@ def reap(procs, timeout: float = 5.0) -> None:
                     p.wait(1.0)
 
 
+def _spawn_worker_subprocess(spec: dict):
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.offload.worker", json.dumps(spec)], env=env
+    )
+
+
 def spawn_socket_worker_subprocess(
     node_id: int, num_nodes: int, base_port: int, setup_modules=None
 ):
@@ -140,24 +167,31 @@ def spawn_socket_worker_subprocess(
     registry (see :func:`registered_setup_modules`) — a fresh interpreter
     has no inherited state, so it must re-run the same static-init imports.
     """
-    import os
-    import subprocess
-
     if setup_modules is None:
         setup_modules = registered_setup_modules()
-
-    spec = {
+    return _spawn_worker_subprocess({
         "kind": "socket",
         "args": {"num_nodes": num_nodes, "base_port": base_port},
         "node_id": node_id,
         "setup_modules": list(setup_modules),
-    }
-    env = dict(os.environ)
-    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    env["PYTHONPATH"] = root + os.pathsep + env.get("PYTHONPATH", "")
-    return subprocess.Popen(
-        [sys.executable, "-m", "repro.offload.worker", json.dumps(spec)], env=env
-    )
+    })
+
+
+def spawn_shm_worker_subprocess(fabric, node_id: int, setup_modules=None):
+    """Launch a worker as a *fresh* interpreter attached to a ShmFabric.
+
+    Same wire/segment behaviour as :func:`spawn_shm_workers`, but with no
+    ``os.fork`` — required once the parent has started threads that cannot
+    survive forking (a JAX-initialised test process is the canonical case).
+    """
+    if setup_modules is None:
+        setup_modules = registered_setup_modules()
+    return _spawn_worker_subprocess({
+        "kind": "shm",
+        "args": _shm_args(fabric),
+        "node_id": node_id,
+        "setup_modules": list(setup_modules),
+    })
 
 
 def main(argv: list[str]) -> int:

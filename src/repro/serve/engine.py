@@ -220,10 +220,23 @@ def _h_serve_admit(prompt, rid, max_new_tokens, temperature):
     """Admit one request into this node's engine (prefill runs HERE, on the
     worker, overlapping other workers' decode steps).  Returns the first
     generated token."""
+    from repro.core.errors import OffloadError
     from repro.offload.runtime import current_node
 
-    eng = _NODE_ENGINES[id(current_node())]
-    slot = eng.free_slots()[0]
+    eng = _NODE_ENGINES.get(id(current_node()))
+    if eng is None:
+        # e.g. a session re-placed onto a worker added after the engine was
+        # built (replicas are created at construction — ROADMAP names
+        # serving-replica elasticity as the follow-on)
+        raise OffloadError("no serving-engine replica on this worker")
+    free = eng.free_slots()
+    if not free:
+        # a session re-placed here by a death mid-admission (the router's
+        # eligible= restriction applies to the engine's placement, not to a
+        # re-placement inside Scheduler.submit) — fail diagnosably rather
+        # than IndexError; the driver surfaces it as RemoteExecutionError
+        raise OffloadError("no free serving slot on this worker")
+    slot = free[0]
     req = Request(
         prompt=np.asarray(prompt, np.int32),
         max_new_tokens=int(max_new_tokens),
@@ -266,9 +279,16 @@ class ClusterServingEngine:
     release the GIL).  Admissions are async too: a prefill on worker A
     overlaps decode on worker B.
 
-    Request routing is admission-time least-loaded; a request then sticks
-    to its worker (its KV cache lives there) — the sticky-session analogue
-    of the scheduler's locality policy.
+    Request routing goes through the scheduler's :class:`SessionRouter`:
+    each request is a session keyed ``serve/<rid>``, placed once by
+    rendezvous hash over the workers *with a free slot* at admission time,
+    then pinned — every subsequent call for that request lands on the
+    worker holding its KV cache, and an unrelated pool resize cannot move
+    it (the stickiness contract in ``repro.cluster.sessions``).  This
+    replaces the ad-hoc admission-time placement the engine used to
+    hand-roll; the engine's slot accounting stays its own (the router knows
+    placement, not capacity).  Engine replicas are created for the pool's
+    workers at construction; a completed request ends its session.
     """
 
     def __init__(self, model, params, *, num_workers: int = 2,
@@ -331,17 +351,29 @@ class ClusterServingEngine:
             fut.add_done_callback(done_q.put)
 
         while pending or inflight or any(active.values()):
-            for node in sorted(nodes, key=lambda n: active[n] + queued[n]):
-                while pending and (active[node] + queued[node]
-                                   < self.slots_per_worker):
-                    req = pending.pop(0)
-                    queued[node] += 1
-                    track(self.sched.submit(
-                        f2f("_serve/admit", np.asarray(req.prompt, np.int32),
-                            int(req.rid), int(req.max_new_tokens),
-                            float(req.temperature), registry=reg),
-                        node=node,
-                    ), "admit", node)
+            # admission: place each request's session once (rendezvous hash
+            # over workers with a free slot), then submit THROUGH the router
+            # so the admit sticks to the placement
+            while pending:
+                free = [n for n in nodes
+                        if active[n] + queued[n] < self.slots_per_worker]
+                if not free:
+                    break
+                req = pending[0]
+                node = self.sched.sessions.route(
+                    f"serve/{req.rid}", eligible=free
+                )
+                if node is None:
+                    break  # no live worker with a free slot
+                pending.pop(0)
+                queued[node] += 1
+                track(self.sched.submit(
+                    f2f("_serve/admit", np.asarray(req.prompt, np.int32),
+                        int(req.rid), int(req.max_new_tokens),
+                        float(req.temperature), registry=reg),
+                    session=f"serve/{req.rid}",
+                ), "admit", node)
+            for node in nodes:
                 if (active[node] or queued[node]) and not stepping[node]:
                     stepping[node] = True
                     track(self.sched.submit(
@@ -374,6 +406,8 @@ class ClusterServingEngine:
                 active[node] = self.slots_per_worker - free
                 for rid, tok in emitted:
                     outputs[rid].append(tok)
+        for r in requests:  # sessions end with their requests
+            self.sched.sessions.end_session(f"serve/{r.rid}")
         return outputs
 
     def close(self) -> None:

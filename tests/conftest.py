@@ -18,6 +18,12 @@ def pytest_configure(config):
         "automatically where fork or /dev/shm is unavailable (CI runners, "
         "macOS default spawn, sandboxes)",
     )
+    config.addinivalue_line(
+        "markers",
+        "shm: attaches fresh-interpreter worker subprocesses over /dev/shm "
+        "(no os.fork — safe after JAX starts threads); skipped where "
+        "/dev/shm is unavailable",
+    )
 
 
 def _fork_available() -> bool:
@@ -32,12 +38,21 @@ def _fork_available() -> bool:
     return os.path.isdir("/dev/shm") and os.access("/dev/shm", os.W_OK)
 
 
+def _shm_available() -> bool:
+    return os.path.isdir("/dev/shm") and os.access("/dev/shm", os.W_OK)
+
+
 def pytest_collection_modifyitems(config, items):
-    if _fork_available():
-        return
+    fork_ok = _fork_available()
+    shm_ok = _shm_available()
     skip_fork = pytest.mark.skip(
         reason="fork-based cross-process tests need os.fork and a writable /dev/shm"
     )
+    skip_shm = pytest.mark.skip(
+        reason="shm subprocess tests need a writable /dev/shm"
+    )
     for item in items:
-        if "fork" in item.keywords:
+        if not fork_ok and "fork" in item.keywords:
             item.add_marker(skip_fork)
+        if not shm_ok and "shm" in item.keywords:
+            item.add_marker(skip_shm)

@@ -186,6 +186,196 @@ def test_thread_worker_death_fails_queued_calls_and_reroutes(pool):
     assert sched.submit(_spin(reg), node=1).get(10) == 45
 
 
+# -- elastic membership -------------------------------------------------------
+
+
+def test_add_node_joins_scheduler_and_takes_traffic(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, policy="round_robin")
+    new = pool.add_node()
+    assert new == 4  # ids are monotonic, never reused
+    assert sched.live_nodes() == [1, 2, 3, 4]
+    futs = [sched.submit(_spin(reg)) for _ in range(8)]
+    assert gather(futs, 30) == [45] * 8
+    assert sched.stats["routed"][new] >= 2  # round robin includes the joiner
+    # the new node is individually addressable too
+    assert sched.submit(_spin(reg), node=new).get(10) == 45
+
+
+def test_remove_node_drain_finishes_inflight_then_fences(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=8)
+    inflight = [sched.submit(_sleep(reg, 0.3), node=3) for _ in range(3)]
+    pool.remove_node(3, drain=True)  # blocks: fence, drain, retire
+    # drained calls completed normally — nothing was failed
+    assert gather(inflight, 5) == [0.3] * 3
+    assert sched.stats["failed_inflight"] == 0
+    assert sched.live_nodes() == [1, 2]
+    with pytest.raises(NodeDownError):
+        sched.submit(_spin(reg), node=3)
+    # the id is retired from the pool and the fabric
+    assert 3 not in pool.worker_nodes
+    assert 3 not in pool.fabric.nodes()
+
+
+def test_remove_node_without_drain_fails_inflight(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=8)
+    running = sched.submit(_sleep(reg, 0.2), node=2)
+    time.sleep(0.05)  # let the worker start executing
+    queued = [sched.submit(_sleep(reg, 5.0), node=2) for _ in range(2)]
+    pool.remove_node(2, drain=False)
+    for f in queued:
+        with pytest.raises(RemoteExecutionError, match="died"):
+            f.get(10)
+    assert sched.live_nodes() == [1, 3]
+    del running  # may have completed or failed depending on kill timing
+
+
+def test_elastic_resize_under_continuous_traffic():
+    """The PR's acceptance property: a live pool grows 2 -> 4 and shrinks
+    back to 2 (drained) while a continuous submit stream observes ZERO
+    failed calls."""
+    import threading
+
+    pool = ClusterPool.local(2, registry=_registry())
+    try:
+        reg = pool.domain.registry
+        sched = Scheduler(pool, max_inflight=8)
+        stop = threading.Event()
+        futs: list = []
+        submit_errors: list = []
+
+        def stream():
+            while not stop.is_set():
+                try:
+                    futs.append(sched.submit(_sleep(reg, 0.003)))
+                except Exception as e:  # noqa: BLE001 — the assertion target
+                    submit_errors.append(e)
+
+        t = threading.Thread(target=stream)
+        t.start()
+        try:
+            time.sleep(0.15)
+            added = [pool.add_node(), pool.add_node()]
+            assert sched.live_nodes() == [1, 2, *added]
+            time.sleep(0.25)  # let traffic spread over 4 workers
+            for node in added:
+                pool.remove_node(node, drain=True)
+            assert sched.live_nodes() == [1, 2]
+            time.sleep(0.1)
+        finally:
+            stop.set()
+            t.join()
+        results = gather(futs, 120)  # fail-fast on any errored future
+        assert submit_errors == []
+        assert len(results) > 50
+        assert all(r == 0.003 for r in results)
+        # the transient workers really carried traffic
+        assert all(sched.stats["routed"].get(n, 0) > 0 for n in added)
+    finally:
+        pool.close()
+
+
+# -- sticky sessions ----------------------------------------------------------
+
+
+def test_sessions_stick_across_resize_and_replace_on_death(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=8)
+    keys = [f"s{i}" for i in range(12)]
+    for k in keys:
+        assert sched.submit(_spin(reg), session=k).get(10) == 45
+    placement = {k: sched.sessions.lookup(k) for k in keys}
+    assert set(placement.values()) <= {1, 2, 3}
+
+    # an unrelated grow must not move any pinned session
+    new = pool.add_node()
+    for k in keys:
+        sched.submit(_spin(reg), session=k).get(10)
+    assert {k: sched.sessions.lookup(k) for k in keys} == placement
+
+    # kill one session-owning worker: only ITS sessions re-place
+    victim = placement[keys[0]]
+    victims = [k for k, n in placement.items() if n == victim]
+    pool.kill(victim)
+    deadline = time.time() + 10
+    while victim in sched.live_nodes() and time.time() < deadline:
+        time.sleep(0.02)
+    for k in keys:
+        sched.submit(_spin(reg), session=k).get(10)
+    after = {k: sched.sessions.lookup(k) for k in keys}
+    for k in keys:
+        if k in victims:
+            assert after[k] != victim and after[k] in sched.live_nodes()
+        else:
+            assert after[k] == placement[k]
+    assert sched.stats["session_routed"] == 3 * len(keys)
+    del new
+
+
+def test_session_submits_respect_credits(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=2, submit_timeout=0.3)
+    held = [sched.submit(_sleep(reg, 0.8), session="hot") for _ in range(2)]
+    with pytest.raises(OffloadError, match="backpressure"):
+        sched.submit(_sleep(reg, 0.8), session="hot")  # pinned worker full
+    gather(held, 30)
+
+
+# -- queue-depth feedback -----------------------------------------------------
+
+
+def test_depth_reports_route_second_scheduler_around_busy_worker(pool):
+    """Remote queue depth covers load the host-side in-flight count cannot
+    see: a second scheduler (fresh counters) must avoid the worker another
+    scheduler buried in work, purely from _cluster/stats reports."""
+    reg = pool.domain.registry
+    sched_a = Scheduler(pool, max_inflight=8)
+    busy = [sched_a.submit(_sleep(reg, 0.5), node=1) for _ in range(5)]
+    time.sleep(0.3)  # let the worker report its backlog
+    assert pool.host.peer_depth.get(1, 0) > 0
+    sched_b = Scheduler(pool, policy="least_outstanding", max_inflight=8)
+    futs = [sched_b.submit(_spin(reg)) for _ in range(4)]
+    assert gather(futs, 30) == [45] * 4
+    assert sched_b.stats["routed"].get(1, 0) == 0  # avoided the buried node
+    gather(busy, 30)
+
+
+def test_depth_reports_decay_to_zero_when_idle(pool):
+    reg = pool.domain.registry
+    sched = Scheduler(pool, max_inflight=8)
+    gather([sched.submit(_sleep(reg, 0.1), node=1) for _ in range(4)], 30)
+    deadline = time.time() + 5
+    while pool.host.peer_depth.get(1, 0) != 0 and time.time() < deadline:
+        time.sleep(0.02)
+    assert pool.host.peer_depth.get(1, 0) == 0  # idle worker retracted it
+    del sched
+
+
+# -- byte-weighted locality ---------------------------------------------------
+
+
+def test_locality_routes_to_byte_heavy_node(pool):
+    """The locality-weighting regression: a node owning ONE big buffer must
+    win against a node owning MANY small ones (votes weigh nbytes)."""
+    reg = pool.domain.registry
+    sched = Scheduler(pool, policy="locality")
+    dom = pool.domain
+    smalls = [dom.allocate(1, (1,), "float64") for _ in range(3)]  # 24 B
+    big = dom.allocate(2, (1 << 16,), "float64")                   # 512 KB
+    fn = f2f("_cluster/touch", (big, *smalls), registry=reg)
+    # routing only (the probe handler takes a single ptr): the pick must
+    # follow the bytes, not the 3-pointer majority on node 1
+    assert sched._pick(fn) == 2
+    # and an executed call on the big buffer lands on its owner
+    dom.put(np.ones(1 << 16), big)
+    assert sched.submit(
+        f2f("_cluster/touch", big, registry=reg)
+    ).get(10) == float(1 << 16)
+    assert sched.stats["routed"][2] == 1
+
+
 # -- worker failure (forked processes over shm) ------------------------------
 
 
@@ -243,6 +433,43 @@ def test_fork_worker_restart_rejoins_pool():
             time.sleep(0.05)
         assert sched.live_nodes() == [1, 2]
         assert sched.submit(_spin(reg), node=1).get(20) == 45
+    finally:
+        pool.close()
+
+
+@pytest.mark.fork
+def test_fork_elastic_add_remove_node_under_traffic():
+    """Elastic membership over a REAL process fabric: grow a forked shm
+    pool under traffic (ring creation + attach_peer broadcast + spawn +
+    digest verify), then drain-remove the newcomer and reclaim its rings."""
+    reg = _default_registry_ready()
+    pool = ClusterPool.shm(2, registry=reg)
+    try:
+        sched = Scheduler(pool, max_inflight=8)
+        pool.ping_all()
+        inflight = [sched.submit(_sleep(reg, 0.05)) for _ in range(8)]
+        new = pool.add_node()
+        assert new == 3
+        assert sched.live_nodes() == [1, 2, 3]
+        # traffic reaches the newcomer, pinned and policy-routed
+        assert sched.submit(_spin(reg), node=new).get(20) == 45
+        results = gather(
+            [sched.submit(_spin(reg)) for _ in range(12)] + inflight, 30
+        )
+        assert results[:12] == [45] * 12
+        assert sched.stats["routed"][new] >= 1
+
+        pool.remove_node(new, drain=True)
+        assert sched.live_nodes() == [1, 2]
+        assert sched.stats["failed_inflight"] == 0
+        # the retired node's ring segments are unlinked immediately
+        assert not any(
+            f.startswith(pool.fabric.prefix) and f.endswith("_3")
+            or f.startswith(f"{pool.fabric.prefix}_3_")
+            for f in os.listdir("/dev/shm")
+        )
+        assert gather([sched.submit(_spin(reg)) for _ in range(4)], 30) \
+            == [45] * 4
     finally:
         pool.close()
 

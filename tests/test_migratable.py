@@ -121,9 +121,23 @@ def test_custom_codec_roundtrip():
 def test_buffer_ptr_is_fixed_size_static():
     from repro.offload.buffer import BufferPtr
 
-    ptr = BufferPtr(3, 42)
+    ptr = BufferPtr(3, 42, 1024)
     spec = mig.spec_of(ptr)
     payload = mig.pack_static((ptr,), (spec,))
-    assert len(payload) == 16
+    assert len(payload) == 24  # node + handle + nbytes, all i64
     (out,) = mig.unpack_static(payload, (spec,))
     assert out == ptr
+
+
+def test_scan_locality_weights_by_nbytes():
+    """The locality-policy regression (ROADMAP item): one byte-heavy buffer
+    must outvote many tiny ones — votes weigh data, not pointer count."""
+    from repro.offload.buffer import BufferPtr
+
+    small = [BufferPtr(1, h, 8) for h in (1, 2, 3)]       # 24 B on node 1
+    big = BufferPtr(2, 9, 100 * 1024 * 1024)              # 100 MB on node 2
+    votes = mig.scan_locality((big, *small))
+    assert votes[2] > votes[1]
+    assert votes == {1: 24, 2: 100 * 1024 * 1024}
+    # unknown-size pointers still vote, with unit weight
+    assert mig.scan_locality((BufferPtr(5, 1),)) == {5: 1}

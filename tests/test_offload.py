@@ -71,25 +71,31 @@ def test_chunked_put_get_roundtrip():
         dom.shutdown()
 
 
-@pytest.mark.fork
+@pytest.mark.shm
 def test_oversized_reply_errors_instead_of_killing_worker():
     """A reply that exceeds the transport frame limit must come back as a
     RemoteExecutionError — not silently kill the worker's event loop and
-    strand the caller in a timeout."""
+    strand the caller in a timeout.
+
+    The worker is a *fresh interpreter* attached over shm, not a fork: by
+    the time this test runs, earlier tests have imported JAX and started
+    its threads, and ``os.fork()`` in a multithreaded process is exactly
+    the deadlock JAX's RuntimeWarning warns about — spawning avoids the
+    hazard instead of suppressing the warning."""
     from repro.comm.shm import ShmFabric
     from repro.core.registry import default_registry
-    from repro.offload.worker import spawn_shm_workers
+    from repro.offload.worker import reap, spawn_shm_worker_subprocess
 
-    # forked workers re-init the default registry, so the host must use it
-    # too (same-source assumption): internal _ham handlers are enough here
+    # subprocess workers re-init the default registry, so the host must use
+    # it too (same-source assumption): internal _ham handlers are enough here
     reg = default_registry()
     if not reg.initialised:
         reg.init()
     fab = ShmFabric(2, capacity=1 << 20)  # 1 MB rings
-    procs = spawn_shm_workers(fab, [1])
+    proc = spawn_shm_worker_subprocess(fab, 1)
     dom = OffloadDomain(fab, registry=reg)
     try:
-        assert dom.ping(1, 3, timeout=20.0) == 3
+        assert dom.ping(1, 3, timeout=30.0) == 3
         n = (1 << 21) // 8  # 2 MB buffer
         ptr = dom.allocate(1, (n,), "float64")
         dom.put(np.ones(n), ptr)  # put auto-chunks to the ring size
@@ -102,8 +108,7 @@ def test_oversized_reply_errors_instead_of_killing_worker():
         dom.free(ptr)
     finally:
         dom.shutdown()
-        for p in procs:
-            p.join(timeout=5)
+        reap([proc], timeout=5.0)
 
 
 def test_direct_and_wire_data_plane_agree(dom):

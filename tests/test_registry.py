@@ -87,8 +87,10 @@ def test_elastic_reinit_allows_late_registration():
     reg.register(_noop, name="x")
     t1 = reg.init(allow_late_registration=True)
     reg.register(_noop, name="y")
-    t2 = reg.init()
+    t2 = reg.reinit()  # keeps the late-registration mode
     assert len(t2) == 2 and t1.digest != t2.digest
+    reg.register(_noop, name="z")  # still allowed after reinit
+    assert len(reg.reinit()) == 3
 
 
 def test_unknown_key_raises():
