@@ -94,7 +94,11 @@ def _frames_per_sec(kind: str, factor: int, n_frames: int) -> float:
     return n_frames / dt
 
 
-def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+def run(smoke: bool = False,
+        serialise_rows=None) -> list[tuple[str, float, str]]:
+    """``serialise_rows=`` lets the harness pass the serialisation section's
+    already-collected rows (benchmarks/run.py runs that section itself);
+    standalone invocations leave it None and measure here."""
     rows: list[tuple[str, float, str]] = []
     fps: dict[str, dict[str, float]] = {}
     sizes = (
@@ -124,6 +128,25 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     for name, us in putget_median_us.items():
         rows.append((f"batching/putget/{name}_median", us, ""))
 
+    # small-RPC fast path (compiled WirePlan / FLAG_FUSED) — the request-path
+    # half of the hot path; section built by benchmarks/rpc_fastpath.py
+    from benchmarks import rpc_fastpath, serialisation
+
+    rpc_us = rpc_fastpath.measure(smoke=smoke)
+    for k, v in rpc_us["rtt_us"].items():
+        if v is not None:
+            rows.append((f"batching/rpc/rtt_{k}", v, ""))
+    for k, v in rpc_us["stream_us"].items():
+        rows.append((f"batching/rpc/stream_{k}", v, ""))
+
+    # serialisation medians ride along so the codec trend is persisted too
+    # (they were printed but never recorded before this section existed)
+    if serialise_rows is None:
+        serialise_rows = serialisation.run(smoke=smoke)
+    serialise_us = {
+        name.split("/", 1)[1]: round(us, 3) for name, us, _ in serialise_rows
+    }
+
     shm_speedup = fps["shm"]["64"] / fps["shm"]["1"]
     socket_speedup = fps["socket"]["64"] / fps["socket"]["1"]
     putget_speedup = {
@@ -137,7 +160,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         if k in SEED_PUTGET_MEDIAN_US and v
     }
     report = {
-        "schema": "hotpath-v1",
+        "schema": "hotpath-v2",
         "smoke": smoke,
         "frame_nbytes": FRAME_NBYTES,
         "frames_per_sec": {
@@ -154,11 +177,22 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         "seed_putget_median_us": SEED_PUTGET_MEDIAN_US,
         "putget_speedup_vs_seed": putget_speedup,
         "putget_median_speedup_vs_seed": putget_median_speedup,
+        "rpc_us": rpc_us,
+        "serialise_us": serialise_us,
         "acceptance": {
             "shm_x64_ge_3x": shm_speedup >= 3.0,
             "putget_4MB_plus_ge_1p5x": all(
                 putget_speedup.get(k, 0) >= 1.5
                 for k in ("put_4MB", "get_4MB", "put_64MB", "get_64MB")
+            ),
+            # WirePlan PR: small static RPC >= 2x the pre-plan dynamic path
+            # (throughput view; the latency view is floor-bound — both are
+            # recorded under rpc_us), fused >= 1.5x over unfused static
+            "rpc_static_stream_ge_2x_seed_dynamic": (
+                rpc_us["speedup"]["static_stream_vs_seed_dynamic"] >= 2.0
+            ),
+            "rpc_fused_ge_1p5x_static": (
+                rpc_us["speedup"]["fused_stream_vs_static"] >= 1.5
             ),
         },
     }

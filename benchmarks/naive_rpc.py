@@ -11,6 +11,14 @@ What vendor offload stacks pay per call, reproduced honestly:
 HAM's thesis (paper §4.3) is that a deterministic key map + bitwise
 payloads removes all three.  Both sides here run over the *same* fabrics
 as HAM, so the measured gap is mechanism, not transport.
+
+Comparison hygiene: HAM itself has TWO wire paths — the compiled-plan
+static path (``FLAG_STATIC``, spec known to both sides) and the dynamic
+TLV fallback — and they differ by several x on small calls.  Every
+benchmark row that compares against this baseline therefore says which
+HAM path it measured (see ``offload_overhead.py`` notes and the
+``path_labels`` in ``BENCH_hotpath.json``'s ``rpc_us`` section); an
+unlabeled "HAM vs naive" number would be ambiguous by that same margin.
 """
 
 from __future__ import annotations

@@ -162,27 +162,37 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     # smoke: one-repeat-class sizes so CI can execute every code path fast
     n_fast = 40 if smoke else 2000
     n_proc = 20 if smoke else 1000
+    # every HAM row names WHICH wire path it measured (static WirePlan vs
+    # dynamic TLV) so Fig.-3-style comparisons are unambiguous: demo/
+    # empty_static rides the static path (plan-packed, zero-byte payload
+    # AND zero-byte static reply), demo/add rides the dynamic TLV path
     rows = []
     local_inline = bench_ham_local_inline(n_fast)
-    rows.append(("offload/ham_local_inline", local_inline, "empty fn RTT"))
-    rows.append(("offload/ham_local", bench_ham_local(n_fast), "empty fn RTT"))
-    rows.append(("offload/ham_shm", bench_ham_shm(n_proc), "forked worker"))
+    rows.append(("offload/ham_local_inline", local_inline,
+                 "empty fn RTT [HAM static path]"))
+    rows.append(("offload/ham_local", bench_ham_local(n_fast),
+                 "empty fn RTT [HAM static path]"))
+    rows.append(("offload/ham_shm", bench_ham_shm(n_proc),
+                 "forked worker [HAM static path]"))
     rows.append(("offload/ham_socket", bench_ham_socket(n_proc),
-                 "fresh interpreter"))
+                 "fresh interpreter [HAM static path]"))
     naive_local = bench_naive_local(n_fast)
     rows.append(("offload/naive_local", naive_local, "pickle+name lookup"))
     naive_socket = bench_naive_socket(20 if smoke else 500)
     rows.append(("offload/naive_socket", naive_socket, "pickle+name lookup"))
     rows.append(
         ("offload/RATIO_naive_over_ham_empty", naive_local / local_inline,
-         "same-transport control (see dispatch/* for the vendor-class gap)")
+         "naive/static same-transport control (see dispatch/* for the "
+         "vendor-class gap; rpc/* adds the static-vs-dynamic split)")
     )
     ham_mb, naive_mb = bench_payload_pair(
         nbytes=1 << 16 if smoke else 1 << 20, n=10 if smoke else 300
     )
-    rows.append(("offload/ham_1MB_args", ham_mb, "typed bitwise payload"))
+    rows.append(("offload/ham_1MB_args", ham_mb,
+                 "typed bitwise payload [HAM dynamic path]"))
     rows.append(("offload/naive_1MB_args", naive_mb, "pickled payload"))
-    rows.append(("offload/RATIO_naive_over_ham_1MB", naive_mb / ham_mb, ""))
+    rows.append(("offload/RATIO_naive_over_ham_1MB", naive_mb / ham_mb,
+                 "naive/dynamic"))
     return rows
 
 

@@ -1,0 +1,247 @@
+"""Small-RPC fast path: compiled WirePlan vs dynamic TLV vs fused frames.
+
+The Fig.-3 regime this PR attacks: calls with <=256 B of static arguments
+over shared memory, where per-message marshalling and per-frame publication
+dominate.  The SAME handler function is measured on every path, so the gap
+is mechanism, not handler work:
+
+* ``static``  — ``demo/echo_small_static``: compiled-plan request
+  (``FLAG_STATIC``) + plan-packed static reply,
+* ``dynamic`` — ``demo/echo_small_dyn``: self-describing TLV both ways
+  (what every call paid before the WirePlan PR),
+* ``fused``   — the static call shipped in ``FLAG_FUSED`` multi-call
+  frames (``NodeRuntime.send_fused``) with fused replies,
+* ``naive_pickle`` — the vendor-analogue RPC (name resolution + pickle)
+  over the *same* shm transport, for the Fig.-3 cross-stack comparison.
+
+Two cost views are recorded:
+
+* ``rtt_us``    — strict one-at-a-time round-trip medians (latency view;
+  on small payloads this is transport-floor-bound, so the codec gap shows
+  but compresses),
+* ``stream_us`` — per-call cost with a 64-call window (throughput view —
+  the Fig. 3 "cost per offload" under load, where marshalling dominates).
+
+Results feed ``BENCH_hotpath.json`` (``rpc_us`` section, written by
+``benchmarks/batching.py``) and the ratios are gated by
+``benchmarks/trend_gate.py``.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+import repro.offload.demo_handlers  # noqa: F401 — registers demo/echo_small_*
+from repro.core.closure import f2f
+from repro.core.registry import default_registry
+
+#: pre-WirePlan numbers for the same echo_small call shapes, measured at the
+#: PR-3 revision in this container (shm fabric, forked worker, idle machine)
+#: — the denominator of the "vs the old dynamic path" speedups, following
+#: the SEED_PUTGET convention in benchmarks/batching.py.
+SEED_RPC_US = {
+    "static_rtt": 51.8,
+    "dynamic_rtt": 55.0,
+    "static_stream": 43.9,
+    "dynamic_stream": 54.1,
+}
+
+_STREAM_WINDOW = 64
+_FUSED_BATCH = 16
+
+
+def _median_us(fn, n, warmup) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    return statistics.median(ts)
+
+
+def _shm_available() -> bool:
+    import os
+
+    return (
+        hasattr(os, "fork")
+        and os.path.isdir("/dev/shm")
+        and os.access("/dev/shm", os.W_OK)
+    )
+
+
+def _naive_rtt_us(n: int, warmup: int) -> float | None:
+    """Pickle-RPC round trip over its own shm fabric (forked server)."""
+    import multiprocessing
+
+    from benchmarks.naive_rpc import NaiveRpcClient, empty
+    from repro.comm.shm import ShmFabric
+
+    fab = ShmFabric(2)
+
+    def serve(prefix, num_nodes):
+        from benchmarks.naive_rpc import NaiveRpcServer
+        from repro.comm.shm import ShmEndpoint
+
+        ep = ShmEndpoint(prefix, 1, num_nodes, peers=[0, 1])
+        try:
+            NaiveRpcServer(ep).run()
+        finally:
+            ep.close()
+
+    ctx = multiprocessing.get_context("fork")
+    proc = ctx.Process(target=serve, args=(fab.prefix, 2), daemon=True)
+    proc.start()
+    try:
+        client = NaiveRpcClient(fab.endpoint(0), 1)
+        us = _median_us(lambda: client.call(empty), n, warmup)
+        client.stop_server()
+    finally:
+        from repro.offload.worker import reap
+
+        reap([proc], timeout=5.0)
+        fab.close()
+    return us
+
+
+def measure(smoke: bool = False) -> dict:
+    """Run every path; returns the ``rpc_us`` report section."""
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    n_rtt, warm_rtt = (300, 50) if smoke else (2000, 300)
+    stream_n, stream_reps = (256, 3) if smoke else (1024, 9)
+
+    from repro.offload.api import OffloadDomain
+    from repro.offload.demo_handlers import _ECHO_ARGS
+    from repro.offload.worker import reap
+
+    transport = "shm-fork" if _shm_available() else "local-threads"
+    if transport == "shm-fork":
+        from repro.comm.shm import ShmFabric
+        from repro.offload.worker import spawn_shm_workers
+
+        fabric = ShmFabric(2)
+        procs = spawn_shm_workers(fabric, [1])
+        dom = OffloadDomain(fabric, inline_host=True)
+    else:  # no /dev/shm (sandboxes, macOS CI): threads keep the bench alive
+        procs = []
+        dom = OffloadDomain.local(2, inline_host=True)
+    dom.ping(1, timeout=30.0)
+
+    call_static = f2f("demo/echo_small_static", *_ECHO_ARGS)
+    call_dyn = f2f("demo/echo_small_dyn", *_ECHO_ARGS)
+    host = dom.host
+    expect = host.send_sync(1, call_static)
+    assert host.send_sync(1, call_dyn) == expect
+
+    def stream(send_one, n=stream_n, window=_STREAM_WINDOW):
+        futs = []
+        for _ in range(n):
+            futs.append(send_one())
+            if len(futs) >= window:
+                host._inline_wait(futs.pop(0), 30)
+        for f in futs:
+            host._inline_wait(f, 30)
+
+    def stream_fused(n=stream_n, batch=_FUSED_BATCH, window=4):
+        pend = []
+        for _ in range(n // batch):
+            pend.append(host.send_fused(1, [call_static] * batch))
+            if len(pend) >= window:
+                for f in pend.pop(0):
+                    host._inline_wait(f, 30)
+        for b in pend:
+            for f in b:
+                host._inline_wait(f, 30)
+
+    def stream_us(fn) -> float:
+        fn()  # warm
+        ts = []
+        for _ in range(stream_reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return statistics.median(ts) / stream_n * 1e6
+
+    try:
+        rtt_static = _median_us(lambda: host.send_sync(1, call_static),
+                                n_rtt, warm_rtt)
+        rtt_dynamic = _median_us(lambda: host.send_sync(1, call_dyn),
+                                 n_rtt, warm_rtt)
+        st_static = stream_us(lambda: stream(
+            lambda: host.send_async(1, call_static)))
+        st_dynamic = stream_us(lambda: stream(
+            lambda: host.send_async(1, call_dyn)))
+        st_fused = stream_us(stream_fused)
+    finally:
+        dom.shutdown()
+        if procs:
+            reap(procs)
+
+    naive = None
+    if transport == "shm-fork":
+        naive = _naive_rtt_us(max(n_rtt // 4, 50), max(warm_rtt // 4, 10))
+
+    payload_nbytes = sum(s.nbytes for s in call_static.record.arg_specs)
+    r = lambda v: round(v, 2)  # noqa: E731
+    report = {
+        "transport": transport,
+        "payload_nbytes": payload_nbytes,
+        "stream_window": _STREAM_WINDOW,
+        "fused_batch": _FUSED_BATCH,
+        "rtt_us": {
+            "static": r(rtt_static),
+            "dynamic": r(rtt_dynamic),
+            "naive_pickle": None if naive is None else r(naive),
+        },
+        "stream_us": {
+            "static": r(st_static),
+            "dynamic": r(st_dynamic),
+            "fused": r(st_fused),
+        },
+        "seed_us": SEED_RPC_US,
+        "speedup": {
+            "static_rtt_vs_dynamic": r(rtt_dynamic / rtt_static),
+            "static_rtt_vs_seed_dynamic": r(SEED_RPC_US["dynamic_rtt"]
+                                            / rtt_static),
+            "static_stream_vs_dynamic": r(st_dynamic / st_static),
+            "static_stream_vs_seed_dynamic": r(SEED_RPC_US["dynamic_stream"]
+                                               / st_static),
+            "fused_stream_vs_static": r(st_static / st_fused),
+        },
+        # Fig.-3 disambiguation: which HAM path each number measured
+        "path_labels": {
+            "static": "WirePlan FLAG_STATIC request + plan-packed reply",
+            "dynamic": "self-describing TLV request + reply (pre-plan path)",
+            "fused": "FLAG_FUSED multi-call frames, batch="
+                     f"{_FUSED_BATCH}, fused replies",
+            "naive_pickle": "name-resolution + pickle RPC, same shm fabric",
+        },
+    }
+    if naive:
+        report["speedup"]["naive_over_ham_static_rtt"] = r(naive / rtt_static)
+    return report
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    rep = measure(smoke=smoke)
+    rows = []
+    for k, v in rep["rtt_us"].items():
+        if v is not None:
+            rows.append((f"rpc/rtt_{k}", v, rep["path_labels"].get(k, "")))
+    for k, v in rep["stream_us"].items():
+        rows.append((f"rpc/stream_{k}", v,
+                     f"window {rep['stream_window']}"))
+    for k, v in rep["speedup"].items():
+        rows.append((f"rpc/speedup_{k}", v, "ratio"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    for name, val, note in run(smoke="--smoke" in sys.argv):
+        print(f"{name},{val:.2f},{note}")

@@ -43,13 +43,23 @@ def main(argv=None) -> None:
         serialisation,
     )
 
+    # the serialisation section's rows are reused by batching.run (which
+    # persists them into BENCH_hotpath.json) — measure once, record twice
+    serialise_rows: list = []
+
+    def serialisation_section(smoke=False):
+        serialise_rows[:] = serialisation.run(smoke=smoke)
+        return serialise_rows
+
     sections = [
         ("offload_overhead (paper Fig. 3)", offload_overhead.run),
         ("device_dispatch", device_dispatch.run),
         ("registry_scaling", registry_scaling.run),
-        ("serialisation", serialisation.run),
+        ("serialisation", serialisation_section),
         ("putget", putget.run),
-        ("batching (coalesced hot path -> BENCH_hotpath.json)", batching.run),
+        ("batching (coalesced hot path + rpc fast path -> BENCH_hotpath.json)",
+         lambda smoke=False: batching.run(
+             smoke=smoke, serialise_rows=serialise_rows or None)),
         ("cluster (scheduler pipelining -> BENCH_cluster.json)", cluster.run),
     ]
     failures = 0

@@ -20,6 +20,14 @@ regression), or when a baseline metric is missing from the fresh run (a
 dropped/renamed metric must not silently shrink gate coverage).  Metrics
 not yet in the baseline are reported and skipped — schema growth must not
 break older baselines.
+
+Smoke-run comparability: most tracked metrics are ratios and survive the
+smoke job's tiny sizes, but a few are *size-dependent* — the x64 batching
+speedup needs enough frames to amortise, and smoke only runs the smallest
+put/get size.  When the fresh report says ``"smoke": true``, paths listed
+in ``SMOKE_SIZE_DEPENDENT`` are skipped and baseline leaves absent from
+the fresh run are skipped rather than failed (smoke runs fewer sizes by
+design).  Full runs keep the strict dropped-metric check.
 """
 
 from __future__ import annotations
@@ -42,7 +50,19 @@ TRACKED = {
     "BENCH_hotpath.json": [
         "batching_speedup_x64",
         "putget_median_speedup_vs_seed",
+        # WirePlan/fusion PR: static-vs-dynamic and fused-vs-static ratios
+        # (in-run ratios — machine-independent like the others)
+        "rpc_us.speedup.static_rtt_vs_dynamic",
+        "rpc_us.speedup.static_stream_vs_dynamic",
+        "rpc_us.speedup.fused_stream_vs_static",
     ],
+}
+
+
+#: metrics whose value depends on the run's sizes, not just the code path —
+#: meaningless to compare between a full baseline and a smoke fresh run
+SMOKE_SIZE_DEPENDENT = {
+    "BENCH_hotpath.json": ["batching_speedup_x64"],
 }
 
 
@@ -64,12 +84,21 @@ def _leaves(dotted: str, value):
         yield dotted, float(value)
 
 
-def compare(baseline: dict, fresh: dict, paths, tolerance: float):
-    """Yield (path, base, new, ok|None) for every tracked leaf; ``ok`` is
-    None when the leaf is missing on either side (skipped, not failed).
-    A tracked path absent from the *baseline* is surfaced too — a silent
-    drop would shrink gate coverage on a metric rename with CI green."""
+def compare(baseline: dict, fresh: dict, paths, tolerance: float,
+            smoke_skip=()):
+    """Yield ``(path, base, new, ok)`` for every tracked leaf.
+
+    ``ok`` is True/False for a compared leaf, or None for a skip: a leaf
+    missing in the baseline (new metric), a smoke-size-dependent path in a
+    smoke run, or a smoke run that did not produce a baseline leaf (smoke
+    runs fewer sizes by design).  A baseline leaf missing from a *full*
+    fresh run yields ``ok=False`` with ``new=None`` — a dropped/renamed
+    metric must not silently shrink gate coverage."""
+    fresh_is_smoke = bool(fresh.get("smoke"))
     for dotted in paths:
+        if fresh_is_smoke and dotted in smoke_skip:
+            yield dotted, None, None, None
+            continue
         base_leaves = dict(_leaves(dotted, _dig(baseline, dotted)))
         new_leaves = dict(_leaves(dotted, _dig(fresh, dotted)))
         if not base_leaves:
@@ -78,7 +107,8 @@ def compare(baseline: dict, fresh: dict, paths, tolerance: float):
         for path, base in sorted(base_leaves.items()):
             new = new_leaves.get(path)
             if new is None:
-                yield path, base, None, None
+                # smoke runs produce a size subset: skip, don't fail
+                yield path, base, None, (None if fresh_is_smoke else False)
                 continue
             yield path, base, new, new >= (1.0 - tolerance) * base
 
@@ -105,19 +135,24 @@ def main(argv=None) -> int:
         baseline = json.loads(base_path.read_text())
         fresh = json.loads(fresh_path.read_text())
         for path, base, new, ok in compare(baseline, fresh, paths,
-                                           opts.tolerance):
+                                           opts.tolerance,
+                                           SMOKE_SIZE_DEPENDENT.get(fname, ())):
             if ok is None:
                 if base is None:
-                    # not in the baseline yet (new metric): skip until a
-                    # refreshed baseline is committed
-                    print(f"SKIP {fname}:{path} (missing in baseline)")
+                    # not in the baseline yet (new metric) or size-dependent
+                    # under smoke: skip until comparable
+                    print(f"SKIP {fname}:{path} (not comparable: new metric "
+                          "or smoke-size-dependent)")
                 else:
-                    # in the baseline but GONE from the fresh run: a dropped
-                    # or renamed metric must not silently shrink coverage
-                    print(f"REGRESSION  {fname}:{path}  baseline={base:.2f}"
-                          "  fresh=MISSING")
-                    checked += 1
-                    failures += 1
+                    print(f"SKIP {fname}:{path} (size absent from smoke run)")
+                continue
+            if new is None:
+                # in the baseline but GONE from a FULL fresh run: a dropped
+                # or renamed metric must not silently shrink coverage
+                print(f"REGRESSION  {fname}:{path}  baseline={base:.2f}"
+                      "  fresh=MISSING")
+                checked += 1
+                failures += 1
                 continue
             checked += 1
             floor = (1.0 - opts.tolerance) * base

@@ -53,6 +53,7 @@ from repro.core.registry import (
     init,
     verify_peer_digest,
 )
+from repro.core.wireplan import WirePlan, compile_plan
 
 __all__ = [
     "Function", "f2f", "l2f",
@@ -68,4 +69,5 @@ __all__ = [
     "pack_static", "unpack_static", "pack_dynamic", "unpack_dynamic",
     "HandlerRecord", "HandlerRegistry", "HandlerTable",
     "default_registry", "handler", "init", "verify_peer_digest",
+    "WirePlan", "compile_plan",
 ]

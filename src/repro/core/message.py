@@ -11,11 +11,48 @@ Header layout (32 bytes, little-endian):
 
     u32  magic        0x48414D58  ("HAMX")
     u16  version      wire protocol version
-    u16  flags        bit0 REPLY, bit1 ERROR, bit2 DYNAMIC payload
+    u16  flags        bit0 REPLY, bit1 ERROR, bit2 DYNAMIC payload,
+                      bit3 STATIC (plan-packed) payload, bit4 FUSED frame
     u32  key          global handler key (sorted-registry index)
     u32  src_node     sender node id (for replies / reverse offload)
     u64  msg_id       correlates replies with futures
     u64  payload_len  bytes following the header
+
+Payload-format bits (STATIC / DYNAMIC)
+--------------------------------------
+
+``FLAG_DYNAMIC`` marks a self-describing TLV payload; ``FLAG_STATIC`` marks
+a plan-packed payload whose layout both sides derive from the handler's
+registered spec (see ``repro.core.wireplan``).  The bits are *advisory* on
+requests — a request with neither bit (a pre-plan peer) dispatches through
+the receiver's compiled plan when the handler is static, because the plan
+layout is byte-identical to the legacy ``pack_static`` concatenation.  On
+**replies** the bit is load-bearing: a reply with ``FLAG_STATIC`` decodes
+through the handler's result plan (the key field names the handler), any
+other non-error reply decodes as dynamic TLV.  Error replies
+(``REPLY|ERROR``) are always dynamic (message + traceback dict).
+
+Fused-frame segment layout (``FLAG_FUSED``)
+-------------------------------------------
+
+Small-call fusion packs many sub-threshold calls (or replies) into ONE
+frame, amortising the 32-byte header, the per-frame transport publication
+and the per-frame dispatch.  The outer header carries ``FLAG_FUSED``,
+``key=0``, ``msg_id=0`` and the true ``src_node``; the payload is a count
+word followed by back-to-back segments::
+
+    u32 count
+    count * ( u32 key | u16 flags | u64 msg_id | u32 payload_len | payload )
+
+Each segment is one complete logical message: its ``flags`` carry the
+usual REPLY/ERROR/STATIC/DYNAMIC bits and its payload is exactly what the
+equivalent standalone frame would carry after the header.  Segments share
+the outer frame's ``src_node`` — which is why only frames *originating* at
+the sender may be fused (a relayed ``_ham/forward`` inner frame keeps its
+own header and is never folded into a fused batch).  Segment order is
+preserved; a receiver executes request segments in order in a single
+dispatch/executor pass, and an error in one segment errors only that
+segment's ``msg_id``.
 
 Batched-frame segment layout (the coalesced hot path)
 -----------------------------------------------------
@@ -57,6 +94,13 @@ HEADER_NBYTES = HEADER_STRUCT.size  # 32
 FLAG_REPLY = 1 << 0
 FLAG_ERROR = 1 << 1
 FLAG_DYNAMIC = 1 << 2
+FLAG_STATIC = 1 << 3   # plan-packed payload (repro.core.wireplan)
+FLAG_FUSED = 1 << 4    # multi-call frame: count word + segments
+
+#: fused-frame segment header: key, flags, msg_id, payload_len
+SEG_STRUCT = struct.Struct("<IHQI")
+SEG_NBYTES = SEG_STRUCT.size  # 18
+FUSED_COUNT_STRUCT = struct.Struct("<I")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +123,14 @@ class Header:
     @property
     def is_dynamic(self) -> bool:
         return bool(self.flags & FLAG_DYNAMIC)
+
+    @property
+    def is_static(self) -> bool:
+        return bool(self.flags & FLAG_STATIC)
+
+    @property
+    def is_fused(self) -> bool:
+        return bool(self.flags & FLAG_FUSED)
 
 
 def encode_header(header: Header, out: bytearray | None = None) -> bytes | bytearray:
@@ -159,6 +211,42 @@ def decode_fast(frame):
     return key, flags, src_node, msg_id, view[
         HEADER_NBYTES : HEADER_NBYTES + payload_len
     ]
+
+
+def iter_fused(payload):
+    """Yield ``(key, flags, msg_id, payload_view)`` per fused segment.
+
+    ``payload`` is a fused frame's payload (after the outer header).  Every
+    extent is bounds-checked against the enclosing payload — a truncated or
+    corrupt segment must fail loudly here, not surface as a garbled argument
+    inside a handler.  Segment views alias ``payload`` (zero-copy): the
+    caller owns the lifetime rule.
+    """
+    view = payload if isinstance(payload, memoryview) else memoryview(payload)
+    total = view.nbytes
+    if total < 4:
+        raise MessageFormatError(f"fused payload shorter than count word: {total}")
+    (count,) = FUSED_COUNT_STRUCT.unpack_from(view, 0)
+    off = 4
+    unpack = SEG_STRUCT.unpack_from
+    for _ in range(count):
+        if off + SEG_NBYTES > total:
+            raise MessageFormatError(
+                f"truncated fused segment header at offset {off} of {total}"
+            )
+        key, flags, msg_id, plen = unpack(view, off)
+        off += SEG_NBYTES
+        if off + plen > total:
+            raise MessageFormatError(
+                f"truncated fused segment payload: {plen} bytes claimed, "
+                f"{total - off} remain"
+            )
+        yield key, flags, msg_id, view[off : off + plen]
+        off += plen
+    if off != total:
+        raise MessageFormatError(
+            f"trailing bytes in fused payload: consumed {off} of {total}"
+        )
 
 
 def split_frame(frame: bytes | bytearray | memoryview) -> tuple[Header, memoryview]:

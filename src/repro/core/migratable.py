@@ -269,24 +269,30 @@ def check_against_spec(value: Any, spec: Spec) -> None:
 # --------------------------------------------------------------------------
 
 
+# precompiled per-kind structs: (Struct, python-side coercion).  struct's
+# internal format cache makes repeated struct.pack("<q", ...) merely cheap;
+# hoisting the compiled objects makes the per-leaf cost one method call.
+_SCALAR_STRUCTS = {
+    "i8": (struct.Struct("<q"), int),
+    "f8": (struct.Struct("<d"), float),
+    "b1": (struct.Struct("<?"), bool),
+}
+
+
 def _scalar_to_bytes(value: Any, kind: str) -> bytes:
-    if kind == "i8":
-        return struct.pack("<q", int(value))
-    if kind == "f8":
-        return struct.pack("<d", float(value))
-    if kind == "b1":
-        return struct.pack("<?", bool(value))
-    raise MigratableError(f"unknown scalar kind {kind}")
+    try:
+        st, conv = _SCALAR_STRUCTS[kind]
+    except KeyError:
+        raise MigratableError(f"unknown scalar kind {kind}") from None
+    return st.pack(conv(value))
 
 
 def _scalar_from_bytes(buf: memoryview, kind: str) -> Any:
-    if kind == "i8":
-        return struct.unpack("<q", buf[:8])[0]
-    if kind == "f8":
-        return struct.unpack("<d", buf[:8])[0]
-    if kind == "b1":
-        return struct.unpack("<?", buf[:1])[0]
-    raise MigratableError(f"unknown scalar kind {kind}")
+    try:
+        st, _ = _SCALAR_STRUCTS[kind]
+    except KeyError:
+        raise MigratableError(f"unknown scalar kind {kind}") from None
+    return st.unpack(buf[: st.size])[0]
 
 
 def static_payload_nbytes(specs) -> int:

@@ -48,6 +48,7 @@ from repro.core.errors import (
     UnstableNameError,
 )
 from repro.core.migratable import Spec, canonical_spec_string, spec_of
+from repro.core.wireplan import compile_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,11 +71,23 @@ class HandlerTable:
 
     * ``key_of``   : type -> key, O(1)  (sending side)
     * ``handler_at``: key -> handler, O(1) list index (receiving side)
+
+    Init also *compiles* the wire plans (``repro.core.wireplan``): for every
+    static-spec handler, ``arg_plans[key]`` / ``result_plans[key]`` hold the
+    precompiled payload codec (fused scalar struct, fixed array extents,
+    exact ``payload_nbytes``); dynamic sides hold ``None``.  The dense
+    key-indexed arrays are what the runtime hot path dispatches off —
+    no per-message record attribute walks.
     """
 
     def __init__(self, records: Sequence[HandlerRecord]):
         ordered = sorted(records, key=lambda r: r.stable_name)
         self._records: list[HandlerRecord] = list(ordered)
+        #: key-indexed views for the runtime hot path (records is the same
+        #: list handler_at indexes; plans are compiled once, here)
+        self.records: list[HandlerRecord] = self._records
+        self.arg_plans = [compile_plan(r.arg_specs) for r in ordered]
+        self.result_plans = [compile_plan(r.result_specs) for r in ordered]
         self._key_by_name: dict[str, int] = {
             r.stable_name: i for i, r in enumerate(ordered)
         }

@@ -1,0 +1,320 @@
+"""Compiled per-handler wire plans — the static-payload fast path.
+
+Paper mapping (§4.3): a static-spec handler's argument (and result) layout is
+part of the *message type*, known to both sides at registration time.  The
+generic :func:`repro.core.migratable.pack_static` walks the spec tuple per
+message — isinstance dispatch, ``str(dtype)`` comparisons, one ``struct``
+call per scalar leaf.  A :class:`WirePlan` hoists that walk to
+``HandlerTable`` init: the spec tuple is compiled **once** into
+
+* one fused :class:`struct.Struct` per *run* of consecutive scalar leaves
+  (an all-scalar spec becomes a single ``pack_into``/``unpack_from``),
+* fixed ``(offset, nbytes, dtype, shape)`` extents for array leaves
+  (encode = one slice copy, decode = one zero-copy ``np.frombuffer`` view),
+* fixed extents + codec hooks for opaque leaves,
+
+plus the exact ``payload_nbytes`` — so the per-message cost is one closure
+call, no spec traversal.  The wire layout is byte-identical to
+``pack_static`` (raw leaf concatenation, little-endian), which is what makes
+the ``FLAG_STATIC`` header bit *informational*: a plan-packed frame decodes
+with ``unpack_static`` and vice versa (wire compat with pre-plan peers).
+
+Result plans reuse the same layout with an arity convention mirroring
+Python returns: ``result_specs=()`` ⇒ the handler returns ``None`` (0-byte
+reply), one spec ⇒ the bare value, N specs ⇒ an N-tuple.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.core.errors import MigratableError, SpecMismatchError
+from repro.core.migratable import (
+    _CODECS_BY_NAME,
+    ArraySpec,
+    OpaqueSpec,
+    ScalarSpec,
+    static_payload_nbytes,
+)
+
+_SCALAR_FMT = {"i8": "q", "f8": "d", "b1": "?"}
+#: pack-side coercions matching ``pack_static`` (np scalars, bools, ints all
+#: land on the pinned fixed-width wire types)
+_SCALAR_CONV = {"i8": int, "f8": float, "b1": bool}
+
+
+class _ScalarRun:
+    """A run of consecutive scalar leaves fused into one struct."""
+
+    __slots__ = ("offset", "st", "convs", "n")
+
+    def __init__(self, offset: int, kinds: list[str]):
+        self.offset = offset
+        self.st = struct.Struct("<" + "".join(_SCALAR_FMT[k] for k in kinds))
+        self.convs = tuple(_SCALAR_CONV[k] for k in kinds)
+        self.n = len(kinds)
+
+
+class _ArrayLeaf:
+    __slots__ = ("offset", "nbytes", "shape", "dtype", "reshape")
+
+    def __init__(self, offset: int, spec: ArraySpec):
+        self.offset = offset
+        self.nbytes = spec.nbytes
+        self.shape = spec.shape
+        self.dtype = np.dtype(spec.dtype)
+        n = self.nbytes // self.dtype.itemsize
+        self.reshape = self.shape != (n,)
+
+
+class _OpaqueLeaf:
+    __slots__ = ("offset", "nbytes", "type_name")
+
+    def __init__(self, offset: int, spec: OpaqueSpec):
+        self.offset = offset
+        self.nbytes = spec.nbytes_fixed
+        self.type_name = spec.type_name
+
+    def _codec(self):
+        codec = _CODECS_BY_NAME.get(self.type_name)
+        if codec is None:
+            raise MigratableError(
+                f"no codec registered locally for {self.type_name}; "
+                "heterogeneous processes must register the same migratable "
+                "specialisations (same-source assumption)"
+            )
+        return codec
+
+    def pack(self, buf, base: int, args, i: int) -> None:
+        raw = self._codec().encode(args[i])
+        if len(raw) != self.nbytes:
+            raise SpecMismatchError(
+                f"codec {self.type_name} produced {len(raw)} bytes, "
+                f"spec says {self.nbytes}"
+            )
+        off = base + self.offset
+        buf[off : off + self.nbytes] = raw
+
+    def unpack_one(self, view):
+        return self._codec().decode(
+            bytes(view[self.offset : self.offset + self.nbytes])
+        )
+
+
+def _compile_ops(specs):
+    ops = []
+    off = 0
+    run_kinds: list[str] = []
+    run_off = 0
+    for spec in specs:
+        if isinstance(spec, ScalarSpec):
+            if not run_kinds:
+                run_off = off
+            run_kinds.append(spec.kind)
+            off += spec.nbytes
+            continue
+        if run_kinds:
+            ops.append(_ScalarRun(run_off, run_kinds))
+            run_kinds = []
+        if isinstance(spec, ArraySpec):
+            ops.append(_ArrayLeaf(off, spec))
+        elif isinstance(spec, OpaqueSpec):
+            ops.append(_OpaqueLeaf(off, spec))
+        else:
+            raise MigratableError(f"unknown spec {spec!r}")
+        off += spec.nbytes
+    if run_kinds:
+        ops.append(_ScalarRun(run_off, run_kinds))
+    return ops, off
+
+
+def _raise_nargs(expected: int, got: int):
+    raise SpecMismatchError(f"expected {expected} args, got {got}")
+
+
+def _raise_short(expected: int, got: int):
+    raise SpecMismatchError(f"static payload too short: {got} < {expected}")
+
+
+def _raise_scalar(e):
+    raise SpecMismatchError(f"scalar leaf pack failed: {e}") from None
+
+
+def _raise_array(leaf: _ArrayLeaf, arr):
+    raise SpecMismatchError(
+        f"array leaf mismatch: expected {leaf.dtype}{leaf.shape}, "
+        f"got {arr.dtype}{tuple(arr.shape)}"
+    )
+
+
+def _gen_codecs(specs, ops, nbytes):
+    """exec-generate straight-line ``pack(buf, off, args)`` and
+    ``unpack(view)`` functions for a spec tuple.
+
+    This is the "compiled" in compiled wire plans: the per-message cost is
+    one specialised function whose body is the layout — no spec traversal,
+    no per-leaf dispatch, every helper pre-bound in the closure namespace
+    (the same technique ``collections.namedtuple`` uses).  Opaque leaves
+    keep calling their leaf op (codec resolution stays lazy).
+    """
+    ns = {
+        "_np": np,
+        "_frombuffer": np.frombuffer,
+        "_ndarray": np.ndarray,
+        "_asarray": np.asarray,
+        "_ascontig": np.ascontiguousarray,
+        "_copyto": np.copyto,
+        "_uint8": np.uint8,
+        "_struct_error": struct.error,
+        "_raise_nargs": _raise_nargs,
+        "_raise_short": _raise_short,
+        "_raise_scalar": _raise_scalar,
+        "_raise_array": _raise_array,
+    }
+    pack_lines = [
+        "def _pack(buf, off, args):",
+        f"    if len(args) != {len(specs)}: _raise_nargs({len(specs)}, len(args))",
+    ]
+    unpack_parts: list[str] = []
+    i = 0
+    for k, op in enumerate(ops):
+        if isinstance(op, _ScalarRun):
+            ns[f"_p{k}"] = op.st.pack_into
+            ns[f"_u{k}"] = op.st.unpack_from
+            vals = []
+            for j, conv in enumerate(op.convs):
+                cname = f"_c{k}_{j}"
+                ns[cname] = conv
+                vals.append(f"{cname}(args[{i + j}])")
+            pack_lines += [
+                "    try:",
+                f"        _p{k}(buf, off + {op.offset}, {', '.join(vals)})",
+                "    except (_struct_error, TypeError, ValueError) as e:",
+                "        _raise_scalar(e)",
+            ]
+            unpack_parts.append(f"*_u{k}(view, {op.offset})")
+            i += op.n
+        elif isinstance(op, _ArrayLeaf):
+            ns[f"_leaf{k}"] = op
+            ns[f"_dt{k}"] = op.dtype
+            pack_lines += [
+                f"    a = args[{i}]",
+                "    if not isinstance(a, _ndarray): a = _asarray(a)",
+                "    d = a.dtype",
+                f"    if (d is not _dt{k} and d != _dt{k}) "
+                f"or a.shape != {op.shape!r}: _raise_array(_leaf{k}, a)",
+            ]
+            if op.nbytes <= 4096:
+                # small leaf: one C-level tobytes + slice assign beats
+                # building two view arrays (and handles non-contiguous
+                # inputs for free)
+                pack_lines.append(
+                    f"    buf[off + {op.offset} : off + {op.offset + op.nbytes}]"
+                    " = a.tobytes()"
+                )
+            else:
+                # big leaf: single copy straight into the frame, no
+                # temporary — frombuffer rather than slice assignment
+                # (bytearray slices reject ndarrays)
+                pack_lines += [
+                    "    if not a.flags.c_contiguous: a = _ascontig(a)",
+                    f"    _copyto(_frombuffer(buf, _uint8, {op.nbytes}, "
+                    f"off + {op.offset}), a.view(_uint8).reshape(-1))",
+                ]
+            count = op.nbytes // op.dtype.itemsize
+            expr = f"_frombuffer(view, _dt{k}, {count}, {op.offset})"
+            if op.reshape:
+                expr += f".reshape({op.shape!r})"
+            unpack_parts.append(expr)
+            i += 1
+        else:  # _OpaqueLeaf: codec resolution stays lazy behind the op
+            ns[f"_leaf{k}"] = op
+            pack_lines.append(f"    _leaf{k}.pack(buf, off, args, {i})")
+            unpack_parts.append(f"_leaf{k}.unpack_one(view)")
+            i += 1
+    body = ", ".join(unpack_parts)
+    unpack_lines = [
+        "def _unpack(view):",
+        f"    if len(view) < {nbytes}: _raise_short({nbytes}, len(view))",
+        f"    return ({body}{',' if len(unpack_parts) == 1 else ''})",
+    ]
+    if not unpack_parts:
+        unpack_lines[-1] = "    return ()"
+    exec("\n".join(pack_lines), ns)          # noqa: S102 — trusted codegen
+    exec("\n".join(unpack_lines), ns)        # noqa: S102
+    return ns["_pack"], ns["_unpack"]
+
+
+class WirePlan:
+    """Precompiled codec for one static spec tuple (see module docs).
+
+    ``pack_args``/``unpack_args`` are exec-generated straight-line functions
+    specialised to the layout; the ``*_result`` variants apply the
+    result-arity convention on the same layout.  Array leaves decode as
+    zero-copy views into the payload — the caller owns the lifetime rule
+    (copy anything that outlives the frame).
+    """
+
+    __slots__ = ("specs", "nbytes", "n_args", "_ops", "_solo_st",
+                 "_solo_conv", "pack_args", "unpack_args")
+
+    def __init__(self, specs: tuple):
+        self.specs = tuple(specs)
+        self._ops, self.nbytes = _compile_ops(self.specs)
+        assert self.nbytes == static_payload_nbytes(self.specs)
+        self.n_args = len(self.specs)
+        self.pack_args, self.unpack_args = _gen_codecs(
+            self.specs, self._ops, self.nbytes
+        )
+        # hottest result shape: a single scalar (one struct call, no tuple
+        # wrapping on the reply hot path)
+        if self.n_args == 1 and isinstance(self._ops[0], _ScalarRun):
+            self._solo_st = self._ops[0].st
+            self._solo_conv = self._ops[0].convs[0]
+        else:
+            self._solo_st = self._solo_conv = None
+
+    # -- result side (arity convention) ------------------------------------
+
+    def pack_result(self, buf, off: int, result) -> None:
+        n = self.n_args
+        if n == 1:
+            st = self._solo_st
+            if st is not None:
+                try:
+                    st.pack_into(buf, off, self._solo_conv(result))
+                except (struct.error, TypeError, ValueError) as e:
+                    raise SpecMismatchError(
+                        f"scalar result pack failed: {e}"
+                    ) from None
+                return
+            self.pack_args(buf, off, (result,))
+        elif n == 0:
+            if result is not None:
+                raise SpecMismatchError(
+                    f"handler declared result_specs=() but returned {result!r}"
+                )
+        else:
+            if not isinstance(result, (tuple, list)):
+                raise SpecMismatchError(
+                    f"handler declared {n} result leaves but returned "
+                    f"{type(result).__name__}"
+                )
+            self.pack_args(buf, off, result)
+
+    def unpack_result(self, payload):
+        n = self.n_args
+        if n == 0:
+            return None
+        st = self._solo_st
+        if st is not None:
+            return st.unpack_from(payload, 0)[0]
+        values = self.unpack_args(payload)
+        return values[0] if n == 1 else values
+
+
+def compile_plan(specs) -> WirePlan | None:
+    """``None`` specs (dynamic handler side) compile to no plan."""
+    return None if specs is None else WirePlan(specs)

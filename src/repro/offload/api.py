@@ -25,7 +25,7 @@ from repro.core.closure import Function, f2f
 from repro.core.errors import OffloadError
 from repro.core.executor import DirectPolicy
 from repro.core.future import Future, as_completed, gather
-from repro.core.message import encode_frame, FLAG_DYNAMIC
+from repro.core.message import encode_frame, FLAG_DYNAMIC, FLAG_STATIC
 from repro.core.registry import default_registry
 from repro.offload.buffer import BufferPtr
 from repro.offload.runtime import NodeRuntime, current_node
@@ -125,10 +125,10 @@ class OffloadDomain:
         key = self._table.key_of(function.record.stable_name)
         inner = encode_frame(
             key,
-            function.pack_payload(),
+            function.pack_payload(),  # pack_static == WirePlan layout
             src_node=self.host_node,
             msg_id=msg_id,
-            flags=0 if function.is_static else FLAG_DYNAMIC,
+            flags=FLAG_STATIC if function.is_static else FLAG_DYNAMIC,
         )
         self.host.send_oneway(via, f2f("_ham/forward", dst, bytes(inner),
                                        registry=self.registry))

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.migratable import ScalarSpec, spec_of
 from repro.core.registry import default_registry
 from repro.offload.api import deref
 
@@ -45,6 +46,27 @@ def matmul(a, b):
     return np.asarray(a) @ np.asarray(b)
 
 
-# static-spec variant of the empty offload: zero-byte payload, the true
-# lower bound for dispatch cost (key + header only)
-_reg.register(empty, arg_specs=(), name="demo/empty_static")
+# static-spec variant of the empty offload: zero-byte payload AND zero-byte
+# static reply (result_specs=()), the true lower bound for dispatch cost
+# (key + header only, both directions)
+_reg.register(empty, arg_specs=(), result_specs=(), name="demo/empty_static")
+
+
+def echo_small(a, b, scale, arr):
+    """Small-RPC benchmark payload: ~250 B of static args, scalar result."""
+    return float(a + b) * scale
+
+
+#: (i8, i8, f8, 28*f8) = 248 B — the ≤256 B small-call regime of Fig. 3
+_ECHO_ARGS = (1, 2, 3.0, np.zeros(28, dtype=np.float64))
+
+# the SAME function on both wire paths, so benchmarks compare mechanism,
+# not handler work: _static rides the compiled WirePlan both ways
+# (FLAG_STATIC request + plan-packed reply), _dyn rides self-describing TLV
+_reg.register(
+    echo_small,
+    arg_specs=tuple(spec_of(a) for a in _ECHO_ARGS),
+    result_specs=(ScalarSpec("f8"),),
+    name="demo/echo_small_static",
+)
+_reg.register(echo_small, name="demo/echo_small_dyn")

@@ -15,6 +15,20 @@ Hot path (the paper's Fig. 3 metric is this module's cost):
   zero-copy transports (shm rings) the frames are leased views into the
   receive window, decoded in place and only copied when something outlives
   the dispatch (a reply resolving a future, a non-direct execution policy);
+* dispatch drives off **dense key-indexed plan arrays** compiled at
+  ``HandlerTable`` init (``repro.core.wireplan``): a static-spec handler's
+  request is packed by its precompiled :class:`WirePlan` into a
+  ``FLAG_STATIC`` frame (one fused struct call for scalar leaves, fixed
+  extents for arrays) and its result travels back as a plan-packed
+  ``FLAG_STATIC`` reply — no TLV, no per-message spec walk, no
+  ``HandlerRecord`` attribute chasing; dynamic TLV stays as the fallback
+  for ``arg_specs=None`` handlers, selected per frame via the header bits;
+* **small-call fusion** (``FLAG_FUSED``): sub-threshold same-destination
+  frames produced while draining a batch are folded into one multi-call
+  frame (see ``core/message.py`` for the segment layout), and
+  :meth:`send_fused` packs a caller-side batch the same way — one header,
+  one transport publication, one dispatch pass for N calls, with replies
+  fused symmetrically on the way back;
 * replies and oneway sends produced while draining a batch are parked in an
   egress queue and flushed as one coalesced ``send_many`` per destination —
   one transport publication per drain iteration instead of per message;
@@ -55,20 +69,25 @@ import numpy as np
 from repro.comm.base import CommBackend
 from repro.core import migratable as mig
 from repro.core.closure import Function
-from repro.core.errors import NodeDownError, OffloadError
+from repro.core.errors import MessageFormatError, NodeDownError, OffloadError
 from repro.core.future import Future, FutureTable
 from repro.core.executor import DirectPolicy, ExecutionPolicy
 from repro.core.message import (
     FLAG_DYNAMIC,
     FLAG_ERROR,
+    FLAG_FUSED,
     FLAG_REPLY,
+    FLAG_STATIC,
+    FUSED_COUNT_STRUCT,
     HEADER_NBYTES,
     HEADER_STRUCT,
     MAGIC,
+    SEG_NBYTES,
+    SEG_STRUCT,
     VERSION,
     decode_fast,
+    iter_fused,
 )
-from repro.core.migratable import static_payload_nbytes
 from repro.core.registry import HandlerTable, default_registry
 from repro.offload.buffer import BufferPtr, BufferRegistry
 
@@ -78,6 +97,14 @@ _current_node: contextvars.ContextVar["NodeRuntime | None"] = contextvars.Contex
 
 _DRAIN_BATCH = 64  # frames pulled per recv_many in the event loop
 _BIG_FRAME = 1 << 16  # above this, frames come from the pooled allocator
+
+#: small-call fusion: frames with payloads at or below this fold into one
+#: FLAG_FUSED frame when they share a destination (the ≤256 B static-args
+#: regime of the Fig. 3 claim, with headroom for small dynamic replies)
+FUSE_THRESHOLD = 512
+#: segments per fused frame — bounds decode scratch and keeps one poison
+#: batch from dominating a drain iteration
+FUSE_MAX_SEGMENTS = 64
 
 
 class _FramePool:
@@ -238,10 +265,21 @@ class NodeRuntime:
         self.node_id = node_id
         self.endpoint = endpoint
         self.table = table
+        # dense key-indexed fast-path arrays (compiled at HandlerTable init):
+        # one list index per message instead of record attribute walks
+        self._records = table.records
+        self._arg_plans = table.arg_plans
+        self._result_plans = table.result_plans
+        #: fold sub-threshold same-destination egress frames into FLAG_FUSED
+        #: multi-call frames at flush time (off => plain send_many batches)
+        self.fuse_egress = True
         self.policy = policy or DirectPolicy()
         self.buffers = BufferRegistry(node_id)
         self.futures = FutureTable()
         self.inline = inline
+        #: transport frame cap, hoisted off the endpoint once — _send_frame
+        #: runs per message and must not pay a getattr per call
+        self._frame_cap = getattr(endpoint, "max_frame_nbytes", None)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._sync_seq = 0  # inline futureless-sync sequence counter
@@ -251,7 +289,7 @@ class NodeRuntime:
         self._draining = False
         self._loop_tid: int | None = None
         self.stats = {"handled": 0, "replies": 0, "errors": 0, "sent": 0,
-                      "batches": 0}
+                      "batches": 0, "fused": 0}
         # -- queue-depth feedback (scheduler's remote-load signal) ---------
         #: last depth reported BY each peer via _cluster/stats oneways
         #: (populated on the node peers report to — normally the host)
@@ -341,7 +379,7 @@ class NodeRuntime:
     def _send_frame(self, dst: int, frame) -> None:
         """Transport egress: coalesced while the loop thread drains a batch,
         immediate otherwise (user threads never see queueing)."""
-        cap = getattr(self.endpoint, "max_frame_nbytes", None)
+        cap = self._frame_cap
         if cap is not None and len(frame) > cap:
             # fail fast, HERE: parking an oversized frame in the egress queue
             # would defer the error past the handler's error-reply wrapping
@@ -368,20 +406,83 @@ class NodeRuntime:
         for dst, frame in egress:
             by_dst.setdefault(dst, []).append(frame)
         for dst, frames in by_dst.items():
-            self.endpoint.send_many(dst, frames)
+            if self.fuse_egress and len(frames) > 1:
+                frames = self._fuse_runs(frames)
+            if len(frames) == 1:
+                self.endpoint.send(dst, frames[0])
+            else:
+                self.endpoint.send_many(dst, frames)
+
+    def _fusible(self, frame) -> bool:
+        """May this packed egress frame fold into a fused batch?  Small, not
+        itself fused, and *originating here* — a relayed ``_ham/forward``
+        inner frame carries the origin's src_node, which fusion would lose
+        (segments inherit the outer header's src)."""
+        if len(frame) > HEADER_NBYTES + FUSE_THRESHOLD:
+            return False
+        _, _, flags, _, src, _, _ = HEADER_STRUCT.unpack_from(frame, 0)
+        return not flags & FLAG_FUSED and src == self.node_id
+
+    def _fuse_runs(self, frames: list) -> list:
+        """Fold consecutive runs of fusible frames (length >= 2) into
+        FLAG_FUSED frames, preserving per-destination frame order."""
+        out: list = []
+        run: list = []
+        for frame in frames:
+            if self._fusible(frame):
+                run.append(frame)
+                if len(run) == FUSE_MAX_SEGMENTS:
+                    out.append(self._fuse_frames(run))
+                    run = []
+                continue
+            if len(run) == 1:
+                out.append(run[0])
+            elif run:
+                out.append(self._fuse_frames(run))
+            run = []
+            out.append(frame)
+        if len(run) == 1:
+            out.append(run[0])
+        elif run:
+            out.append(self._fuse_frames(run))
+        return out
+
+    def _fuse_frames(self, frames: list):
+        """Rewrite N packed frames into one FLAG_FUSED frame (segment layout
+        in ``core/message.py``): N-1 headers and N-1 transport publications
+        amortised into one, decoded by the receiver in a single pass."""
+        total = 4 + sum(len(f) - HEADER_NBYTES + SEG_NBYTES for f in frames)
+        fused = _alloc_frame(HEADER_NBYTES + total)
+        HEADER_STRUCT.pack_into(fused, 0, MAGIC, VERSION, FLAG_FUSED, 0,
+                                self.node_id, 0, total)
+        FUSED_COUNT_STRUCT.pack_into(fused, HEADER_NBYTES, len(frames))
+        off = HEADER_NBYTES + 4
+        for f in frames:
+            _, _, flags, key, _, msg_id, plen = HEADER_STRUCT.unpack_from(f, 0)
+            SEG_STRUCT.pack_into(fused, off, key, flags, msg_id, plen)
+            off += SEG_NBYTES
+            end = HEADER_NBYTES + plen
+            fused[off : off + plen] = (
+                f[HEADER_NBYTES:end] if isinstance(f, (bytes, bytearray))
+                else memoryview(f)[HEADER_NBYTES:end]
+            )
+            off += plen
+        self.stats["fused"] += len(frames)
+        return fused
 
     def _send_request(self, dst: int, function: Function, msg_id: int) -> None:
         # zero-extra-copy frame assembly: the frame is allocated at its exact
         # final size and the payload packed straight in after the 32-byte
-        # header (the bitwise fast path; no bytearray growth reallocs)
-        record = function.record
-        key = self.table.key_of(record.stable_name)
-        if record.is_static:
-            n = static_payload_nbytes(record.arg_specs)
-            frame = bytearray(HEADER_NBYTES + n)
-            mig.pack_static(function.args, record.arg_specs,
-                            out=memoryview(frame)[HEADER_NBYTES:])
-            flags = 0
+        # header.  Static-spec handlers ride the compiled WirePlan (exact
+        # nbytes known up front, one fused struct call for scalar leaves);
+        # dynamic handlers fall back to measured TLV.
+        key = self.table.key_of(function.record.stable_name)
+        plan = self._arg_plans[key]
+        if plan is not None:
+            n = plan.nbytes
+            frame = _alloc_frame(HEADER_NBYTES + n)
+            plan.pack_args(frame, HEADER_NBYTES, function.args)
+            flags = FLAG_STATIC
         else:
             args = list(function.args)
             n = mig.dynamic_nbytes(args)
@@ -392,6 +493,75 @@ class NodeRuntime:
                                 self.node_id, msg_id, n)
         self._send_frame(dst, frame)
         self.stats["sent"] += 1
+
+    def send_fused(self, dst: int, functions) -> list[Future]:
+        """Submit many calls as ONE ``FLAG_FUSED`` frame; futures in order.
+
+        The caller-side half of small-call fusion: one header, one transport
+        publication and one receiver dispatch pass for the whole batch.  Any
+        registered handler may appear (static calls plan-pack, dynamic calls
+        TLV-pack into their segments); batches larger than
+        ``FUSE_MAX_SEGMENTS`` split into multiple fused frames.  Replies
+        resolve each call's future individually — an error in one call
+        rejects only that future.
+
+        All-or-nothing on failure: every frame is packed BEFORE anything is
+        sent, and any pack/send error discards every created future (so a
+        spec-violating call cannot strand earlier sub-batches' replies on
+        futures the caller never received) and re-raises to the caller.
+        """
+        functions = list(functions)
+        created = [self.futures.create() for _ in functions]
+        calls = [(fn, msg_id) for fn, (msg_id, _) in zip(functions, created)]
+        try:
+            frames = [
+                self._pack_fused_frame(calls[start : start + FUSE_MAX_SEGMENTS])
+                for start in range(0, len(calls), FUSE_MAX_SEGMENTS)
+            ]
+            for frame in frames:
+                self._send_frame(dst, frame)
+        except Exception:
+            # popped table entries drop any straggler reply for these ids
+            for msg_id, _ in created:
+                self.futures.discard(msg_id)
+            raise
+        self.stats["sent"] += len(calls)
+        return [fut for _, fut in created]
+
+    def _send_fused_request(self, dst: int, calls) -> None:
+        """Pack ``[(function, msg_id), ...]`` into one fused frame and send."""
+        self._send_frame(dst, self._pack_fused_frame(calls))
+        self.stats["sent"] += len(calls)
+
+    def _pack_fused_frame(self, calls):
+        """One FLAG_FUSED frame for ``[(function, msg_id), ...]``."""
+        key_of = self.table.key_of
+        plans = self._arg_plans
+        metas = []
+        total = 4
+        for fn, msg_id in calls:
+            key = key_of(fn.record.stable_name)
+            plan = plans[key]
+            if plan is not None:
+                n, flags = plan.nbytes, FLAG_STATIC
+            else:
+                n, flags = mig.dynamic_nbytes(list(fn.args)), FLAG_DYNAMIC
+            metas.append((key, flags, msg_id, n, plan, fn.args))
+            total += SEG_NBYTES + n
+        frame = _alloc_frame(HEADER_NBYTES + total)
+        HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, FLAG_FUSED, 0,
+                                self.node_id, 0, total)
+        FUSED_COUNT_STRUCT.pack_into(frame, HEADER_NBYTES, len(metas))
+        off = HEADER_NBYTES + 4
+        for key, flags, msg_id, n, plan, args in metas:
+            SEG_STRUCT.pack_into(frame, off, key, flags, msg_id, n)
+            off += SEG_NBYTES
+            if plan is not None:
+                plan.pack_args(frame, off, args)
+            else:
+                mig.pack_dynamic_into(frame, off, list(args))
+            off += n
+        return frame
 
     def send_sync(self, dst: int, function: Function, timeout: float | None = 30.0):
         if self.inline:
@@ -416,14 +586,32 @@ class NodeRuntime:
                     raise TimeoutError("inline sync offload timed out")
                 continue
             key, flags, src, mid, payload = decode_fast(frame)
+            if flags & FLAG_FUSED:
+                # our reply may ride a fused batch (the responder coalesces
+                # same-destination replies): peel our segment, dispatch the
+                # rest through the normal path
+                mine = None
+                for skey, sflags, smid, seg in iter_fused(payload):
+                    if mine is None and sflags & FLAG_REPLY and smid == msg_id:
+                        mine = (skey, sflags, seg)
+                    else:
+                        self._handle_one(skey, sflags, src, smid, seg, True)
+                if mine is None:
+                    continue
+                return self._finish_sync_reply(*mine)
             if flags & FLAG_REPLY and mid == msg_id:
-                if flags & FLAG_ERROR:
-                    err = mig.unpack_dynamic(payload)
-                    from repro.core.errors import RemoteExecutionError
-
-                    raise RemoteExecutionError(err["msg"], err.get("tb", ""))
-                return mig.unpack_dynamic(payload)
+                return self._finish_sync_reply(key, flags, payload)
             self._handle_frame(frame)
+
+    def _finish_sync_reply(self, key, flags, payload):
+        """Inline-sync tail: same decode as the event loop (_decode_reply),
+        raised instead of routed through a future."""
+        value, err = self._decode_reply(key, flags, payload)
+        if err is not None:
+            from repro.core.errors import RemoteExecutionError
+
+            raise RemoteExecutionError(err[0], err[1])
+        return value
 
     def _inline_wait(self, fut: Future, timeout: float | None):
         """Caller-thread polling: the lowest-latency mode (no wakeup hop).
@@ -460,32 +648,126 @@ class NodeRuntime:
         # ``owned=False`` marks a leased transport view: anything escaping
         # this call (futures, deferred execution) must copy first.
         key, flags, src, msg_id, payload = decode_fast(frame)
+        if flags & FLAG_FUSED:
+            self._handle_fused(src, payload, owned)
+        else:
+            self._handle_one(key, flags, src, msg_id, payload, owned)
+
+    def _handle_one(self, key, flags, src, msg_id, payload, owned) -> None:
+        """Dispatch one logical message (a standalone frame's decode or one
+        fused segment)."""
         if flags & FLAG_REPLY:
             self.stats["replies"] += 1
             if not owned:
                 payload = bytes(payload)  # escapes into the future table
-            if flags & FLAG_ERROR:
-                err = mig.unpack_dynamic(payload)
-                self.futures.reject(msg_id, err["msg"], err.get("tb", ""))
+            value, err = self._decode_reply(key, flags, payload)
+            if err is None:
+                self.futures.resolve(msg_id, value)
             else:
-                self.futures.resolve(msg_id, mig.unpack_dynamic(payload))
+                self.futures.reject(msg_id, err[0], err[1])
             return
-        record = self.table.handler_at(key)
+        try:
+            record = self._records[key]
+            plan = self._arg_plans[key]
+        except IndexError:
+            self.table.handler_at(key)  # raises the same-source diagnostic
+            raise
         if type(self.policy) is DirectPolicy:  # skip the closure on the hot path
             # executes before the lease is released — views are safe in place
-            self._execute(record, key, src, msg_id, payload)
+            self._execute(record, plan, key, flags, src, msg_id, payload)
         else:
             if not owned:
                 payload = bytes(payload)  # outlives the drain iteration
-            self.policy.submit(lambda: self._execute(record, key, src, msg_id,
-                                                     payload))
+            self.policy.submit(lambda: self._execute(record, plan, key, flags,
+                                                     src, msg_id, payload))
 
-    def _execute(self, record, key, src, msg_id, payload) -> None:
+    def _handle_fused(self, src, payload, owned) -> None:
+        """One FLAG_FUSED frame => N logical messages, one dispatch pass.
+
+        Replies resolve inline (cheap, and futures are thread-safe);
+        request segments execute in order — for a pooled policy all of them
+        ride a single ``submit`` (the single-executor-pass contract), so a
+        fused batch costs one task switch, not N.
+        """
+        direct = type(self.policy) is DirectPolicy
+        if not owned and not direct:
+            # one copy for the whole batch (deferred segments outlive the
+            # lease); direct execution stays in place and reply segments
+            # are copied individually by _handle_one
+            payload = memoryview(bytes(payload))
+            owned = True
+        # a fused frame often arrives as a singleton drain batch (which runs
+        # undrained for latency): park this batch's replies regardless so
+        # they flush as ONE fused reply frame — fusion's return half
+        restore_drain = (
+            direct and not self._draining
+            and threading.get_ident() == self._loop_tid
+        )
+        if restore_drain:
+            self._draining = True
+        deferred = None
+        try:
+            for key, flags, msg_id, seg in iter_fused(payload):
+                if flags & FLAG_REPLY:
+                    self._handle_one(key, flags, src, msg_id, seg, owned)
+                    continue
+                try:
+                    record = self._records[key]
+                    plan = self._arg_plans[key]
+                except IndexError:
+                    self.table.handler_at(key)
+                    raise
+                if direct:
+                    self._execute(record, plan, key, flags, src, msg_id, seg)
+                else:
+                    if deferred is None:
+                        deferred = []
+                    deferred.append((record, plan, key, flags, src, msg_id, seg))
+        finally:
+            if restore_drain:
+                self._draining = False
+                self._flush_egress()
+        if deferred:
+            def _run_batch(batch=deferred):
+                for item in batch:
+                    self._execute(*item)
+            self.policy.submit(_run_batch)
+
+    def _decode_reply(self, key, flags, payload):
+        """Shared reply decode (event loop AND inline-sync path): returns
+        ``(value, None)`` or ``(None, (msg, tb))`` for an error reply.
+
+        ``FLAG_STATIC`` selects the handler's compiled result plan; error
+        replies and un-flagged replies (pre-plan peers) are dynamic TLV.
+        """
+        if flags & FLAG_ERROR:
+            err = mig.unpack_dynamic(payload)
+            return None, (err["msg"], err.get("tb", ""))
+        if flags & FLAG_STATIC:
+            try:
+                plan = self._result_plans[key]
+            except IndexError:
+                plan = None
+            if plan is None:
+                raise MessageFormatError(
+                    f"STATIC reply for key {key} but no local result plan; "
+                    "peer key maps diverge (same-source assumption violated)"
+                )
+            return plan.unpack_result(payload), None
+        return mig.unpack_dynamic(payload), None
+
+    def _execute(self, record, plan, key, flags, src, msg_id, payload) -> None:
         token = _current_node.set(self)  # policy may run on a pool thread
         try:
             self.stats["handled"] += 1
             try:
-                args = Function.unpack_args(record, payload)
+                # wire compat: a pre-plan peer sends static payloads with no
+                # flag bits — the plan decodes them regardless (identical
+                # layout); FLAG_DYNAMIC forces the TLV path either way
+                if plan is not None and not flags & FLAG_DYNAMIC:
+                    args = plan.unpack_args(payload)
+                else:
+                    args = tuple(mig.unpack_dynamic(payload))
                 result = record.fn(*args)
             except Exception as e:  # noqa: BLE001 — remote errors must travel
                 self.stats["errors"] += 1
@@ -497,10 +779,12 @@ class NodeRuntime:
                 return
             if msg_id:
                 try:
-                    self._send_reply(src, key, msg_id, result, FLAG_REPLY)
+                    self._send_reply(src, key, msg_id, result, FLAG_REPLY,
+                                     self._result_plans[key])
                 except Exception as e:  # noqa: BLE001 — e.g. reply exceeds the
-                    # transport frame limit: the caller must get an error, not
-                    # a dead worker and a timeout
+                    # transport frame limit, or the result violates the
+                    # handler's declared result spec: the caller must get an
+                    # error, not a dead worker and a timeout
                     self.stats["errors"] += 1
                     self._send_reply(
                         src, key, msg_id,
@@ -511,10 +795,19 @@ class NodeRuntime:
         finally:
             _current_node.reset(token)
 
-    def _send_reply(self, dst: int, key: int, msg_id: int, result, flags) -> None:
-        n = mig.dynamic_nbytes(result)
-        frame = _alloc_frame(HEADER_NBYTES + n)
-        mig.pack_dynamic_into(frame, HEADER_NBYTES, result)
+    def _send_reply(self, dst: int, key: int, msg_id: int, result, flags,
+                    plan=None) -> None:
+        if plan is not None and not flags & FLAG_ERROR:
+            # static result fast path: exact-size frame, plan-packed payload
+            n = plan.nbytes
+            frame = _alloc_frame(HEADER_NBYTES + n)
+            plan.pack_result(frame, HEADER_NBYTES, result)
+            flags |= FLAG_STATIC
+        else:
+            n = mig.dynamic_nbytes(result)
+            frame = _alloc_frame(HEADER_NBYTES + n)
+            mig.pack_dynamic_into(frame, HEADER_NBYTES, result)
+            flags |= FLAG_DYNAMIC
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags,
                                 key, self.node_id, msg_id, n)
         self._send_frame(dst, frame)
@@ -537,13 +830,18 @@ class NodeRuntime:
                 self._maybe_report_depth(force_zero=True)
                 continue
             self.stats["batches"] += 1
-            self._draining = True
+            # singleton batches (the latency-sensitive ping-pong case) skip
+            # the egress parking: there is nothing to coalesce a lone reply
+            # with, and the park+flush detour costs ~1us per round trip
+            self._draining = len(frames) > 1
             self._batch_remaining = len(frames)
+            report_depth = self._depth_dst is not None
             try:
                 for frame in frames:
-                    # report BEFORE executing: a long handler must not hide
-                    # the queue that is forming behind it
-                    self._maybe_report_depth()
+                    if report_depth:
+                        # report BEFORE executing: a long handler must not
+                        # hide the queue that is forming behind it
+                        self._maybe_report_depth()
                     try:
                         self._handle_frame(frame, owned=not leased)
                     except Exception:  # noqa: BLE001 — a poison frame must
