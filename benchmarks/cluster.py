@@ -18,8 +18,16 @@ continuous submit stream — the acceptance check is zero failed calls and a
 throughput gain while grown — and a resize's session-remap fraction is
 measured against the rendezvous-hash fair share.
 
+A third section measures the **replicated data plane** (crash recovery):
+write-through put overhead with ``replicas=1`` vs ``replicas=0``, then a
+kill of one worker in a 4-worker pool holding replicated session buffers —
+recording time-to-recovery (death detection + metadata promotion + session
+repin), that ZERO buffers were lost, and that every buffer read back
+intact through its original (stale-epoch) pointer.
+
 Writes ``BENCH_cluster.json`` with the sweeps and the acceptance checks:
-pipelined >= 2x serial at 4 workers; resize with zero failures.
+pipelined >= 2x serial at 4 workers; resize with zero failures; kill 4->3
+with zero lost buffers.
 """
 
 from __future__ import annotations
@@ -28,6 +36,8 @@ import json
 import threading
 import time
 from pathlib import Path
+
+import numpy as np
 
 import repro.cluster.pool  # noqa: F401 — registers _cluster/* pre-init
 from repro.cluster import ClusterPool, Scheduler, SessionRouter, as_completed
@@ -167,6 +177,102 @@ def _resize_under_stream(sleep_s: float, phase_s: float) -> dict:
         pool.close()
 
 
+def _recovery_section(smoke: bool) -> dict:
+    """Replicated-data-plane cost and crash recovery, measured.
+
+    Phase 1 — write-through overhead: N buffer puts with ``replicas=1``
+    (payload lands on primary + replica) timed against ``replicas=0``.
+    Phase 2 — kill one of 4 workers holding replicated session buffers
+    mid-stream; measure kill -> (death detected + every buffer promoted +
+    every session repinned), then verify each buffer reads back intact
+    through its ORIGINAL stale-epoch pointer.  Acceptance: zero lost.
+    """
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    nbuf = 8 if smoke else 24
+    elems = (4 << 10) if smoke else (64 << 10)  # float64: 32 KB / 512 KB
+
+    def timed_puts(replicas: int):
+        pool = ClusterPool.local(4, registry=reg, replicas=replicas)
+        ptrs = []
+        payload = np.arange(float(elems))
+        for i in range(nbuf):  # allocation outside the timed region
+            ptrs.append(pool.allocate((elems,), "float64",
+                                      session=f"rec-{i}"))
+        t0 = time.perf_counter()
+        for ptr in ptrs:
+            pool.put(payload, ptr)
+        dt = time.perf_counter() - t0
+        return dt, pool, ptrs
+
+    t_plain, pool0, _ = timed_puts(0)
+    pool0.close()
+    t_repl, pool, ptrs = timed_puts(1)
+    payload = np.arange(float(elems))
+    try:
+        sched = Scheduler(pool, max_inflight=16)
+        fn = f2f("_cluster/sleep", 0.001, registry=reg)
+        # pin every session at its buffer home, with traffic flowing
+        for i in range(nbuf):
+            sched.submit(fn, session=f"rec-{i}").get(10)
+        stop = threading.Event()
+        failed: list = []
+
+        def stream():
+            i = 0
+            while not stop.is_set():
+                try:
+                    sched.submit(fn, session=f"rec-{i % nbuf}").get(10)
+                except Exception as e:  # noqa: BLE001 — in-flight on the
+                    failed.append(e)  # victim at kill time is legitimate
+                i += 1
+
+        t = threading.Thread(target=stream)
+        t.start()
+        victim = sched.sessions.lookup("rec-0")
+        victims = [i for i in range(nbuf)
+                   if sched.sessions.lookup(f"rec-{i}") == victim]
+        t_kill = time.perf_counter()
+        pool.kill(victim)
+        # recovery point: victim fenced, all its buffers promoted, all its
+        # sessions repinned off the corpse
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            if victim not in sched.live_nodes() and all(
+                sched.sessions.lookup(f"rec-{i}") != victim for i in victims
+            ):
+                break
+            time.sleep(0.001)
+        recovery_ms = (time.perf_counter() - t_kill) * 1e3
+        stop.set()
+        t.join()
+        lost = len(pool.directory.lost_handles())
+        intact = sum(
+            1 for ptr in ptrs if np.array_equal(pool.get(ptr), payload)
+        )
+        # post-recovery session traffic flows on the replica holders
+        for i in victims:
+            sched.submit(fn, session=f"rec-{i}").get(10)
+        return {
+            "buffers": nbuf,
+            "buffer_nbytes": elems * 8,
+            "put_ms_replicas0": round(t_plain * 1e3, 2),
+            "put_ms_replicas1": round(t_repl * 1e3, 2),
+            "writethrough_overhead_x": round(t_repl / max(t_plain, 1e-9), 2),
+            "kill": "4 -> 3 workers, replicas=1",
+            "victim_buffers": len(victims),
+            "recovery_ms": round(recovery_ms, 1),
+            "buffers_lost": lost,
+            "buffers_intact": intact,
+            "recovered_fraction": round(intact / nbuf, 3),
+            "sessions_repinned": sched.sessions.stats["recovered"],
+            "stale_ptrs_resolved": pool.directory.stats["stale_resolved"],
+        }
+    finally:
+        pool.close()
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     calls = 32 if smoke else CALLS
     sleep_s = SLEEP_S
@@ -195,22 +301,33 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         f"{resize['calls_completed']} calls, "
         f"{resize['failed_calls']} failed during 2->4->2",
     ))
+    recovery = _recovery_section(smoke)
+    rows.append((
+        "cluster/recovery_ms", recovery["recovery_ms"],
+        f"kill 4->3: {recovery['buffers_lost']} lost, "
+        f"{recovery['buffers_intact']}/{recovery['buffers']} intact, "
+        f"write-through {recovery['writethrough_overhead_x']}x",
+    ))
     accept = {
         policy: sweep[policy]["4"]["speedup"] >= 2.0 for policy in POLICIES
     }
     report = {
-        "schema": "cluster-v2",
+        "schema": "cluster-v3",
         "service_time_s": sleep_s,
         "calls": calls,
         "max_inflight": MAX_INFLIGHT,
         "smoke": smoke,
         "sweep": sweep,
         "resize": resize,
+        "recovery": recovery,
         "acceptance": {
             "pipelined_ge_2x_serial_at_4_workers": accept,
             "resize_zero_failed_calls": resize["failed_calls"] == 0,
             "pinned_sessions_zero_remap_on_grow":
                 resize["sessions"]["pinned_remap_fraction_on_grow"] == 0,
+            "kill_4_to_3_zero_lost_buffers": recovery["buffers_lost"] == 0,
+            "kill_4_to_3_all_buffers_intact":
+                recovery["recovered_fraction"] == 1.0,
         },
     }
     _JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")

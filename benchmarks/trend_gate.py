@@ -28,6 +28,21 @@ put/get size.  When the fresh report says ``"smoke": true``, paths listed
 in ``SMOKE_SIZE_DEPENDENT`` are skipped and baseline leaves absent from
 the fresh run are skipped rather than failed (smoke runs fewer sizes by
 design).  Full runs keep the strict dropped-metric check.
+
+Trend-slope gate (``--history-dir``)
+------------------------------------
+
+The committed-point check above cannot see *creep*: three consecutive -15%
+regressions each pass a 30% tolerance while the metric quietly halves.
+With ``--history-dir`` the gate also persists every run's tracked leaves
+to ``<dir>/<file>.history.jsonl`` (CI caches the directory between runs
+and uploads it as an artifact) and fits a least-squares line over the last
+``--slope-window`` runs of each leaf: when the fitted decline across the
+window exceeds ``--slope-tolerance`` (default 0.30, same spirit as the
+point tolerance), the run fails with ``TREND`` even though every
+individual point was within tolerance of the committed baseline.  Leaves
+need ``--slope-min-runs`` history points (default 3) before the slope is
+judged — a fresh cache never fails vacuously.
 """
 
 from __future__ import annotations
@@ -46,6 +61,9 @@ TRACKED = {
         "sweep.round_robin.4.speedup",
         "sweep.least_outstanding.4.speedup",
         "resize.speedup_4w_over_2w",
+        # data-plane crash recovery: fraction of replicated buffers intact
+        # after kill 4->3 (must stay 1.0 — any dip is a recovery bug)
+        "recovery.recovered_fraction",
     ],
     "BENCH_hotpath.json": [
         "batching_speedup_x64",
@@ -63,6 +81,13 @@ TRACKED = {
 #: meaningless to compare between a full baseline and a smoke fresh run
 SMOKE_SIZE_DEPENDENT = {
     "BENCH_hotpath.json": ["batching_speedup_x64"],
+}
+
+#: correctness leaves gated with ZERO tolerance (point and slope): these are
+#: fractions of things that must not be lost, not timings — a 30%-tolerated
+#: dip would wave through a real recovery bug
+ZERO_TOLERANCE = {
+    "BENCH_cluster.json:recovery.recovered_fraction",
 }
 
 
@@ -85,7 +110,7 @@ def _leaves(dotted: str, value):
 
 
 def compare(baseline: dict, fresh: dict, paths, tolerance: float,
-            smoke_skip=()):
+            smoke_skip=(), zero_tol=()):
     """Yield ``(path, base, new, ok)`` for every tracked leaf.
 
     ``ok`` is True/False for a compared leaf, or None for a skip: a leaf
@@ -110,10 +135,88 @@ def compare(baseline: dict, fresh: dict, paths, tolerance: float,
                 # smoke runs produce a size subset: skip, don't fail
                 yield path, base, None, (None if fresh_is_smoke else False)
                 continue
-            yield path, base, new, new >= (1.0 - tolerance) * base
+            tol = 0.0 if path in zero_tol else tolerance
+            yield path, base, new, new >= (1.0 - tol) * base
+
+
+def _fresh_leaves(fresh: dict, paths, smoke_skip) -> dict[str, float]:
+    """Tracked leaves present in a fresh report (history record shape);
+    smoke-size-dependent paths are dropped from smoke runs so a history
+    series never mixes incomparable sizes."""
+    fresh_is_smoke = bool(fresh.get("smoke"))
+    out: dict[str, float] = {}
+    for dotted in paths:
+        if fresh_is_smoke and dotted in smoke_skip:
+            continue
+        out.update(_leaves(dotted, _dig(fresh, dotted)))
+    return out
+
+
+def append_history(history_file: Path, fresh: dict, paths, smoke_skip,
+                   now: float) -> list[dict]:
+    """Append this run's tracked leaves to the jsonl history; returns the
+    full (parsed) history including the new entry."""
+    entries: list[dict] = []
+    if history_file.exists():
+        for line in history_file.read_text().splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue  # a truncated cache write must not kill the gate
+    record = {
+        "t": round(now, 1),
+        "smoke": bool(fresh.get("smoke")),
+        "metrics": _fresh_leaves(fresh, paths, smoke_skip),
+    }
+    entries.append(record)
+    history_file.parent.mkdir(parents=True, exist_ok=True)
+    with history_file.open("a") as f:
+        f.write(json.dumps(record) + "\n")
+    return entries
+
+
+def fitted_decline(values) -> float:
+    """Least-squares slope over run index, expressed as the fitted total
+    *fractional change* across the window (negative = decline): slope *
+    (n-1) / mean.  Ratios hover around a constant, so the mean is a sane
+    scale."""
+    n = len(values)
+    if n < 2:
+        return 0.0
+    mean_x = (n - 1) / 2.0
+    mean_y = sum(values) / n
+    num = sum((i - mean_x) * (y - mean_y) for i, y in enumerate(values))
+    den = sum((i - mean_x) ** 2 for i in range(n))
+    if den == 0 or mean_y == 0:
+        return 0.0
+    slope = num / den
+    return slope * (n - 1) / mean_y
+
+
+def slope_check(entries: list[dict], paths_present, *, window: int,
+                min_runs: int, tolerance: float, zero_tol=()):
+    """Yield ``(path, n_runs, decline, ok)`` per leaf with enough history;
+    ``ok`` False when the fitted decline across the window exceeds the
+    tolerance (zero-tolerance leaves fail on any decline)."""
+    series: dict[str, list[float]] = {}
+    for entry in entries:
+        for path, value in entry.get("metrics", {}).items():
+            series.setdefault(path, []).append(float(value))
+    for path in sorted(paths_present):
+        values = series.get(path, [])[-window:]
+        if len(values) < min_runs:
+            continue
+        decline = fitted_decline(values)
+        tol = 0.0 if path in zero_tol else tolerance
+        yield path, len(values), decline, decline >= -tol
 
 
 def main(argv=None) -> int:
+    import time
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline-dir", type=Path, required=True,
                     help="directory holding the committed BENCH_*.json")
@@ -121,10 +224,22 @@ def main(argv=None) -> int:
                     help="directory with freshly produced BENCH_*.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional regression (default 0.30)")
+    ap.add_argument("--history-dir", type=Path, default=None,
+                    help="persist per-run tracked metrics here and gate on "
+                         "the fitted trend slope, not just this point")
+    ap.add_argument("--slope-window", type=int, default=10,
+                    help="history runs the slope is fitted over (default 10)")
+    ap.add_argument("--slope-min-runs", type=int, default=3,
+                    help="history points required before the slope gates "
+                         "(default 3)")
+    ap.add_argument("--slope-tolerance", type=float, default=0.30,
+                    help="allowed fitted decline across the window "
+                         "(default 0.30)")
     opts = ap.parse_args(argv)
 
     failures = 0
     checked = 0
+    now = time.time()
     for fname, paths in TRACKED.items():
         base_path = opts.baseline_dir / fname
         fresh_path = opts.fresh_dir / fname
@@ -134,9 +249,30 @@ def main(argv=None) -> int:
             continue
         baseline = json.loads(base_path.read_text())
         fresh = json.loads(fresh_path.read_text())
+        smoke_skip = SMOKE_SIZE_DEPENDENT.get(fname, ())
+        zero_tol = {p.split(":", 1)[1] for p in ZERO_TOLERANCE
+                    if p.startswith(fname + ":")}
+        if opts.history_dir is not None:
+            entries = append_history(
+                opts.history_dir / f"{fname}.history.jsonl", fresh, paths,
+                smoke_skip, now,
+            )
+            present = _fresh_leaves(fresh, paths, smoke_skip)
+            for path, n, decline, ok in slope_check(
+                entries, present, window=opts.slope_window,
+                min_runs=opts.slope_min_runs,
+                tolerance=opts.slope_tolerance, zero_tol=zero_tol,
+            ):
+                checked += 1
+                status = "ok" if ok else "TREND"
+                print(f"{status:>10}  {fname}:{path}  slope over {n} runs: "
+                      f"{decline:+.1%} fitted "
+                      f"(floor -{opts.slope_tolerance:.0%})")
+                if not ok:
+                    failures += 1
         for path, base, new, ok in compare(baseline, fresh, paths,
                                            opts.tolerance,
-                                           SMOKE_SIZE_DEPENDENT.get(fname, ())):
+                                           smoke_skip, zero_tol):
             if ok is None:
                 if base is None:
                     # not in the baseline yet (new metric) or size-dependent

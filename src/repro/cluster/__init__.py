@@ -11,8 +11,11 @@ contracts.
 from repro.cluster.pool import ClusterPool, register_cluster_handlers
 from repro.cluster.scheduler import POLICIES, Scheduler, as_completed, gather
 from repro.cluster.sessions import SessionRouter, rendezvous_hash
+from repro.offload.dataplane import BufferDirectory, BufferRecord
 
 __all__ = [
+    "BufferDirectory",
+    "BufferRecord",
     "ClusterPool",
     "Scheduler",
     "SessionRouter",

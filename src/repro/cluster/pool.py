@@ -60,6 +60,38 @@ Workers report executor queue depth to the host as ``_cluster/stats``
 oneways (see ``NodeRuntime.enable_depth_report``); the scheduler folds the
 reports into ``least_outstanding`` so host-side in-flight counts are
 corrected by what is actually queued behind each worker.
+
+Replicated data plane (ownership epochs; full protocol in
+``repro.offload.dataplane``)
+------------------------------------------------------------------------
+
+Every pool owns a :class:`BufferDirectory` and exposes a directory-tracked
+data plane: :meth:`allocate` places a buffer's primary on a live worker
+(round-robin unless pinned) and installs ``replicas=N`` empty copies under
+the SAME global handle on other workers (``_ham/buf_adopt``); :meth:`put`
+**writes through** to every holder over the existing zero-copy chunked put
+path, so copies never diverge; :meth:`get`/:meth:`free` resolve stale
+pointers through the directory first.  The failure/elasticity contract:
+
+* **crash** — the monitor's death announcement runs the directory's
+  metadata-only promotion *before* any external subscriber: each affected
+  buffer's lowest-id replica becomes primary, its epoch bumps (old
+  pointers are now stale and re-resolve transparently at submit), and
+  sessions bound to moved buffers repin onto the node holding their bytes;
+  buffers with no replica are recorded lost and resolve loudly;
+* **shrink** — ``remove_node(drain=True)`` migrates every primary off the
+  leaving node before the scheduler fence (promoting an existing replica
+  when one holds the bytes — zero copy — else streaming to a survivor),
+  backfills the replicas it held, and detaches it from the directory:
+  shrink is lossless.  ``drain=False`` takes the crash path (replicas
+  promote, replica-less buffers are lost — that is what drain is for);
+* **join/restart** — lazy backfill: buffers left under-replicated by
+  earlier deaths copy one replica onto the joiner.
+
+Drain migration assumes the caller quiesces *writes* to buffers homed on
+the leaving node for the duration of ``remove_node`` (reads are safe;
+write-through to a mid-migration buffer may land on the old primary after
+its bytes were copied).
 """
 
 from __future__ import annotations
@@ -67,12 +99,16 @@ from __future__ import annotations
 import threading
 import time
 
+import numpy as np
+
 from repro.comm.local import LocalFabric
 from repro.core.closure import f2f
 from repro.core.errors import OffloadError, RegistrySealedError
 from repro.core.executor import DirectPolicy
 from repro.core.registry import default_registry, verify_peer_digest
 from repro.offload.api import OffloadDomain
+from repro.offload.buffer import BufferPtr
+from repro.offload.dataplane import BufferDirectory, register_dataplane_handlers
 from repro.offload.runtime import NodeRuntime
 from repro.offload.worker import (
     reap,
@@ -156,10 +192,12 @@ def _h_digest():
 
 
 def register_cluster_handlers(registry=None) -> None:
-    """Register the pool's control + demo/probe handlers.  Safe to call
-    repeatedly; silently skipped on an already-sealed registry (then callers
-    must have registered these before ``init()`` themselves)."""
+    """Register the pool's control + demo/probe handlers (plus the
+    ``_ham/buf_*`` dataplane control set).  Safe to call repeatedly;
+    silently skipped on an already-sealed registry (then callers must have
+    registered these before ``init()`` themselves)."""
     reg = registry or default_registry()
+    register_dataplane_handlers(reg)
     for name, fn in (
         ("_cluster/sleep", _h_sleep),
         ("_cluster/spin", _h_spin),
@@ -289,6 +327,7 @@ class ClusterPool:
         setup_modules=None,
         policy_factory=DirectPolicy,
         mode: str = "local",
+        replicas: int = 0,
     ):
         self.domain = domain
         self.fabric = domain.fabric
@@ -303,6 +342,18 @@ class ClusterPool:
         self._restart_cbs: list = []
         self._join_cbs: list = []
         self._leave_cbs: list = []
+        #: replication factor for the directory-tracked data plane (module
+        #: docs, "Replicated data plane"); 0 = primaries only
+        self.replicas = int(replicas)
+        self.directory = BufferDirectory()
+        self.host.buffer_directory = self.directory  # _ham/buf_freed target
+        self._alloc_rr = 0  # round-robin primary placement for allocate()
+        # the directory's failover MUST run before any external death
+        # subscriber (the scheduler repins sessions onto post-promotion
+        # placement) — subscribe first, before the monitor can announce
+        self.on_death(self._dataplane_on_death)
+        self.on_join(self._dataplane_on_join)
+        self.on_restart(self._dataplane_on_join)
         #: None => auto-derive from the host registry at each spawn
         #: (registered_setup_modules), so restarts track late registrations
         self._setup_modules = (
@@ -466,6 +517,226 @@ class ClusterPool:
         """Fault injection: hard-stop a worker (no goodbye on the wire)."""
         self._workers[node].kill()
 
+    # -- replicated data plane (module docs; protocol in offload.dataplane) --
+
+    def allocate(self, shape, dtype, *, node: int | None = None,
+                 session=None, replicas: int | None = None,
+                 timeout: float = 30.0) -> BufferPtr:
+        """Allocate a directory-tracked buffer: primary on ``node`` (or the
+        next live worker round-robin), ``replicas`` empty copies installed
+        under the same global handle on other live workers (write-through
+        ``put`` keeps them coherent).  ``session=`` binds the buffer to a
+        sticky-session key: on failover the session repins onto the node
+        holding its bytes, and ending the session frees the buffer
+        everywhere (``Scheduler.end_session`` / :meth:`release_session`).
+        """
+        live = self.live_nodes()
+        if not live:
+            raise OffloadError("no live workers to place a buffer on")
+        rr = self._alloc_rr
+        self._alloc_rr += 1
+        if node is None:
+            node = live[rr % len(live)]
+        elif node not in live:
+            raise OffloadError(f"worker {node} is not live")
+        ptr = self.domain.allocate(node, shape, dtype)
+        want = self.replicas if replicas is None else int(replicas)
+        # rotate replica placement with the same counter as primaries so
+        # replicas (and their write-through traffic) spread over the pool
+        # instead of piling onto the lowest ids
+        others = [n for n in live if n != node]
+        reps = [others[(rr + i) % len(others)]
+                for i in range(min(want, len(others)))]
+        for rep in reps:
+            self.domain.sync(
+                rep,
+                f2f("_ham/buf_adopt", int(ptr.handle),
+                    [int(d) for d in shape], str(np.dtype(dtype)),
+                    registry=self.domain.registry),
+                timeout,
+            )
+        return self.directory.register(ptr, shape, np.dtype(dtype),
+                                       replicas=reps, session=session)
+
+    def put(self, src, ptr: BufferPtr, *, offset: int = 0) -> None:
+        """Write-through put: the payload lands on the primary AND every
+        replica (over the ordinary zero-copy chunked path), so promotion
+        after a crash needs no data movement.
+
+        Divergence guard: a replica whose write fails (died mid-put,
+        mid-removal) is DROPPED from the holder set rather than left
+        holding pre-put bytes — a stale copy must never be promotable.  A
+        failed primary write raises (the put did not happen)."""
+        rec = self.directory.lookup(ptr.handle)
+        if rec is None:  # untracked (or lost — resolve raises the diagnosis)
+            self.domain.put(src, self.directory.resolve(ptr), offset=offset)
+            return
+        self.domain.put(src, ptr.at(rec.primary, rec.epoch), offset=offset)
+        for holder in rec.replicas:
+            try:
+                if not self.is_alive(holder):
+                    raise OffloadError(f"replica holder {holder} is down")
+                self.domain.put(src, ptr.at(holder, rec.epoch),
+                                offset=offset)
+            except Exception:  # noqa: BLE001 — drop, don't diverge
+                self.directory.remove_replica(rec.handle, holder)
+
+    def get(self, ptr: BufferPtr, **kw):
+        """Directory-resolved get: a stale-epoch pointer is transparently
+        rewritten to the current primary before the fetch."""
+        return self.domain.get(self.directory.resolve(ptr), **kw)
+
+    def free(self, ptr: BufferPtr, timeout: float = 10.0) -> None:
+        """Free the logical buffer everywhere: the record is dropped first
+        (a racing worker-side ``_ham/buf_freed`` becomes a no-op), then the
+        primary gets a strict ``_ham/free`` and every replica an idempotent
+        ``_ham/buf_invalidate`` — ``live_count`` stays truthful cluster-wide
+        and no replica outlives its buffer."""
+        rec = self.directory.drop(ptr.handle)
+        if rec is None:
+            self.domain.free(ptr)  # untracked: the paper's plain free
+            return
+        for holder in rec.holders:
+            if not self.is_alive(holder):
+                continue  # its registry died with it
+            try:
+                if holder == rec.primary:
+                    self.domain.free(ptr.at(holder, rec.epoch))
+                else:
+                    self.domain.sync(
+                        holder,
+                        f2f("_ham/buf_invalidate", int(rec.handle),
+                            registry=self.domain.registry),
+                        timeout,
+                    )
+            except Exception:  # noqa: BLE001 — a holder dying mid-free is
+                # equivalent to it having freed; nothing leaks
+                pass
+
+    def release_session(self, session) -> int:
+        """Free every buffer bound to ``session`` (the session ended — its
+        data plane must not leak replicas); returns the number freed."""
+        records = self.directory.session_records(session)
+        for rec in records:
+            try:
+                self.free(rec.ptr())
+            except Exception:  # noqa: BLE001 — keep releasing the rest
+                import traceback
+
+                traceback.print_exc()
+        return len(records)
+
+    def buffer_count(self, node: int, timeout: float = 10.0) -> int:
+        """Live buffers held by ``node``'s registry (cluster-wide hygiene
+        checks: replicas freed, nothing leaked)."""
+        return int(self.domain.sync(
+            node, f2f("_ham/buf_count", registry=self.domain.registry),
+            timeout,
+        ))
+
+    def _copy_buffer(self, rec, src: int, dst: int,
+                     timeout: float = 30.0) -> None:
+        """Stream one buffer ``src`` -> ``dst`` under its global handle,
+        riding the existing chunked zero-copy put/get path (adopt an empty
+        copy, fetch flat — chunked when the reply would exceed a transport
+        frame — then put)."""
+        dom = self.domain
+        dom.sync(
+            dst,
+            f2f("_ham/buf_adopt", int(rec.handle), list(rec.shape),
+                rec.dtype, registry=dom.registry),
+            timeout,
+        )
+        count = 1
+        for d in rec.shape:
+            count *= int(d)
+        itemsize = np.dtype(rec.dtype).itemsize
+        limit = dom.chunk_nbytes
+        cap = getattr(dom.host.endpoint, "max_frame_nbytes", None)
+        if cap:
+            limit = min(limit, cap - 4096)
+        chunk = max(1, limit // itemsize) if rec.nbytes > limit else None
+        src_ptr = BufferPtr(src, rec.handle, rec.nbytes, rec.epoch)
+        data = dom.get(src_ptr, offset=0, count=count, chunk_count=chunk)
+        dom.put(data, BufferPtr(dst, rec.handle, rec.nbytes, rec.epoch))
+
+    def _dataplane_on_death(self, node: int) -> None:
+        """First death subscriber: metadata-only replica promotion (+ lost
+        accounting + session repin hooks) — see BufferDirectory."""
+        self.directory.on_node_death(node)
+
+    def _dataplane_on_join(self, node: int) -> None:
+        """Join/restart subscriber: lazy backfill — buffers left
+        under-replicated by earlier deaths copy one replica onto the
+        joiner (data moves here, at join time, not on the death path)."""
+        if not self.replicas:
+            return
+        live = set(self.live_nodes())
+        for rec in self.directory.under_replicated(self.replicas, live):
+            if node in rec.holders or rec.primary not in live:
+                continue
+            try:
+                self._copy_buffer(rec, rec.primary, node)
+                self.directory.add_replica(rec.handle, node)
+            except Exception:  # noqa: BLE001 — backfill is best-effort;
+                # the buffer stays under-replicated until the next join
+                import traceback
+
+                traceback.print_exc()
+
+    def _migrate_off(self, node: int, timeout: float = 30.0) -> None:
+        """Lossless-shrink half of ``remove_node(drain=True)``: move every
+        primary off ``node`` — promote a surviving replica when one already
+        holds the bytes (zero copy), else stream to a survivor — backfill
+        the replicas it held, detach it from the directory, and repin the
+        sessions whose buffers moved."""
+        live = [n for n in self.live_nodes() if n != node]
+        if not live:
+            # shrinking to zero workers: there is nowhere to move the data —
+            # take the crash path so the loss is *recorded*, not silent
+            self.directory.on_node_death(node)
+            return
+        moved: list[int] = []
+        rr = 0
+        for rec in self.directory.primaries_on(node):
+            reps = [r for r in rec.replicas if r in live]
+            if reps:
+                dst = min(reps)  # the bytes are already there
+            else:
+                dst = live[rr % len(live)]
+                rr += 1
+                try:
+                    self._copy_buffer(rec, node, dst, timeout)
+                except Exception:  # noqa: BLE001 — an unreadable buffer at
+                    # migration time degrades to the crash outcome for this
+                    # buffer only (recorded LOST, resolves raise the
+                    # diagnosis); the removal itself must proceed
+                    import traceback
+
+                    traceback.print_exc()
+                    self.directory.mark_lost(
+                        rec.handle,
+                        f"migration off node {node} failed at its removal",
+                    )
+                    continue
+            self.directory.set_primary(rec.handle, dst)
+            moved.append(rec.handle)
+        if self.replicas:
+            for rec in self.directory.replicas_on(node):
+                candidates = [n for n in live if n not in rec.holders]
+                if not candidates or rec.primary not in live:
+                    continue
+                try:
+                    self._copy_buffer(rec, rec.primary, candidates[0], timeout)
+                    self.directory.add_replica(rec.handle, candidates[0])
+                except Exception:  # noqa: BLE001
+                    import traceback
+
+                    traceback.print_exc()
+        self.directory.detach_node(node)
+        if moved:
+            self.directory.repin_sessions_moved(moved)
+
     # -- elastic membership ------------------------------------------------
 
     def _spawn_worker(self, node: int):
@@ -580,6 +851,11 @@ class ClusterPool:
                 self._removing.add(node)
                 handle = self._workers[node]
             try:
+                if drain:
+                    # lossless shrink: primaries migrate off while the node
+                    # still serves gets — BEFORE the scheduler fence, so the
+                    # directory never routes at a fenced node (module docs)
+                    self._migrate_off(node, timeout)
                 waiters = []
                 for cb in self._leave_cbs:
                     try:

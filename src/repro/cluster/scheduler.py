@@ -30,7 +30,26 @@ was not pinned with ``node=``:
   8-byte scalars — moving the call is cheap, moving the data is not);
   calls with no locality votes (or whose owner is dead) fall back to
   least-outstanding.  This routes compute to data instead of data to
-  compute.
+  compute.  With a pool :class:`BufferDirectory` attached, a replicated
+  buffer votes for EVERY live holder — any copy can serve a read, so
+  locality routing survives the primary's death.
+
+Location-transparent pointers (the data-plane refactor)
+-------------------------------------------------------
+
+When the pool carries a ``BufferDirectory`` (it always does; see
+``repro.offload.dataplane``), every submit rewrites its ``BufferPtr``
+arguments against the directory *before* the frame is packed: a pointer
+carrying a stale ownership epoch (its buffer's primary moved — crash
+promotion or drain migration) is transparently re-resolved to the current
+primary, and a pointer whose chosen target holds a replica is retargeted
+at that copy.  Callers keep using pointers minted before a failover; they
+never see a dangling-handle error for a buffer that still exists (a buffer
+that is genuinely *lost* — died with no replica — raises a diagnosis at
+submit).  The scheduler also subscribes to the directory's repin hooks:
+when a dead worker's buffers promote onto a replica holder, the sessions
+bound to them are re-pinned onto that node, so a session resumes WITH its
+data rather than wherever the rendezvous hash points.
 
 Sticky sessions
 ---------------
@@ -71,9 +90,19 @@ overtake them, on an explicit :meth:`flush`, or at the latest after the
 window elapses (a daemon flusher thread bounds the added latency).  Each
 fused call keeps its own credit, in-flight entry and future — error/death
 semantics are per call, identical to unfused submits; only the wire
-framing and the worker's dispatch pass are shared.  The window trades a
-bounded latency bump on the *first* call of a burst for ~2x small-call
-throughput; leave it off for strictly latency-bound single calls.
+framing and the worker's dispatch pass are shared.
+
+**Adaptive window** (``fuse_adaptive=True``, the default): the batch also
+closes the moment batching stops paying — when the target has nothing
+else in flight (an *idle* worker gains nothing from a parked call; holding
+it for the timer is pure added latency, so a lone call to an idle target
+ships immediately and a burst fuses everything behind its first call), and
+when the target's credit pool drains (every credit consumed: no future
+submit can join the batch, so the timer buys nothing).  The drain edge is
+watched from the completion path too: when a target's wire in-flight sinks
+to its parked batch, the batch ships.  The fixed window remains only as
+the backstop for the in-between regime.  ``fuse_adaptive=False`` restores
+the pure timer (useful for measuring the window itself).
 
 Credit-based flow control (the backpressure contract)
 -----------------------------------------------------
@@ -136,6 +165,7 @@ class Scheduler:
         submit_timeout: float | None = 30.0,
         fuse_window: float | None = None,
         fuse_max: int = 16,
+        fuse_adaptive: bool = True,
     ):
         if policy not in POLICIES:
             raise OffloadError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -145,16 +175,22 @@ class Scheduler:
         self.max_inflight = int(max_inflight)
         self.submit_timeout = submit_timeout
         self._lock = threading.Lock()
+        #: the pool's location-transparent buffer namespace (module docs);
+        #: None only for pool-likes that predate the directory
+        self._directory = getattr(pool, "directory", None)
         # -- small-call fusion state (module docs: Small-call fusion) ------
         self.fuse_window = fuse_window
         self.fuse_max = int(fuse_max)
+        self.fuse_adaptive = bool(fuse_adaptive)
         self._fuse_pending: dict[int, list[tuple[Function, int]]] = {}
         # per-target send serialisation: every pop-and-send (and every
         # non-fusible send that must not overtake a parked batch) runs
         # under the target's send lock, so concurrent submitters and the
         # flusher thread cannot reorder frames toward one worker.  Lock
-        # order: send lock, THEN self._lock — never the reverse.
-        self._send_locks: dict[int, threading.Lock] = {}
+        # order: send lock, THEN self._lock — never the reverse.  Reentrant:
+        # the adaptive close may flush from a completion callback that runs
+        # inside a failed flush's rejection cascade (same thread).
+        self._send_locks: dict[int, threading.RLock] = {}
         self._fuse_stop = threading.Event()
         self._fuse_thread: threading.Thread | None = None
         if fuse_window is not None:
@@ -181,6 +217,11 @@ class Scheduler:
         }
         #: sticky-session affinity over this scheduler's live set
         self.sessions = SessionRouter(self.live_nodes)
+        if self._directory is not None:
+            # crash failover / drain migration re-pin: a session whose
+            # buffers moved follows its data (fires from the directory's
+            # promotion, which the pool runs BEFORE our death callback)
+            self._directory.on_repin(self.sessions.repin)
         pool.on_death(self._on_worker_death)
         pool.on_restart(self._on_worker_join)
         pool.on_join(self._on_worker_join)
@@ -217,8 +258,14 @@ class Scheduler:
             candidates = uncongested or live
             if self.policy == "locality":
                 # votes are nbytes-weighted: route to where the bulk of the
-                # referenced data lives, not to whoever owns the most ptrs
-                votes = mig.scan_locality(function.args)
+                # referenced data lives, not to whoever owns the most ptrs.
+                # Directory-tracked buffers vote for EVERY live holder
+                # (primary or replica — any copy can serve a read)
+                d = self._directory
+                resolver = (
+                    d.locality_resolver if d is not None and len(d) else None
+                )
+                votes = mig.scan_locality(function.args, resolver=resolver)
                 alive_votes = {n: c for n, c in votes.items() if n in self._live}
                 if alive_votes:
                     self.stats["locality_hits"] += 1
@@ -266,13 +313,28 @@ class Scheduler:
                     raise NodeDownError(f"worker {node} is down")
                 target = node
             elif session is not None:
-                target = self.sessions.route(session)
+                # data-affine first placement: a session with buffers bound
+                # in the directory starts life on the node holding its
+                # bytes (later failover repins keep it there); sessions
+                # without bound buffers place by plain rendezvous hash
+                eligible = None
+                if self._directory is not None and len(self._directory) \
+                        and self.sessions.lookup(session) is None:
+                    home = self._directory.session_home(session)
+                    if home is not None and self._is_live(home):
+                        eligible = (home,)
+                target = self.sessions.route(session, eligible=eligible)
                 if target is None:
                     raise OffloadError("no live workers in the pool")
             else:
                 target = self._pick(function)
                 if target is None:
                     raise OffloadError("no live workers in the pool")
+            # location transparency (module docs): rewrite stale-epoch
+            # BufferPtr hints against the directory and retarget pointers
+            # at the chosen node when it holds a copy — BEFORE a credit is
+            # spent, so a genuinely lost buffer raises cleanly here
+            function = self._resolve_for(function, target)
             sem = self._credits.get(target)
             if sem is None:
                 continue  # node retired between route and credit lookup
@@ -327,14 +389,22 @@ class Scheduler:
             # park for fusion: the credit/in-flight reservation above holds,
             # the done-callback is registered NOW (a death or a failed fused
             # send rejects the future, which releases the credit), and the
-            # flusher/batch-full/ordering triggers ship the frame
+            # flusher/batch-full/ordering/adaptive triggers ship the frame
             fut.add_done_callback(lambda f, n=target: self._on_done(n, f))
             with self._lock:
                 pend = self._fuse_pending.setdefault(target, [])
                 pend.append((function, msg_id))
                 self.stats["fused_calls"] += 1
                 full = len(pend) >= self.fuse_max
-            if full:
+                # adaptive close (module docs): ship NOW when the target has
+                # nothing in flight beyond this parked batch (an idle worker
+                # gains nothing from waiting) or when its credit pool just
+                # drained (no future submit can join the batch)
+                inflight = len(self._inflight.get(target, ()))
+                adaptive = self.fuse_adaptive and (
+                    inflight <= len(pend) or inflight >= self.max_inflight
+                )
+            if full or adaptive:
                 self._flush_target(target)
             return fut
         if self.fuse_window is not None:
@@ -351,6 +421,29 @@ class Scheduler:
         # the future, the callback runs immediately and returns the credit
         fut.add_done_callback(lambda f, n=target: self._on_done(n, f))
         return fut
+
+    def _resolve_for(self, function: Function, target: int) -> Function:
+        """Directory pass over a call's arguments: stale-epoch pointers are
+        rewritten to the current primary, and pointers whose buffer has a
+        copy ON ``target`` are retargeted there (the receiving node's
+        own-address-space deref check must see itself).  A no-op without a
+        directory or when nothing is tracked."""
+        d = self._directory
+        if d is None or d.empty():
+            return function
+        new_args, changed = d.resolve_args(function.args, target)
+        if not changed:
+            return function
+        return Function(function.record, new_args)
+
+    def end_session(self, key) -> None:
+        """End a sticky session: drop its routing pin AND free the buffers
+        bound to it cluster-wide (replicas invalidated, ``live_count``
+        truthful — the dataplane hygiene contract)."""
+        self.sessions.end_session(key)
+        release = getattr(self.pool, "release_session", None)
+        if release is not None:
+            release(key)
 
     def _send_single(self, target: int, function: Function, msg_id: int,
                      sem) -> None:
@@ -378,11 +471,11 @@ class Scheduler:
         plan = self.host._arg_plans[key]
         return plan is not None and plan.nbytes <= FUSE_THRESHOLD
 
-    def _send_lock(self, target: int) -> threading.Lock:
+    def _send_lock(self, target: int) -> threading.RLock:
         with self._lock:
             lock = self._send_locks.get(target)
             if lock is None:
-                lock = self._send_locks[target] = threading.Lock()
+                lock = self._send_locks[target] = threading.RLock()
             return lock
 
     def _send_fused(self, target: int, entries: list) -> None:
@@ -468,6 +561,16 @@ class Scheduler:
             self.stats["completed"] += 1
         if sem is not None:
             sem.release()
+        if self.fuse_window is not None and self.fuse_adaptive:
+            # adaptive close, completion edge: the target's wire in-flight
+            # just sank to (at most) its parked batch — the worker is about
+            # to go idle, so holding the batch for the timer is pure latency
+            with self._lock:
+                pend = self._fuse_pending.get(node)
+                drained = bool(pend) and \
+                    len(self._inflight.get(node, ())) <= len(pend)
+            if drained:
+                self._flush_target(node)
 
     def _on_worker_death(self, node: int) -> None:
         """Pool monitor callback: fail this node's in-flight calls and stop

@@ -92,7 +92,7 @@ class SessionRouter:
         self._live_nodes = live_nodes
         self._pins: dict[Hashable, int] = {}
         self._lock = threading.Lock()
-        self.stats = {"placed": 0, "replaced": 0, "hits": 0}
+        self.stats = {"placed": 0, "replaced": 0, "hits": 0, "recovered": 0}
 
     def route(self, key: Hashable, *, eligible: Iterable[int] | None = None) -> int | None:
         """Worker for ``key``: the live pin if one exists, else a fresh HRW
@@ -118,6 +118,20 @@ class SessionRouter:
                 self.stats["replaced"] += 1  # fallback-on-death re-placement
             self._pins[key] = node
             return node
+
+    def repin(self, key: Hashable, node: int) -> None:
+        """Data-directed re-placement: force ``key``'s pin to ``node``.
+
+        The crash-recovery override of the HRW fallback: when a session's
+        worker dies but a replica of its buffers survives elsewhere, the
+        BufferDirectory (through the scheduler) repins the session onto the
+        node now holding its bytes — the session follows its data, not the
+        hash.  Also used by drain migration on ``remove_node``.
+        """
+        with self._lock:
+            if self._pins.get(key) != node:
+                self._pins[key] = node
+                self.stats["recovered"] += 1
 
     def lookup(self, key: Hashable) -> int | None:
         """Current pin (may point at a dead node — ``route`` re-places)."""

@@ -172,7 +172,7 @@ def locality_of(value: Any) -> int | None:
     return codec.locality(value)
 
 
-def scan_locality(values, max_items: int = 64) -> dict[int, int]:
+def scan_locality(values, max_items: int = 64, resolver=None) -> dict[int, int]:
     """Byte-weighted locality votes across a shallow pytree of arguments.
 
     Returns ``{node: weight}`` over every leaf with a registered locality
@@ -186,6 +186,12 @@ def scan_locality(values, max_items: int = 64) -> dict[int, int]:
     what makes "move the compute, not the data" true when buffer sizes are
     skewed: under the old count-per-pointer scheme a node owning one 8-byte
     scalar could outvote a node owning a 100 MB tensor.
+
+    ``resolver`` widens a leaf's vote beyond the codec's single-node hint:
+    called per leaf, it may return ``{node: weight}`` (used as-is) or None
+    (fall through to the codec).  A cluster's ``BufferDirectory`` supplies
+    one so a replicated buffer votes for EVERY live holder — any copy can
+    serve a read, which is what makes locality routing survive the primary.
     """
     votes: dict[int, int] = {}
     stack = list(values) if isinstance(values, (list, tuple)) else [values]
@@ -199,6 +205,12 @@ def scan_locality(values, max_items: int = 64) -> dict[int, int]:
         if isinstance(v, dict):
             stack.extend(v.values())
             continue
+        if resolver is not None:
+            resolved = resolver(v)
+            if resolved is not None:
+                for node, weight in resolved.items():
+                    votes[node] = votes.get(node, 0) + max(1, int(weight))
+                continue
         codec = _CODECS_BY_TYPE.get(type(v))
         if codec is None or codec.locality is None:
             continue

@@ -3,11 +3,13 @@
 from repro.core.future import as_completed, gather
 from repro.offload.api import OffloadDomain, deref, offloaded
 from repro.offload.buffer import BufferPtr, BufferRegistry
+from repro.offload.dataplane import BufferDirectory, register_dataplane_handlers
 from repro.offload.runtime import NodeRuntime, current_node, register_internal_handlers
 
 __all__ = [
     "OffloadDomain", "deref", "offloaded",
-    "BufferPtr", "BufferRegistry",
+    "BufferPtr", "BufferRegistry", "BufferDirectory",
     "NodeRuntime", "current_node", "register_internal_handlers",
+    "register_dataplane_handlers",
     "as_completed", "gather",
 ]

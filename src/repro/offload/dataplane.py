@@ -1,0 +1,477 @@
+"""Location-transparent buffer namespace: directory, epochs, replication.
+
+HAM's address-translation layer made *handlers* location-transparent; this
+module does the same for the *data plane*.  The design follows HPX's AGAS
+(global ids decoupled from placement — Heller et al.) and Active Access
+(Besta & Hoefler: the runtime, not the caller, resolves where data lives):
+
+* A buffer's identity is its **global handle** (``BufferPtr.handle``,
+  minted node-namespaced so it is unique cluster-wide and survives any
+  move).  The pointer's ``node`` field is only a placement *hint*.
+* The host-side :class:`BufferDirectory` is the source of truth: it maps
+  ``handle -> (primary, replicas, epoch, shape/dtype, session)``.
+* The **ownership epoch** makes hints safely cacheable: every primary move
+  bumps the buffer's epoch, so a pointer carrying an older epoch is *stale*
+  and is transparently rewritten by :meth:`BufferDirectory.resolve` /
+  :meth:`resolve_args` — a current-epoch pointer skips the directory.
+
+Ownership / epoch / replication protocol
+----------------------------------------
+
+``allocate`` (through :class:`~repro.cluster.pool.ClusterPool`):
+  the primary node mints the handle and zero-fills the array; each of the
+  ``replicas=N`` holder nodes installs an empty copy under the SAME handle
+  via ``_ham/buf_adopt``; the directory records the set at epoch 0.
+
+``put`` (write-through):
+  the host writes the payload to the primary AND every replica over the
+  existing zero-copy chunked put path — copies never diverge, so promotion
+  needs no data movement.
+
+**Crash** (pool monitor announces a death):
+  :meth:`BufferDirectory.on_node_death` runs *metadata-only* promotion —
+  for every buffer whose primary died and that has a live replica, the
+  lowest-id replica becomes primary and the epoch bumps; a buffer with no
+  replica is recorded **lost** (later resolves raise, they do not hang).
+  Sessions bound to moved buffers are re-pinned onto the node now holding
+  their bytes (``on_repin`` hooks — the scheduler's SessionRouter
+  subscribes), so a dead worker's sessions resume WITH their data.
+
+**Drain shrink** (``ClusterPool.remove_node(drain=True)``):
+  before the scheduler fence, every primary on the leaving node is migrated
+  — promoted in place when a replica already holds the bytes (zero copy),
+  else streamed to a survivor via adopt + chunked put — and every replica
+  it held is backfilled elsewhere; each move bumps the epoch.  Shrink is
+  lossless by construction.
+
+**Join** (``ClusterPool.add_node``):
+  lazy backfill — buffers left under-replicated by earlier deaths copy one
+  replica onto the joiner.
+
+**Free / session end**:
+  freeing anywhere frees the logical buffer everywhere: the directory drops
+  the record and every other holder gets ``_ham/buf_invalidate`` (idempotent
+  discard), so ``live_count`` stays truthful cluster-wide and replicas do
+  not leak when a session completes.  A worker-side ``_ham/free`` announces
+  itself to the host with a ``_ham/buf_freed`` oneway for the same reason.
+
+Stale-pointer re-resolution happens at the *submit boundary* (the
+scheduler rewrites ``BufferPtr`` args against the directory and may
+retarget them at any live holder it routes to), so handler code and the
+per-node :class:`~repro.offload.buffer.BufferRegistry` keep the paper's
+strict own-address-space dereference rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Hashable
+
+from repro.core.errors import OffloadError, RegistrySealedError
+from repro.offload.buffer import BufferPtr
+
+
+@dataclasses.dataclass
+class BufferRecord:
+    """Directory entry: current placement of one logical buffer."""
+
+    handle: int
+    primary: int
+    replicas: tuple[int, ...]
+    epoch: int
+    nbytes: int
+    shape: tuple
+    dtype: str
+    session: Hashable | None = None
+
+    @property
+    def holders(self) -> tuple[int, ...]:
+        return (self.primary, *self.replicas)
+
+    def ptr(self) -> BufferPtr:
+        return BufferPtr(self.primary, self.handle, self.nbytes, self.epoch)
+
+
+class BufferDirectory:
+    """Host-side id -> (primary, replicas, epoch) map with stale-pointer
+    resolution and crash promotion (protocol in the module docstring).
+
+    Thread-safe; promotion runs on the pool monitor thread and is metadata
+    only (the replica already holds the bytes).  ``on_repin`` hooks fire
+    outside the lock with ``(session_key, new_node)`` whenever a primary
+    move strands a session's pin — the scheduler's SessionRouter subscribes
+    and moves the session to its data.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._records: dict[int, BufferRecord] = {}
+        self._lost: dict[int, str] = {}  # handle -> why
+        self._repin_hooks: list[Callable[[Hashable, int], None]] = []
+        self.stats = {"promoted": 0, "lost": 0, "migrated": 0,
+                      "backfilled": 0, "stale_resolved": 0, "freed": 0}
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, ptr: BufferPtr, shape, dtype,
+                 replicas=(), session: Hashable | None = None) -> BufferPtr:
+        rec = BufferRecord(
+            handle=ptr.handle, primary=ptr.node,
+            replicas=tuple(int(r) for r in replicas), epoch=0,
+            nbytes=ptr.nbytes, shape=tuple(int(d) for d in shape),
+            dtype=str(dtype), session=session,
+        )
+        with self._lock:
+            self._records[ptr.handle] = rec
+        return rec.ptr()
+
+    def on_repin(self, cb: Callable[[Hashable, int], None]) -> None:
+        self._repin_hooks.append(cb)
+
+    # -- lookup / resolution -----------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def empty(self) -> bool:
+        """True when a submit-path resolution pass cannot possibly matter:
+        nothing tracked AND nothing lost (a lost handle must still raise)."""
+        return not self._records and not self._lost
+
+    def lookup(self, handle: int) -> BufferRecord | None:
+        """Snapshot of a buffer's current record (promotion/migration keep
+        mutating the live entry — callers get a stable copy)."""
+        with self._lock:
+            rec = self._records.get(int(handle))
+            return None if rec is None else dataclasses.replace(rec)
+
+    def lost_reason(self, handle: int) -> str | None:
+        with self._lock:
+            return self._lost.get(int(handle))
+
+    def resolve(self, ptr: BufferPtr) -> BufferPtr:
+        """Current pointer for ``ptr``'s buffer.  A stale epoch is rewritten
+        to the live primary; an unknown handle passes through untouched (the
+        directory only speaks for buffers it registered); a lost buffer
+        raises — callers get a diagnosis, not a dangling-handle error on
+        some arbitrary node."""
+        with self._lock:
+            rec = self._records.get(ptr.handle)
+            if rec is None:
+                why = self._lost.get(ptr.handle)
+                if why is not None:
+                    raise OffloadError(
+                        f"buffer {ptr.handle:#x} lost: {why} (no replica held "
+                        "its bytes; allocate with replicas>=1 to survive a "
+                        "crash)"
+                    )
+                return ptr
+            if ptr.epoch == rec.epoch and ptr.node == rec.primary:
+                return ptr
+            self.stats["stale_resolved"] += 1
+            return rec.ptr()
+
+    def resolve_args(self, args, target: int | None = None):
+        """Rewrite every ``BufferPtr`` in a shallow pytree of call args.
+
+        Each pointer resolves to its *current* placement; when ``target`` is
+        given and holds a copy (primary OR replica), the hint is retargeted
+        at ``target`` so the receiving node's own-address-space dereference
+        check passes — this is what lets locality routing serve a read from
+        any live replica.  Returns ``(new_args, changed)``; the original
+        structure is returned untouched when nothing needed rewriting.
+
+        Containers are descended to the same (practically unbounded) depth
+        ``scan_locality`` walks — a pointer deep enough to vote must also be
+        deep enough to rewrite, or locality routing would ship a frame whose
+        hint fails the holder's own-address-space check.
+        """
+
+        def walk(v, depth=0):
+            if isinstance(v, BufferPtr):
+                rec = self.lookup(v.handle)
+                if rec is None:
+                    return self.resolve(v)  # raises for lost buffers
+                node = target if (target is not None and target in rec.holders) \
+                    else rec.primary
+                if v.node == node and v.epoch == rec.epoch:
+                    return v
+                self.stats["stale_resolved"] += v.epoch != rec.epoch
+                return v.at(node, rec.epoch)
+            if depth >= 32:  # cycle/pathology guard, not a design limit
+                return v
+            if isinstance(v, (list, tuple)):
+                out = [walk(i, depth + 1) for i in v]
+                if all(a is b for a, b in zip(out, v)):
+                    return v
+                return type(v)(out)
+            if isinstance(v, dict):
+                out = {k: walk(i, depth + 1) for k, i in v.items()}
+                if all(out[k] is v[k] for k in v):
+                    return v
+                return out
+            return v
+
+        new = tuple(walk(a) for a in args)
+        changed = any(a is not b for a, b in zip(new, args))
+        return (new if changed else tuple(args)), changed
+
+    def locality_resolver(self, value):
+        """``scan_locality`` resolver: a registered buffer votes for EVERY
+        live holder (any copy can serve a read), nbytes-weighted; unknown
+        values fall back to the codec's single-node hint (return None)."""
+        if not isinstance(value, BufferPtr):
+            return None
+        rec = self.lookup(value.handle)
+        if rec is None:
+            return None
+        w = max(1, rec.nbytes)
+        return {n: w for n in rec.holders}
+
+    # -- placement mutation (epoch bumps) ----------------------------------
+
+    def set_primary(self, handle: int, node: int) -> BufferPtr:
+        """Move a buffer's primary (drain migration); bumps the epoch."""
+        with self._lock:
+            rec = self._records[int(handle)]
+            if node != rec.primary:
+                rec.replicas = tuple(
+                    r for r in rec.replicas if r != node
+                )
+                rec.primary, rec.epoch = int(node), rec.epoch + 1
+                self.stats["migrated"] += 1
+            return rec.ptr()
+
+    def remove_replica(self, handle: int, node: int) -> None:
+        """Forget one replica (its copy failed to update or its node is
+        unreachable): a holder that may be stale must never be promoted."""
+        with self._lock:
+            rec = self._records.get(int(handle))
+            if rec is not None and node in rec.replicas:
+                rec.replicas = tuple(r for r in rec.replicas if r != node)
+
+    def add_replica(self, handle: int, node: int) -> None:
+        with self._lock:
+            rec = self._records.get(int(handle))
+            if rec is not None and node != rec.primary \
+                    and node not in rec.replicas:
+                rec.replicas = (*rec.replicas, int(node))
+                self.stats["backfilled"] += 1
+
+    def detach_node(self, node: int) -> None:
+        """Forget ``node`` as a holder everywhere (it left cleanly; its
+        primaries must already have been migrated off)."""
+        with self._lock:
+            for rec in self._records.values():
+                if node in rec.replicas:
+                    rec.replicas = tuple(r for r in rec.replicas if r != node)
+
+    def primaries_on(self, node: int) -> list[BufferRecord]:
+        with self._lock:
+            return [dataclasses.replace(r) for r in self._records.values()
+                    if r.primary == node]
+
+    def replicas_on(self, node: int) -> list[BufferRecord]:
+        with self._lock:
+            return [dataclasses.replace(r) for r in self._records.values()
+                    if node in r.replicas]
+
+    def under_replicated(self, factor: int, live: set[int]) -> list[BufferRecord]:
+        """Records holding fewer than ``factor`` live replicas (join-time
+        lazy backfill scans this)."""
+        with self._lock:
+            return [
+                dataclasses.replace(r) for r in self._records.values()
+                if len([n for n in r.replicas if n in live]) < factor
+            ]
+
+    # -- crash promotion ---------------------------------------------------
+
+    def on_node_death(self, node: int) -> dict[int, int]:
+        """Metadata-only failover for every buffer ``node`` held.  Returns
+        ``{handle: new_primary}`` for the promoted buffers; buffers with no
+        surviving replica are recorded lost.  Fires ``on_repin`` hooks (see
+        class docs) after the lock is released."""
+        moved: dict[int, int] = {}
+        sessions: set = set()
+        with self._lock:
+            for handle, rec in list(self._records.items()):
+                if rec.primary == node:
+                    live_reps = [r for r in rec.replicas if r != node]
+                    if live_reps:
+                        rec.primary = min(live_reps)
+                        rec.replicas = tuple(
+                            r for r in live_reps if r != rec.primary
+                        )
+                        rec.epoch += 1
+                        moved[handle] = rec.primary
+                        self.stats["promoted"] += 1
+                        if rec.session is not None:
+                            sessions.add(rec.session)
+                    else:
+                        del self._records[handle]
+                        self._lost[handle] = f"primary node {node} died"
+                        self.stats["lost"] += 1
+                elif node in rec.replicas:
+                    rec.replicas = tuple(r for r in rec.replicas if r != node)
+        for key in sessions:
+            self._fire_repin(key)
+        return moved
+
+    # -- sessions ----------------------------------------------------------
+
+    def bind_session(self, handle: int, session: Hashable) -> None:
+        with self._lock:
+            rec = self._records.get(int(handle))
+            if rec is not None:
+                rec.session = session
+
+    def session_records(self, session: Hashable) -> list[BufferRecord]:
+        with self._lock:
+            return [dataclasses.replace(r) for r in self._records.values()
+                    if r.session == session]
+
+    def session_home(self, session: Hashable) -> int | None:
+        """Node holding the most bytes of a session's buffers (primary
+        placement) — where the session should live."""
+        votes: dict[int, int] = {}
+        for rec in self.session_records(session):
+            votes[rec.primary] = votes.get(rec.primary, 0) + max(1, rec.nbytes)
+        if not votes:
+            return None
+        return max(votes, key=lambda n: (votes[n], -n))
+
+    def _fire_repin(self, session: Hashable) -> None:
+        home = self.session_home(session)
+        if home is None:
+            return
+        for cb in self._repin_hooks:
+            try:
+                cb(session, home)
+            except Exception:  # noqa: BLE001 — a bad subscriber must not
+                # stop failover for the remaining sessions
+                import traceback
+
+                traceback.print_exc()
+
+    def repin_sessions_moved(self, handles) -> None:
+        """Fire repin hooks for the sessions of explicitly moved buffers
+        (drain migration calls this after its copies land)."""
+        sessions = set()
+        with self._lock:
+            for h in handles:
+                rec = self._records.get(int(h))
+                if rec is not None and rec.session is not None:
+                    sessions.add(rec.session)
+        for key in sessions:
+            self._fire_repin(key)
+
+    # -- free --------------------------------------------------------------
+
+    def mark_lost(self, handle: int, why: str) -> None:
+        """Record a buffer unrecoverable (e.g. its drain-migration copy
+        failed and its only holder is being retired): the record is dropped
+        and later resolves raise the diagnosis instead of routing at a
+        retired node."""
+        with self._lock:
+            if self._records.pop(int(handle), None) is not None:
+                self._lost[int(handle)] = why
+                self.stats["lost"] += 1
+
+    def drop(self, handle: int) -> BufferRecord | None:
+        """Forget a buffer (it is being freed); returns the final record so
+        the caller can invalidate the remaining holders."""
+        with self._lock:
+            rec = self._records.pop(int(handle), None)
+            if rec is not None:
+                self.stats["freed"] += 1
+            return rec
+
+    def live_handles(self) -> list[int]:
+        with self._lock:
+            return sorted(self._records)
+
+    def lost_handles(self) -> list[int]:
+        with self._lock:
+            return sorted(self._lost)
+
+
+# --------------------------------------------------------------------------
+# control handlers (dynamic payloads; registered at import = static init)
+# --------------------------------------------------------------------------
+
+
+def _h_buf_adopt(handle, shape, dtype):
+    """Install an empty copy of a foreign buffer under its global handle
+    (replica creation / migration target); the bytes follow over the
+    ordinary chunked ``_ham/put`` path."""
+    from repro.offload.runtime import current_node
+
+    current_node().buffers.adopt_empty(int(handle), shape, dtype)
+    return None
+
+
+def _h_buf_invalidate(handle):
+    """Drop this node's copy of a buffer (idempotent — an invalidate may
+    race a local free; both outcomes are 'copy gone')."""
+    from repro.offload.runtime import current_node
+
+    return current_node().buffers.discard(int(handle))
+
+
+def _h_buf_count():
+    """This node's live buffer count — lets tests and benchmarks assert
+    cluster-wide replica hygiene (no leaks after free/session end)."""
+    from repro.offload.runtime import current_node
+
+    return current_node().buffers.live_count()
+
+
+def _h_buf_freed(node_id, handle):
+    """Host-side half of worker-initiated frees: a worker that freed its
+    copy announces it here (oneway); the directory drops the record and the
+    remaining holders get ``_ham/buf_invalidate`` oneways, keeping
+    ``live_count`` truthful cluster-wide."""
+    from repro.core.closure import Function
+    from repro.offload.runtime import current_node
+
+    node = current_node()
+    directory = getattr(node, "buffer_directory", None)
+    if directory is None:
+        return None
+    rec = directory.drop(int(handle))
+    if rec is None:  # already dropped (e.g. a host-side free raced us)
+        return None
+    record = node.table.record_of("_ham/buf_invalidate")
+    for holder in rec.holders:
+        if holder == int(node_id):
+            continue  # the announcer already dropped its copy
+        try:
+            node.send_oneway(holder, Function(record, (int(handle),)))
+        except Exception:  # noqa: BLE001 — best effort; the holder may be
+            # mid-removal, and a leaked replica is recovered at its teardown
+            pass
+    return None
+
+
+def register_dataplane_handlers(registry=None) -> None:
+    """Register the ``_ham/buf_*`` control plane.  Safe to call repeatedly;
+    silently skipped on an already-sealed registry (as with the cluster
+    handlers — then callers must have registered these before ``init()``)."""
+    from repro.core.registry import default_registry
+
+    reg = registry or default_registry()
+    for name, fn in (
+        ("_ham/buf_adopt", _h_buf_adopt),
+        ("_ham/buf_invalidate", _h_buf_invalidate),
+        ("_ham/buf_count", _h_buf_count),
+        ("_ham/buf_freed", _h_buf_freed),
+    ):
+        try:
+            reg.register(fn, name=name)
+        except RegistrySealedError:
+            return
+
+
+register_dataplane_handlers()

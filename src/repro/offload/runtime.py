@@ -187,7 +187,9 @@ def _h_alloc(shape, dtype):
 
 
 def _h_free(node_id, handle):
-    current_node().buffers.free(BufferPtr(node_id, handle))
+    node = current_node()
+    node.buffers.free(BufferPtr(node_id, handle))
+    node._announce_buffer_freed(handle)
     return None
 
 
@@ -300,6 +302,10 @@ class NodeRuntime:
         self._depth_last_sent = 0
         self._depth_last_t = 0.0
         self._batch_remaining = 0                # frames left in current drain
+        #: host only: the cluster's BufferDirectory (set by ClusterPool) —
+        #: _ham/buf_freed and local frees report here so replicas are
+        #: invalidated cluster-wide (see repro.offload.dataplane)
+        self.buffer_directory = None
 
     # -- queue-depth feedback ----------------------------------------------
 
@@ -364,6 +370,39 @@ class NodeRuntime:
             return
         self._depth_last_sent = depth
         self._depth_last_t = now
+
+    # -- data-plane hygiene --------------------------------------------------
+
+    def _announce_buffer_freed(self, handle: int) -> None:
+        """Cluster-wide free hygiene (dataplane module docs): after this
+        node drops a buffer copy, whoever tracks the directory must drop
+        the record and invalidate the remaining replicas — otherwise
+        ``live_count`` lies and replicas leak.  On the directory holder
+        (the host) this runs in-process; a worker sends its depth-report
+        destination (the host) a ``_ham/buf_freed`` oneway.  A no-op in
+        non-cluster domains (no directory, no report destination)."""
+        if self.buffer_directory is not None:
+            from repro.offload.dataplane import _h_buf_freed
+
+            token = _current_node.set(self)
+            try:
+                _h_buf_freed(self.node_id, handle)
+            finally:
+                _current_node.reset(token)
+            return
+        if self._depth_dst is None:
+            return
+        try:
+            record = self.table.record_of("_ham/buf_freed")
+        except Exception:  # noqa: BLE001 — table without the dataplane set
+            return
+        try:
+            self.send_oneway(
+                self._depth_dst, Function(record, (self.node_id, int(handle)))
+            )
+        except Exception:  # noqa: BLE001 — advisory traffic; the directory
+            # reconciles at the holder's teardown
+            pass
 
     # -- sending ------------------------------------------------------------
 

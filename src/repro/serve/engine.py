@@ -225,9 +225,9 @@ def _h_serve_admit(prompt, rid, max_new_tokens, temperature):
 
     eng = _NODE_ENGINES.get(id(current_node()))
     if eng is None:
-        # e.g. a session re-placed onto a worker added after the engine was
-        # built (replicas are created at construction — ROADMAP names
-        # serving-replica elasticity as the follow-on)
+        # the replica was retired (node mid-removal) or never built (a
+        # non-local worker mode) — fail diagnosably; the driver only admits
+        # through serving_nodes(), so reaching this is a routing bug
         raise OffloadError("no serving-engine replica on this worker")
     free = eng.free_slots()
     if not free:
@@ -284,11 +284,27 @@ class ClusterServingEngine:
     rendezvous hash over the workers *with a free slot* at admission time,
     then pinned — every subsequent call for that request lands on the
     worker holding its KV cache, and an unrelated pool resize cannot move
-    it (the stickiness contract in ``repro.cluster.sessions``).  This
-    replaces the ad-hoc admission-time placement the engine used to
-    hand-roll; the engine's slot accounting stays its own (the router knows
-    placement, not capacity).  Engine replicas are created for the pool's
-    workers at construction; a completed request ends its session.
+    it (the stickiness contract in ``repro.cluster.sessions``).  The
+    engine's slot accounting stays its own (the router knows placement,
+    not capacity).
+
+    **Serving elasticity** (ROADMAP): engine replicas follow pool
+    membership, not construction — ``on_join``/``on_restart`` build a
+    replica for the newcomer, ``on_leave``/``on_death`` retire it (a
+    drained removal drops the replica only after the node's in-flight
+    steps finish), so serving survives ``pool.add_node()`` /
+    ``pool.remove_node()`` mid-run and newly added capacity takes
+    admissions immediately.
+
+    **Session recovery**: the host is the system of record for every
+    admitted request (prompt + every emitted token), which makes a
+    worker's KV state *reconstructible*: when a worker dies mid-decode,
+    :meth:`run` re-admits its requests on a survivor with the
+    concatenated ``prompt + tokens-so-far`` as the new prefill — the
+    session re-places (its old pin died), decode continues exactly where
+    it stopped, and no emitted token is lost.  A completed request ends
+    its session through ``Scheduler.end_session`` (which also releases
+    any directory-tracked buffers bound to it).
     """
 
     def __init__(self, model, params, *, num_workers: int = 2,
@@ -307,80 +323,173 @@ class ClusterServingEngine:
             registry.init()
         self.registry = registry
         self.slots_per_worker = slots_per_worker
+        self._model, self._params = model, params
+        self._max_len, self._seed = max_len, seed
         self.pool = ClusterPool.local(num_workers, registry=registry)
         self.sched = Scheduler(self.pool, policy="least_outstanding",
                                max_inflight=slots_per_worker + 2)
-        self._engine_keys: list[int] = []
-        for i, node in enumerate(self.pool.worker_nodes):
-            rt = self.pool.domain._inproc[node]
-            _NODE_ENGINES[id(rt)] = ServingEngine(
-                model, params, num_slots=slots_per_worker, max_len=max_len,
-                seed=seed + i,
-            )
-            self._engine_keys.append(id(rt))
+        self._engine_keys: dict[int, int] = {}  # node -> id(runtime)
+        for node in self.pool.worker_nodes:
+            self._add_replica(node)
+        # serving elasticity: replicas track membership from here on
+        self.pool.on_join(self._add_replica)
+        self.pool.on_restart(self._add_replica)
+        self.pool.on_death(self._drop_replica)
+        self.pool.on_leave(self._on_leave)
+
+    # -- replica lifecycle (elasticity contract in the class docs) ---------
+
+    def _add_replica(self, node: int) -> None:
+        rt = self.pool.domain._inproc.get(node)
+        if rt is None:
+            return  # non-local worker modes build engines worker-side
+        self._drop_replica(node)  # a restarted node gets a fresh engine
+        _NODE_ENGINES[id(rt)] = ServingEngine(
+            self._model, self._params, num_slots=self.slots_per_worker,
+            max_len=self._max_len, seed=self._seed + node,
+        )
+        self._engine_keys[node] = id(rt)
+
+    def _drop_replica(self, node: int) -> None:
+        key = self._engine_keys.pop(node, None)
+        if key is not None:
+            _NODE_ENGINES.pop(key, None)
+
+    def _on_leave(self, node: int):
+        # retire the replica only AFTER the scheduler's drain waiter let the
+        # node's in-flight steps finish (waiters run in subscription order;
+        # the scheduler subscribed first)
+        def waiter(timeout: float | None = None) -> None:
+            self._drop_replica(node)
+
+        return waiter
+
+    def serving_nodes(self) -> list[int]:
+        """Live workers that currently hold an engine replica."""
+        live = set(self.sched.live_nodes())
+        return sorted(n for n in self._engine_keys if n in live)
 
     def run(self, requests: list[Request],
             timeout: float = 300.0) -> dict[int, list[int]]:
-        """Serve ``requests`` to completion, pipelining across workers.
+        """Serve ``requests`` to completion, pipelining across workers;
+        survives pool resizes and worker deaths mid-run (class docs).
         ``timeout`` bounds the whole drive loop."""
         import queue as _queue
         import time
 
         from repro.core.closure import f2f
+        from repro.core.errors import OffloadError
 
         for i, r in enumerate(requests):
             if r.rid < 0:
                 r.rid = i
-        nodes = self.pool.worker_nodes
         pending = list(requests)
         outputs: dict[int, list[int]] = {}
+        budget = {r.rid: r.max_new_tokens for r in requests}
+        temp = {r.rid: r.temperature for r in requests}
+        prompt0 = {r.rid: np.asarray(r.prompt, np.int32) for r in requests}
+        placed: dict[int, int] = {}  # rid -> node currently decoding it
         # per-node occupancy: `active` is ground truth as of the last reply
         # from that node; `queued` counts admits submitted but unconfirmed
-        active = {n: 0 for n in nodes}
-        queued = {n: 0 for n in nodes}
-        stepping = {n: False for n in nodes}
-        inflight: dict[Future, tuple[str, int]] = {}
+        active: dict[int, int] = {}
+        queued: dict[int, int] = {}
+        stepping: dict[int, bool] = {}
+        inflight: dict[Future, tuple[str, int, int | None]] = {}
         # one persistent completion queue for the whole drive: every
         # submitted future pushes itself here exactly once when done
         done_q: _queue.SimpleQueue = _queue.SimpleQueue()
         deadline = time.monotonic() + timeout
         reg = self.registry
 
-        def track(fut: Future, kind: str, node: int) -> None:
-            inflight[fut] = (kind, node)
+        def track(fut: Future, kind: str, node: int,
+                  rid: int | None = None) -> None:
+            inflight[fut] = (kind, node, rid)
             fut.add_done_callback(done_q.put)
 
+        def requeue(rid: int) -> None:
+            """Continuation admit: prefill of prompt + tokens-so-far picks
+            up decode exactly where the dead worker stopped."""
+            done_toks = outputs.get(rid, [])
+            remaining = budget[rid] - len(done_toks)
+            if remaining <= 0:
+                return  # finished just before the crash
+            pending.append(Request(
+                prompt=np.concatenate(
+                    [prompt0[rid], np.asarray(done_toks, np.int32)]
+                ),
+                max_new_tokens=remaining,
+                temperature=temp[rid],
+                rid=rid,
+            ))
+
+        def recover_node(node: int) -> None:
+            """A serving node died: its replica's KV is gone, but the host
+            holds prompt + every emitted token — re-queue its requests as
+            continuation admits on a survivor."""
+            active[node] = 0
+            queued[node] = 0
+            stepping[node] = False
+            for rid in [r for r, n in placed.items() if n == node]:
+                placed.pop(rid, None)
+                requeue(rid)
+
         while pending or inflight or any(active.values()):
+            nodes = self.serving_nodes()
+            # death sweep: a victim with NO call in flight produces no
+            # failed future (its last step reply may have been processed
+            # before the monitor marked it dead) — reap by state, not only
+            # by exception, or its requests would be orphaned silently
+            busy = set(placed.values()) \
+                | {n for n, a in active.items() if a} \
+                | {n for n, q in queued.items() if q}
+            for node in busy - set(nodes):
+                if not (self.pool.is_alive(node)
+                        and node in self._engine_keys):
+                    recover_node(node)
             # admission: place each request's session once (rendezvous hash
             # over workers with a free slot), then submit THROUGH the router
             # so the admit sticks to the placement
-            while pending:
-                free = [n for n in nodes
-                        if active[n] + queued[n] < self.slots_per_worker]
+            while pending and nodes:
+                free = [
+                    n for n in nodes
+                    if active.get(n, 0) + queued.get(n, 0)
+                    < self.slots_per_worker
+                ]
                 if not free:
                     break
                 req = pending[0]
                 node = self.sched.sessions.route(
                     f"serve/{req.rid}", eligible=free
                 )
-                if node is None:
-                    break  # no live worker with a free slot
+                if node is None or node not in free:
+                    # a live pin outranks eligible=; if the pinned worker is
+                    # full, wait for a slot there instead of splitting KV
+                    break
                 pending.pop(0)
-                queued[node] += 1
+                queued[node] = queued.get(node, 0) + 1
                 track(self.sched.submit(
                     f2f("_serve/admit", np.asarray(req.prompt, np.int32),
                         int(req.rid), int(req.max_new_tokens),
                         float(req.temperature), registry=reg),
                     session=f"serve/{req.rid}",
-                ), "admit", node)
+                ), "admit", node, req.rid)
             for node in nodes:
-                if (active[node] or queued[node]) and not stepping[node]:
+                if (active.get(node, 0) or queued.get(node, 0)) \
+                        and not stepping.get(node, False):
                     stepping[node] = True
                     track(self.sched.submit(
                         f2f("_serve/step", registry=reg), node=node,
                     ), "step", node)
             if not inflight:
-                break
+                if pending and not self.serving_nodes():
+                    raise OffloadError(
+                        "no live serving workers remain for "
+                        f"{len(pending)} pending requests"
+                    )
+                if not pending:
+                    break
+                time.sleep(0.02)  # pinned worker full: wait for a slot
+                continue
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 raise TimeoutError(
@@ -394,23 +503,50 @@ class ClusterServingEngine:
                     f"cluster serve exceeded {timeout}s with "
                     f"{len(inflight)} calls in flight"
                 ) from None
-            kind, node = inflight.pop(done)
+            kind, node, rid = inflight.pop(done)
+            try:
+                result = done.get(0)
+            except Exception:
+                # a dead/removed worker fails its in-flight calls; anything
+                # else (slot bug, handler error) must surface.  Liveness is
+                # checked at the pool (marked dead before futures fail), not
+                # via serving_nodes(): the replica-drop callback may still
+                # be a few callbacks behind the future rejection.
+                if self.pool.is_alive(node) and node in self._engine_keys:
+                    raise
+                recover_node(node)
+                if kind == "admit" and rid is not None and rid not in placed:
+                    # the admit itself died in flight: its request is in no
+                    # placed map — re-queue it explicitly
+                    requeue(rid)
+                continue
             if kind == "admit":
-                rid, first = done.get(0)
-                queued[node] -= 1
-                active[node] += 1
-                outputs[rid] = [first]
+                rid, first = result
+                queued[node] = queued.get(node, 0) - 1
+                active[node] = active.get(node, 0) + 1
+                placed[rid] = node
+                # a recovery re-admit continues an existing transcript
+                outputs.setdefault(rid, []).append(first)
+                if len(outputs[rid]) >= budget[rid]:
+                    placed.pop(rid, None)
             else:
                 stepping[node] = False
-                emitted, free = done.get(0)
+                emitted, free = result
                 active[node] = self.slots_per_worker - free
                 for rid, tok in emitted:
-                    outputs[rid].append(tok)
+                    # the slot-remaining accounting emits one trailing token
+                    # for a single-token (re-)admission — cap the transcript
+                    # at its budget so a continuation cannot over-emit
+                    if len(outputs[rid]) < budget[rid]:
+                        outputs[rid].append(tok)
+                    if len(outputs[rid]) >= budget[rid]:
+                        placed.pop(rid, None)
         for r in requests:  # sessions end with their requests
-            self.sched.sessions.end_session(f"serve/{r.rid}")
+            self.sched.end_session(f"serve/{r.rid}")
         return outputs
 
     def close(self) -> None:
-        for key in self._engine_keys:
+        for key in list(self._engine_keys.values()):
             _NODE_ENGINES.pop(key, None)
+        self._engine_keys.clear()
         self.pool.close()

@@ -1,0 +1,392 @@
+"""Location-transparent data plane: directory, epochs, replication,
+crash promotion, session repin, lossless drain migration, free hygiene."""
+
+import time
+
+import numpy as np
+import pytest
+
+import repro.cluster.pool  # noqa: F401 — registers _cluster/* + _ham/buf_*
+from repro.cluster import BufferDirectory, ClusterPool, Scheduler, gather
+from repro.cluster.pool import register_cluster_handlers
+from repro.core.closure import f2f
+from repro.core.errors import OffloadError
+from repro.core.registry import HandlerRegistry, default_registry
+from repro.offload.buffer import BufferPtr, BufferRegistry, handle_minter
+from repro.offload.runtime import register_internal_handlers
+
+
+def _registry():
+    reg = HandlerRegistry()
+    register_internal_handlers(reg)
+    register_cluster_handlers(reg)  # includes the _ham/buf_* dataplane set
+    reg.init()
+    return reg
+
+
+@pytest.fixture
+def pool():
+    p = ClusterPool.local(3, registry=_registry(), replicas=1)
+    yield p
+    p.close()
+
+
+def _wait_dead(sched, node, timeout=10.0):
+    deadline = time.time() + timeout
+    while node in sched.live_nodes() and time.time() < deadline:
+        time.sleep(0.02)
+    assert node not in sched.live_nodes()
+
+
+# -- registry-level pieces ----------------------------------------------------
+
+
+def test_global_handles_are_node_namespaced():
+    a, b = BufferRegistry(1), BufferRegistry(2)
+    pa = a.allocate((4,), "float64")
+    pb = b.allocate((4,), "float64")
+    assert pa.handle != pb.handle
+    assert handle_minter(pa.handle) == 1 and handle_minter(pb.handle) == 2
+
+
+def test_adopt_installs_foreign_handle_and_discard_is_idempotent():
+    owner, replica = BufferRegistry(1), BufferRegistry(2)
+    ptr = owner.allocate((8,), "float32")
+    replica.adopt_empty(ptr.handle, (8,), "float32")
+    assert replica.holds(ptr.handle)
+    # the replica derefs through a pointer retargeted at itself
+    view = replica.deref(ptr.at(2))
+    assert view.shape == (8,)
+    assert replica.discard(ptr.handle) is True
+    assert replica.discard(ptr.handle) is False  # idempotent
+    assert replica.live_count() == 0
+
+
+# -- directory unit behaviour -------------------------------------------------
+
+
+def test_directory_resolves_stale_epoch_and_promotes():
+    d = BufferDirectory()
+    ptr = BufferPtr(1, 101, 64, 0)
+    out = d.register(ptr, (8,), "float64", replicas=(2, 3))
+    assert out == ptr and len(d) == 1
+    assert d.resolve(ptr) is ptr  # current pointer passes through untouched
+    moved = d.on_node_death(1)
+    assert moved == {101: 2}  # lowest-id replica promoted
+    fresh = d.resolve(ptr)
+    assert (fresh.node, fresh.epoch) == (2, 1)
+    assert d.lookup(101).replicas == (3,)
+    # a second promotion bumps again
+    assert d.on_node_death(2) == {101: 3}
+    assert d.resolve(ptr).epoch == 2
+    # pointer minted at epoch 1 is also stale now
+    assert d.resolve(fresh).node == 3
+
+
+def test_directory_records_lost_buffers_loudly():
+    d = BufferDirectory()
+    ptr = d.register(BufferPtr(1, 7, 16, 0), (2,), "float64")
+    assert d.on_node_death(1) == {}
+    assert d.lost_handles() == [7]
+    with pytest.raises(OffloadError, match="lost"):
+        d.resolve(ptr)
+    with pytest.raises(OffloadError, match="replicas>=1"):
+        d.resolve_args((ptr,))
+
+
+def test_directory_retargets_args_at_any_holder():
+    d = BufferDirectory()
+    ptr = d.register(BufferPtr(1, 9, 32, 0), (4,), "float64", replicas=(2,))
+    # target holds a replica: pointer retargeted there
+    (out,), changed = d.resolve_args((ptr,), target=2)
+    assert changed and out.node == 2 and out.epoch == 0
+    # non-holder target: pointer resolves to the primary
+    (out,), changed = d.resolve_args((ptr,), target=3)
+    assert not changed and out.node == 1
+    # nested containers are rewritten too (one structure level deep)
+    (lst, scalar), changed = d.resolve_args(([ptr, 5], 7), target=2)
+    assert changed and lst[0].node == 2 and lst[1] == 5 and scalar == 7
+    # untracked pointers pass through
+    stranger = BufferPtr(9, 999, 8, 0)
+    (out,), changed = d.resolve_args((stranger,), target=2)
+    assert not changed and out is stranger
+
+
+def test_directory_locality_resolver_votes_for_all_holders():
+    d = BufferDirectory()
+    ptr = d.register(BufferPtr(1, 5, 100, 0), (100,), "uint8",
+                     replicas=(2, 3))
+    votes = d.locality_resolver(ptr)
+    assert votes == {1: 100, 2: 100, 3: 100}
+    assert d.locality_resolver("not a ptr") is None
+    assert d.locality_resolver(BufferPtr(4, 404, 8, 0)) is None
+
+
+# -- pool-level replication + crash recovery ---------------------------------
+
+
+def test_write_through_put_and_replica_promotion_keeps_data(pool):
+    sched = Scheduler(pool)
+    arr = np.arange(256.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.primary == 1 and len(rec.replicas) == 1
+    pool.put(arr, ptr)
+    pool.kill(1)
+    _wait_dead(sched, 1)
+    rec2 = pool.directory.lookup(ptr.handle)
+    assert rec2.primary == rec.replicas[0] and rec2.epoch == 1
+    # the STALE pointer still reads the full data, transparently
+    np.testing.assert_array_equal(pool.get(ptr), arr)
+    assert pool.directory.stats["promoted"] == 1
+    assert pool.directory.stats["lost"] == 0
+
+
+def test_kill_worker_mid_stream_sessions_replace_onto_replica_holder():
+    """The PR's acceptance property: kill a worker holding replicated
+    buffers while a session stream is running; zero buffers lost, its
+    sessions resume ON the replica holder, stale-epoch pointers re-resolve
+    transparently."""
+    pool = ClusterPool.local(3, registry=_registry(), replicas=1)
+    try:
+        sched = Scheduler(pool, max_inflight=8)
+        reg = pool.domain.registry
+        arrs, ptrs = {}, {}
+        for i in range(6):
+            key = f"sess-{i}"
+            arr = np.arange(64.0) + i
+            ptr = pool.allocate(arr.shape, "float64", session=key)
+            pool.put(arr, ptr)
+            arrs[key], ptrs[key] = arr, ptr
+            # first submit pins the session at its buffer's home
+            assert sched.submit(
+                f2f("_cluster/touch", ptr, registry=reg), session=key
+            ).get(10) == arr.sum()
+        placement = {k: sched.sessions.lookup(k) for k in ptrs}
+        for k, ptr in ptrs.items():
+            assert placement[k] == pool.directory.lookup(ptr.handle).primary
+        victim = placement["sess-0"]
+        victims = [k for k, n in placement.items() if n == victim]
+        expected_home = {
+            k: pool.directory.lookup(ptrs[k].handle).replicas[0]
+            for k in victims
+        }
+        # keep a stream of session traffic running through the kill
+        streaming = [
+            sched.submit(f2f("_cluster/sleep", 0.05, registry=reg),
+                         session=k)
+            for k in ptrs for _ in range(2)
+        ]
+        pool.kill(victim)
+        _wait_dead(sched, victim)
+        # ZERO lost buffers; the victim's buffers promoted onto replicas
+        assert pool.directory.stats["lost"] == 0
+        assert pool.directory.lost_handles() == []
+        # its sessions were re-pinned onto the nodes now holding their data
+        for k in victims:
+            assert sched.sessions.lookup(k) == expected_home[k]
+        # unaffected sessions never moved
+        for k in ptrs:
+            if k not in victims:
+                assert sched.sessions.lookup(k) == placement[k]
+        # the stream continues: every session still reaches ITS data with
+        # the ORIGINAL (now stale-epoch) pointers
+        for k, ptr in ptrs.items():
+            fut = sched.submit(f2f("_cluster/touch", ptr, registry=reg),
+                               session=k)
+            assert fut.get(10) == arrs[k].sum()
+            np.testing.assert_array_equal(pool.get(ptr), arrs[k])
+        for f in streaming:
+            try:
+                f.get(10)
+            except Exception:  # noqa: BLE001 — in-flight calls on the
+                pass  # victim legitimately fail; sessions re-placed after
+        assert sched.sessions.stats["recovered"] >= len(victims)
+    finally:
+        pool.close()
+
+
+def test_crash_without_replica_is_recorded_lost(pool):
+    sched = Scheduler(pool)
+    ptr = pool.allocate((16,), "float64", node=2, replicas=0)
+    pool.put(np.ones(16), ptr)
+    pool.kill(2)
+    _wait_dead(sched, 2)
+    assert ptr.handle in pool.directory.lost_handles()
+    with pytest.raises(OffloadError, match="lost"):
+        pool.get(ptr)
+    with pytest.raises(OffloadError, match="lost"):
+        sched.submit(f2f("_cluster/touch", ptr,
+                         registry=pool.domain.registry))
+
+
+def test_remove_node_drain_migrates_primaries_losslessly(pool):
+    sched = Scheduler(pool)
+    reg = pool.domain.registry
+    # one replicated buffer (promotion path: zero copy) and one
+    # replica-less buffer (stream path) homed on the leaving node
+    a = pool.allocate((32,), "float64", node=3, session="drain-a")
+    b = pool.allocate((1024,), "float64", node=3, replicas=0)
+    va, vb = np.arange(32.0), np.arange(1024.0)
+    pool.put(va, a)
+    pool.put(vb, b)
+    assert sched.submit(f2f("_cluster/touch", a, registry=reg),
+                        session="drain-a").get(10) == va.sum()
+    pool.remove_node(3, drain=True)
+    assert pool.directory.stats["lost"] == 0
+    for ptr, val in ((a, va), (b, vb)):
+        rec = pool.directory.lookup(ptr.handle)
+        assert rec.primary in sched.live_nodes() and rec.epoch == 1
+        np.testing.assert_array_equal(pool.get(ptr), val)
+    # the drained node's session followed its migrated buffer
+    assert sched.sessions.lookup("drain-a") == \
+        pool.directory.lookup(a.handle).primary
+    assert sched.submit(f2f("_cluster/touch", a, registry=reg),
+                        session="drain-a").get(10) == va.sum()
+
+
+def test_free_invalidates_replicas_and_live_count_is_truthful(pool):
+    ptr = pool.allocate((8,), "float64", node=1)
+    rec = pool.directory.lookup(ptr.handle)
+    replica = rec.replicas[0]
+    assert pool.buffer_count(1) == 1
+    assert pool.buffer_count(replica) == 1
+    pool.free(ptr)
+    assert pool.directory.lookup(ptr.handle) is None
+    for n in pool.live_nodes():
+        assert pool.buffer_count(n) == 0  # no replica leaks
+
+
+def test_worker_side_free_announces_and_invalidates_replicas(pool):
+    """A free executed ON a worker (not via pool.free) must still reach the
+    directory: the worker announces _ham/buf_freed, the host drops the
+    record and invalidates the other holders."""
+    ptr = pool.allocate((8,), "float64", node=1)
+    replica = pool.directory.lookup(ptr.handle).replicas[0]
+    # free at the primary through the plain paper-level data plane
+    pool.domain.free(ptr.at(1))
+    deadline = time.time() + 10
+    while pool.directory.lookup(ptr.handle) is not None \
+            and time.time() < deadline:
+        time.sleep(0.02)
+    assert pool.directory.lookup(ptr.handle) is None
+    deadline = time.time() + 10
+    while pool.buffer_count(replica) and time.time() < deadline:
+        time.sleep(0.02)
+    assert pool.buffer_count(replica) == 0
+
+
+def test_end_session_releases_bound_buffers_cluster_wide(pool):
+    sched = Scheduler(pool)
+    ptr = pool.allocate((8,), "float64", session="done-s")
+    pool.put(np.ones(8), ptr)
+    assert len(pool.directory) == 1
+    sched.end_session("done-s")
+    assert len(pool.directory) == 0
+    for n in pool.live_nodes():
+        assert pool.buffer_count(n) == 0
+    assert sched.sessions.lookup("done-s") is None
+
+
+def test_locality_votes_route_to_live_replica(pool):
+    """Locality policy must treat ANY live holder as local: with the
+    primary dead, a read routes to the surviving replica."""
+    sched = Scheduler(pool, policy="locality")
+    reg = pool.domain.registry
+    arr = np.arange(128.0)
+    ptr = pool.allocate(arr.shape, "float64", node=2)
+    pool.put(arr, ptr)
+    replica = pool.directory.lookup(ptr.handle).replicas[0]
+    pool.kill(2)
+    _wait_dead(sched, 2)
+    fut = sched.submit(f2f("_cluster/touch", ptr, registry=reg))
+    assert fut.get(10) == arr.sum()
+    assert sched.stats["routed"][replica] >= 1
+
+
+def test_join_backfills_under_replicated_buffers(pool):
+    sched = Scheduler(pool)
+    arr = np.arange(64.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    pool.put(arr, ptr)
+    replica = pool.directory.lookup(ptr.handle).replicas[0]
+    pool.kill(replica)  # the REPLICA dies: buffer is under-replicated
+    _wait_dead(sched, replica)
+    assert pool.directory.lookup(ptr.handle).replicas == ()
+    new = pool.add_node()  # lazy backfill restores the replication factor
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == (new,)
+    assert pool.directory.stats["backfilled"] >= 1
+    # the backfilled copy really holds the bytes: kill the primary, read
+    pool.kill(rec.primary)
+    _wait_dead(sched, rec.primary)
+    np.testing.assert_array_equal(pool.get(ptr), arr)
+
+
+# -- the same recovery story over a REAL process fabric ----------------------
+
+
+def _default_registry_ready():
+    reg = default_registry()
+    register_cluster_handlers(reg)
+    if not reg.initialised:
+        reg.init()
+    return reg
+
+
+@pytest.mark.fork
+def test_fork_kill_worker_with_replicated_buffers_recovers():
+    """Crash recovery across real process death: a forked shm worker
+    holding replicated buffers is killed mid-stream; its session re-places
+    onto the replica holder and the ORIGINAL stale pointer still reads the
+    data back intact over the wire."""
+    reg = _default_registry_ready()
+    pool = ClusterPool.shm(3, registry=reg, replicas=1)
+    try:
+        sched = Scheduler(pool, max_inflight=8)
+        pool.ping_all()
+        arr = np.arange(4096.0)
+        ptr = pool.allocate(arr.shape, "float64", node=1, session="fk")
+        pool.put(arr, ptr)
+        assert sched.submit(f2f("_cluster/touch", ptr, registry=reg),
+                            session="fk").get(20) == arr.sum()
+        assert sched.sessions.lookup("fk") == 1
+        replica = pool.directory.lookup(ptr.handle).replicas[0]
+        streaming = [sched.submit(f2f("_cluster/sleep", 0.05, registry=reg),
+                                  session="fk") for _ in range(4)]
+        pool.kill(1)
+        _wait_dead(sched, 1)
+        assert pool.directory.stats["lost"] == 0
+        assert sched.sessions.lookup("fk") == replica
+        rec = pool.directory.lookup(ptr.handle)
+        assert rec.primary == replica and rec.epoch == 1
+        np.testing.assert_array_equal(pool.get(ptr), arr)
+        assert sched.submit(f2f("_cluster/touch", ptr, registry=reg),
+                            session="fk").get(20) == arr.sum()
+        for f in streaming:
+            try:
+                f.get(10)
+            except Exception:  # noqa: BLE001 — in-flight on the corpse
+                pass
+    finally:
+        pool.close()
+
+
+@pytest.mark.fork
+def test_fork_remove_node_drain_is_lossless():
+    reg = _default_registry_ready()
+    pool = ClusterPool.shm(2, registry=reg, replicas=0)
+    try:
+        sched = Scheduler(pool)
+        pool.ping_all()
+        arr = np.arange(2048.0)
+        ptr = pool.allocate(arr.shape, "float64", node=2)
+        pool.put(arr, ptr)
+        pool.remove_node(2, drain=True)
+        assert sched.live_nodes() == [1]
+        rec = pool.directory.lookup(ptr.handle)
+        assert rec.primary == 1 and rec.epoch == 1
+        assert pool.directory.stats["lost"] == 0
+        np.testing.assert_array_equal(pool.get(ptr), arr)
+    finally:
+        pool.close()

@@ -121,10 +121,10 @@ def test_custom_codec_roundtrip():
 def test_buffer_ptr_is_fixed_size_static():
     from repro.offload.buffer import BufferPtr
 
-    ptr = BufferPtr(3, 42, 1024)
+    ptr = BufferPtr(3, 42, 1024, epoch=2)
     spec = mig.spec_of(ptr)
     payload = mig.pack_static((ptr,), (spec,))
-    assert len(payload) == 24  # node + handle + nbytes, all i64
+    assert len(payload) == 32  # node + handle + nbytes + epoch, all i64
     (out,) = mig.unpack_static(payload, (spec,))
     assert out == ptr
 

@@ -145,6 +145,84 @@ def test_cluster_serving_matches_single_engine_lengths(model_and_params):
     assert all(n > 0 for n in eng.sched.stats["routed"].values())
 
 
+@pytest.mark.slow
+def test_cluster_serving_survives_resize(model_and_params):
+    """Serving elasticity (ROADMAP): engine replicas follow pool membership
+    — a node added mid-life takes admissions, a drained removal retires its
+    replica, and serving continues across both."""
+    from repro.serve.engine import ClusterServingEngine
+
+    model, params = model_and_params
+    cfg = model.cfg
+    eng = ClusterServingEngine(model, params, num_workers=1,
+                               slots_per_worker=2, max_len=24)
+    try:
+        assert eng.serving_nodes() == [1]
+        new = eng.pool.add_node()
+        assert new in eng.serving_nodes()  # replica created on join
+        reqs = [
+            Request(prompt=np.arange(3 + i % 3) % cfg.vocab_size,
+                    max_new_tokens=3)
+            for i in range(6)
+        ]
+        out = eng.run(reqs)
+        assert {r: len(v) for r, v in out.items()} == {
+            i: 3 for i in range(6)
+        }
+        assert eng.sched.stats["routed"].get(new, 0) > 0  # newcomer served
+        eng.pool.remove_node(new, drain=True)
+        assert eng.serving_nodes() == [1]  # replica retired with the node
+        out2 = eng.run([
+            Request(prompt=np.arange(4) % cfg.vocab_size, max_new_tokens=2)
+        ])
+        assert len(out2[0]) == 2  # serving survived the shrink
+    finally:
+        eng.close()
+
+
+@pytest.mark.slow
+def test_cluster_serving_recovers_requests_from_dead_worker(model_and_params):
+    """Session recovery: kill a serving worker mid-decode; its requests
+    re-admit on the survivor from the host-held transcript (prompt +
+    tokens so far) and every request still reaches full length."""
+    import threading
+    import time
+
+    from repro.serve.engine import ClusterServingEngine
+
+    model, params = model_and_params
+    cfg = model.cfg
+    eng = ClusterServingEngine(model, params, num_workers=2,
+                               slots_per_worker=2, max_len=48)
+    killed = {}
+
+    def killer():
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            if eng.sched.stats["completed"] >= 6:  # mid-run, decode going
+                victim = eng.serving_nodes()[0]
+                eng.pool.kill(victim)
+                killed["node"] = victim
+                return
+            time.sleep(0.005)
+
+    t = threading.Thread(target=killer)
+    t.start()
+    try:
+        reqs = [
+            Request(prompt=np.arange(3 + i % 3) % cfg.vocab_size,
+                    max_new_tokens=10)
+            for i in range(6)
+        ]
+        out = eng.run(reqs, timeout=120)
+    finally:
+        t.join()
+        eng.close()
+    assert "node" in killed, "the kill must land mid-run"
+    assert sorted(out) == list(range(6))
+    assert {r: len(v) for r, v in out.items()} == {i: 10 for i in range(6)}
+
+
 def test_noop_branch_preserves_state(model_and_params):
     model, params = model_and_params
     eng = ServingEngine(model, params, num_slots=1, max_len=16)
