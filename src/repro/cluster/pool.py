@@ -88,10 +88,22 @@ pointers through the directory first.  The failure/elasticity contract:
 * **join/restart** — lazy backfill: buffers left under-replicated by
   earlier deaths copy one replica onto the joiner.
 
-Drain migration assumes the caller quiesces *writes* to buffers homed on
-the leaving node for the duration of ``remove_node`` (reads are safe;
-write-through to a mid-migration buffer may land on the old primary after
-its bytes were copied).
+Write-through :meth:`put` (and :meth:`free`) serialise against every
+byte-copying holder-set mutation — join/restart backfill and drain
+migration — on a handle-striped data-plane lock: a holder created from a
+pre-put snapshot of the bytes either finishes registering before the put
+(which then writes through it too) or copies after the put and sees the
+new bytes, so a promotable holder can never silently hold stale data.
+No caller-side write quiescing is required around ``remove_node`` or
+``add_node``.
+
+Handler-side buffer writes are NOT write-through: only handlers registered
+``read_only=True`` may be routed at (and have their pointers retargeted
+to) a replica; all other calls pin to the primary, and a handler that
+mutates through ``deref`` leaves the replicas at the last put until the
+caller re-puts (the read-only routing contract in
+``repro.offload.dataplane`` — use ``replicas=0`` for buffers mutated in
+place by handlers).
 """
 
 from __future__ import annotations
@@ -198,18 +210,20 @@ def register_cluster_handlers(registry=None) -> None:
     registered these before ``init()`` themselves)."""
     reg = registry or default_registry()
     register_dataplane_handlers(reg)
-    for name, fn in (
-        ("_cluster/sleep", _h_sleep),
-        ("_cluster/spin", _h_spin),
-        ("_cluster/touch", _h_touch),
-        ("_cluster/reset_peer", _h_reset_peer),
-        ("_cluster/attach_peer", _h_attach_peer),
-        ("_cluster/detach_peer", _h_detach_peer),
-        ("_cluster/stats", _h_stats),
-        ("_cluster/digest", _h_digest),
+    for name, fn, read_only in (
+        ("_cluster/sleep", _h_sleep, False),
+        ("_cluster/spin", _h_spin, False),
+        # touch only READS through its pointer, so it may be served from
+        # any replica (the dataplane's read-only routing contract)
+        ("_cluster/touch", _h_touch, True),
+        ("_cluster/reset_peer", _h_reset_peer, False),
+        ("_cluster/attach_peer", _h_attach_peer, False),
+        ("_cluster/detach_peer", _h_detach_peer, False),
+        ("_cluster/stats", _h_stats, False),
+        ("_cluster/digest", _h_digest, False),
     ):
         try:
-            reg.register(fn, name=name)
+            reg.register(fn, name=name, read_only=read_only)
         except RegistrySealedError:
             return
 
@@ -348,6 +362,16 @@ class ClusterPool:
         self.directory = BufferDirectory()
         self.host.buffer_directory = self.directory  # _ham/buf_freed target
         self._alloc_rr = 0  # round-robin primary placement for allocate()
+        # serialises write-through puts/frees against holder-set mutation
+        # that COPIES bytes (join/restart backfill, drain migration): a
+        # holder added from a pre-put snapshot of the bytes must not become
+        # promotable without also receiving the put (put's divergence guard).
+        # Striped by handle — the invariant is per buffer, and a migration
+        # copy can hold its lock across a multi-second network transfer;
+        # striping keeps puts/frees to unrelated buffers from stalling
+        # behind it except on a (1-in-64) stripe collision, which merely
+        # waits, never deadlocks
+        self._dataplane_locks = tuple(threading.Lock() for _ in range(64))
         # the directory's failover MUST run before any external death
         # subscriber (the scheduler repins sessions onto post-promotion
         # placement) — subscribe first, before the monitor can announce
@@ -558,6 +582,12 @@ class ClusterPool:
         return self.directory.register(ptr, shape, np.dtype(dtype),
                                        replicas=reps, session=session)
 
+    def _buffer_lock(self, handle: int) -> threading.Lock:
+        """The data-plane lock stripe for one buffer (``__init__`` notes);
+        everything holding one stripe never takes another, so stripes can
+        never deadlock."""
+        return self._dataplane_locks[int(handle) % len(self._dataplane_locks)]
+
     def put(self, src, ptr: BufferPtr, *, offset: int = 0) -> None:
         """Write-through put: the payload lands on the primary AND every
         replica (over the ordinary zero-copy chunked path), so promotion
@@ -566,20 +596,30 @@ class ClusterPool:
         Divergence guard: a replica whose write fails (died mid-put,
         mid-removal) is DROPPED from the holder set rather than left
         holding pre-put bytes — a stale copy must never be promotable.  A
-        failed primary write raises (the put did not happen)."""
-        rec = self.directory.lookup(ptr.handle)
-        if rec is None:  # untracked (or lost — resolve raises the diagnosis)
-            self.domain.put(src, self.directory.resolve(ptr), offset=offset)
-            return
-        self.domain.put(src, ptr.at(rec.primary, rec.epoch), offset=offset)
-        for holder in rec.replicas:
-            try:
-                if not self.is_alive(holder):
-                    raise OffloadError(f"replica holder {holder} is down")
-                self.domain.put(src, ptr.at(holder, rec.epoch),
+        failed primary write raises (the put did not happen).
+
+        Holds the buffer's data-plane lock so its holder set cannot change
+        under it by a byte-copying path: a join/restart backfill (or drain
+        migration) that snapshotted the bytes pre-put either completes
+        first — and this put then writes through the new holder too — or
+        starts after the put and copies the new bytes.  Either way no
+        promotable holder misses the write."""
+        with self._buffer_lock(ptr.handle):
+            rec = self.directory.lookup(ptr.handle)
+            if rec is None:  # untracked (or lost — resolve raises diagnosis)
+                self.domain.put(src, self.directory.resolve(ptr),
                                 offset=offset)
-            except Exception:  # noqa: BLE001 — drop, don't diverge
-                self.directory.remove_replica(rec.handle, holder)
+                return
+            self.domain.put(src, ptr.at(rec.primary, rec.epoch),
+                            offset=offset)
+            for holder in rec.replicas:
+                try:
+                    if not self.is_alive(holder):
+                        raise OffloadError(f"replica holder {holder} is down")
+                    self.domain.put(src, ptr.at(holder, rec.epoch),
+                                    offset=offset)
+                except Exception:  # noqa: BLE001 — drop, don't diverge
+                    self.directory.remove_replica(rec.handle, holder)
 
     def get(self, ptr: BufferPtr, **kw):
         """Directory-resolved get: a stale-epoch pointer is transparently
@@ -591,8 +631,12 @@ class ClusterPool:
         (a racing worker-side ``_ham/buf_freed`` becomes a no-op), then the
         primary gets a strict ``_ham/free`` and every replica an idempotent
         ``_ham/buf_invalidate`` — ``live_count`` stays truthful cluster-wide
-        and no replica outlives its buffer."""
-        rec = self.directory.drop(ptr.handle)
+        and no replica outlives its buffer.  The drop takes the data-plane
+        lock so a backfill copying this buffer finishes registering its new
+        holder first (and is then invalidated with the rest) instead of
+        adopting an orphan copy of a freed buffer."""
+        with self._buffer_lock(ptr.handle):
+            rec = self.directory.drop(ptr.handle)
         if rec is None:
             self.domain.free(ptr)  # untracked: the paper's plain free
             return
@@ -668,28 +712,48 @@ class ClusterPool:
     def _dataplane_on_join(self, node: int) -> None:
         """Join/restart subscriber: lazy backfill — buffers left
         under-replicated by earlier deaths copy one replica onto the
-        joiner (data moves here, at join time, not on the death path)."""
+        joiner (data moves here, at join time, not on the death path).
+
+        Each buffer's copy + directory registration runs under the
+        buffer's data-plane lock stripe (concurrent puts to buffers on
+        other stripes interleave): a write-through put can never land
+        between our
+        snapshot of the bytes and the joiner becoming a promotable holder
+        — it either precedes the copy (we copy the new bytes) or follows
+        the registration (it writes through the joiner too).  The record
+        is re-read under the lock so a buffer freed or mutated since the
+        under-replication scan is skipped, not resurrected."""
         if not self.replicas:
             return
         live = set(self.live_nodes())
-        for rec in self.directory.under_replicated(self.replicas, live):
-            if node in rec.holders or rec.primary not in live:
-                continue
-            try:
-                self._copy_buffer(rec, rec.primary, node)
-                self.directory.add_replica(rec.handle, node)
-            except Exception:  # noqa: BLE001 — backfill is best-effort;
-                # the buffer stays under-replicated until the next join
-                import traceback
+        for stale in self.directory.under_replicated(self.replicas, live):
+            with self._buffer_lock(stale.handle):
+                rec = self.directory.lookup(stale.handle)
+                if rec is None or node in rec.holders \
+                        or rec.primary not in live:
+                    continue
+                try:
+                    self._copy_buffer(rec, rec.primary, node)
+                    self.directory.add_replica(rec.handle, node)
+                except Exception:  # noqa: BLE001 — backfill is best-effort;
+                    # the buffer stays under-replicated until the next join
+                    import traceback
 
-                traceback.print_exc()
+                    traceback.print_exc()
 
     def _migrate_off(self, node: int, timeout: float = 30.0) -> None:
         """Lossless-shrink half of ``remove_node(drain=True)``: move every
         primary off ``node`` — promote a surviving replica when one already
         holds the bytes (zero copy), else stream to a survivor — backfill
         the replicas it held, detach it from the directory, and repin the
-        sessions whose buffers moved."""
+        sessions whose buffers moved.
+
+        Each buffer moves under the data-plane lock (copy + epoch bump
+        atomic w.r.t. write-through puts): a concurrent put either lands
+        before the copy — and the copy carries it — or after the bump, when
+        the directory already names the new primary.  The record is
+        re-read under the lock so a buffer freed since the scan is
+        skipped."""
         live = [n for n in self.live_nodes() if n != node]
         if not live:
             # shrinking to zero workers: there is nowhere to move the data —
@@ -698,41 +762,51 @@ class ClusterPool:
             return
         moved: list[int] = []
         rr = 0
-        for rec in self.directory.primaries_on(node):
-            reps = [r for r in rec.replicas if r in live]
-            if reps:
-                dst = min(reps)  # the bytes are already there
-            else:
-                dst = live[rr % len(live)]
-                rr += 1
-                try:
-                    self._copy_buffer(rec, node, dst, timeout)
-                except Exception:  # noqa: BLE001 — an unreadable buffer at
-                    # migration time degrades to the crash outcome for this
-                    # buffer only (recorded LOST, resolves raise the
-                    # diagnosis); the removal itself must proceed
-                    import traceback
+        for stale in self.directory.primaries_on(node):
+            with self._buffer_lock(stale.handle):
+                rec = self.directory.lookup(stale.handle)
+                if rec is None or rec.primary != node:
+                    continue  # freed or already moved since the scan
+                reps = [r for r in rec.replicas if r in live]
+                if reps:
+                    dst = min(reps)  # the bytes are already there
+                else:
+                    dst = live[rr % len(live)]
+                    rr += 1
+                    try:
+                        self._copy_buffer(rec, node, dst, timeout)
+                    except Exception:  # noqa: BLE001 — an unreadable buffer
+                        # at migration time degrades to the crash outcome for
+                        # this buffer only (recorded LOST, resolves raise the
+                        # diagnosis); the removal itself must proceed
+                        import traceback
 
-                    traceback.print_exc()
-                    self.directory.mark_lost(
-                        rec.handle,
-                        f"migration off node {node} failed at its removal",
-                    )
-                    continue
-            self.directory.set_primary(rec.handle, dst)
-            moved.append(rec.handle)
+                        traceback.print_exc()
+                        self.directory.mark_lost(
+                            rec.handle,
+                            f"migration off node {node} failed at its "
+                            "removal",
+                        )
+                        continue
+                self.directory.set_primary(rec.handle, dst)
+                moved.append(rec.handle)
         if self.replicas:
-            for rec in self.directory.replicas_on(node):
-                candidates = [n for n in live if n not in rec.holders]
-                if not candidates or rec.primary not in live:
-                    continue
-                try:
-                    self._copy_buffer(rec, rec.primary, candidates[0], timeout)
-                    self.directory.add_replica(rec.handle, candidates[0])
-                except Exception:  # noqa: BLE001
-                    import traceback
+            for stale in self.directory.replicas_on(node):
+                with self._buffer_lock(stale.handle):
+                    rec = self.directory.lookup(stale.handle)
+                    if rec is None or node not in rec.replicas:
+                        continue  # freed or re-placed since the scan
+                    candidates = [n for n in live if n not in rec.holders]
+                    if not candidates or rec.primary not in live:
+                        continue
+                    try:
+                        self._copy_buffer(rec, rec.primary, candidates[0],
+                                          timeout)
+                        self.directory.add_replica(rec.handle, candidates[0])
+                    except Exception:  # noqa: BLE001
+                        import traceback
 
-                    traceback.print_exc()
+                        traceback.print_exc()
         self.directory.detach_node(node)
         if moved:
             self.directory.repin_sessions_moved(moved)

@@ -32,7 +32,11 @@ was not pinned with ``node=``:
   least-outstanding.  This routes compute to data instead of data to
   compute.  With a pool :class:`BufferDirectory` attached, a replicated
   buffer votes for EVERY live holder — any copy can serve a read, so
-  locality routing survives the primary's death.
+  locality routing survives the primary's death — but only for handlers
+  registered ``read_only=True``; a call without the declaration votes for
+  (and is pinned to) the buffer's primary, because serving it from a
+  replica could mutate that copy behind the write-through protocol's back
+  (the read-only routing contract in ``repro.offload.dataplane``).
 
 Location-transparent pointers (the data-plane refactor)
 -------------------------------------------------------
@@ -42,8 +46,8 @@ When the pool carries a ``BufferDirectory`` (it always does; see
 arguments against the directory *before* the frame is packed: a pointer
 carrying a stale ownership epoch (its buffer's primary moved — crash
 promotion or drain migration) is transparently re-resolved to the current
-primary, and a pointer whose chosen target holds a replica is retargeted
-at that copy.  Callers keep using pointers minted before a failover; they
+primary, and — for handlers declared ``read_only`` — a pointer whose
+chosen target holds a replica is retargeted at that copy.  Callers keep using pointers minted before a failover; they
 never see a dangling-handle error for a buffer that still exists (a buffer
 that is genuinely *lost* — died with no replica — raises a diagnosis at
 submit).  The scheduler also subscribes to the directory's repin hooks:
@@ -259,12 +263,18 @@ class Scheduler:
             if self.policy == "locality":
                 # votes are nbytes-weighted: route to where the bulk of the
                 # referenced data lives, not to whoever owns the most ptrs.
-                # Directory-tracked buffers vote for EVERY live holder
-                # (primary or replica — any copy can serve a read)
+                # Directory-tracked buffers vote for EVERY live holder only
+                # when the handler is declared read_only (any copy can serve
+                # a read); an undeclared call votes for — and will have its
+                # pointers pinned to — the primary, so a buffer-mutating
+                # handler can never be routed at a replica and diverge it
                 d = self._directory
-                resolver = (
-                    d.locality_resolver if d is not None and len(d) else None
-                )
+                resolver = None
+                if d is not None and len(d):
+                    resolver = (
+                        d.locality_resolver if function.record.read_only
+                        else d.primary_resolver
+                    )
                 votes = mig.scan_locality(function.args, resolver=resolver)
                 alive_votes = {n: c for n, c in votes.items() if n in self._live}
                 if alive_votes:
@@ -424,14 +434,22 @@ class Scheduler:
 
     def _resolve_for(self, function: Function, target: int) -> Function:
         """Directory pass over a call's arguments: stale-epoch pointers are
-        rewritten to the current primary, and pointers whose buffer has a
-        copy ON ``target`` are retargeted there (the receiving node's
-        own-address-space deref check must see itself).  A no-op without a
-        directory or when nothing is tracked."""
+        rewritten to the current primary, and — for handlers declared
+        ``read_only`` — pointers whose buffer has a copy ON ``target`` are
+        retargeted there (the receiving node's own-address-space deref
+        check must see itself).  A call NOT declared read-only keeps its
+        pointers pinned to the primary even when ``target`` holds a
+        replica: a handler that writes through ``deref`` must never update
+        a replica copy behind the write-through protocol's back (dataplane
+        module docs) — routed at a non-holder it fails the deref check
+        loudly instead of diverging silently.  A no-op without a directory
+        or when nothing is tracked."""
         d = self._directory
         if d is None or d.empty():
             return function
-        new_args, changed = d.resolve_args(function.args, target)
+        new_args, changed = d.resolve_args(
+            function.args, target if function.record.read_only else None
+        )
         if not changed:
             return function
         return Function(function.record, new_args)

@@ -172,13 +172,24 @@ def locality_of(value: Any) -> int | None:
     return codec.locality(value)
 
 
+#: container-nesting bound shared by every submit-path argument walk
+#: (``scan_locality`` here, ``BufferDirectory.resolve_args`` in the
+#: dataplane).  The two walks MUST agree: a pointer deep enough to vote
+#: must also be deep enough to be rewritten, or locality routing could
+#: ship a frame whose stale hint fails the holder's own-address-space
+#: dereference check.
+MAX_SCAN_DEPTH = 32
+
+
 def scan_locality(values, max_items: int = 64, resolver=None) -> dict[int, int]:
     """Byte-weighted locality votes across a shallow pytree of arguments.
 
     Returns ``{node: weight}`` over every leaf with a registered locality
     hook, walking at most ``max_items`` leaves (schedulers run this per
     submit — it must stay O(small)).  Containers are descended one level at
-    a time; everything else is a leaf.
+    a time, at most ``MAX_SCAN_DEPTH`` levels deep (the same bound the
+    directory's ``resolve_args`` rewrite walk applies, so a vote always
+    implies a rewritable pointer); everything else is a leaf.
 
     A leaf's vote weighs its ``locality_nbytes`` (the data it stands for at
     its owner — a buffer_ptr's remote buffer size), clamped to >= 1 so a
@@ -194,16 +205,19 @@ def scan_locality(values, max_items: int = 64, resolver=None) -> dict[int, int]:
     serve a read, which is what makes locality routing survive the primary.
     """
     votes: dict[int, int] = {}
-    stack = list(values) if isinstance(values, (list, tuple)) else [values]
+    top = list(values) if isinstance(values, (list, tuple)) else [values]
+    stack = [(v, 0) for v in top]
     seen = 0
     while stack and seen < max_items:
-        v = stack.pop()
+        v, depth = stack.pop()
         seen += 1
         if isinstance(v, (list, tuple)):
-            stack.extend(v)
+            if depth < MAX_SCAN_DEPTH:
+                stack.extend((i, depth + 1) for i in v)
             continue
         if isinstance(v, dict):
-            stack.extend(v.values())
+            if depth < MAX_SCAN_DEPTH:
+                stack.extend((i, depth + 1) for i in v.values())
             continue
         if resolver is not None:
             resolved = resolver(v)

@@ -53,13 +53,25 @@ from repro.core.wireplan import compile_plan
 
 @dataclasses.dataclass(frozen=True)
 class HandlerRecord:
-    """One registered handler — the analogue of one ``active_msg`` type."""
+    """One registered handler — the analogue of one ``active_msg`` type.
+
+    ``read_only`` declares that the handler never writes through a
+    ``buffer_ptr`` argument (it may read via ``deref``, and may mutate its
+    own locals freely).  The declaration is a *routing contract*, not a
+    sandbox: a replicated-data-plane scheduler may serve a read-only call
+    from ANY replica of its buffers, while a call without the declaration
+    has its pointers pinned to the primary copy — so a mutating handler
+    can never silently update one replica and diverge the others.  It does
+    not participate in the stable name (peers may disagree about it
+    without breaking key agreement; routing is a sender-side concern).
+    """
 
     stable_name: str
     fn: Callable
     arg_specs: tuple | None      # None => dynamic (self-describing) payload
     result_specs: tuple | None   # None => dynamic result
     doc: str = ""
+    read_only: bool = False
 
     @property
     def is_static(self) -> bool:
@@ -201,9 +213,11 @@ class HandlerRegistry:
         result_specs: tuple | None = None,
         name: str | None = None,
         doc: str = "",
+        read_only: bool = False,
     ) -> HandlerRecord:
         stable = _derive_stable_name(fn, arg_specs, name)
-        record = HandlerRecord(stable, fn, arg_specs, result_specs, doc)
+        record = HandlerRecord(stable, fn, arg_specs, result_specs, doc,
+                               read_only)
         with self._lock:
             if self._table is not None and not self._allow_late:
                 raise RegistrySealedError(
@@ -230,16 +244,21 @@ class HandlerRegistry:
         arg_specs: tuple | None = None,
         result_specs: tuple | None = None,
         name: str | None = None,
+        read_only: bool = False,
     ):
         """Decorator form.  ``args=`` gives example values to derive a static
         spec from (the ``Pars...`` of the closure template); ``arg_specs=``
-        passes specs directly; neither => dynamic payload."""
+        passes specs directly; neither => dynamic payload.  ``read_only=True``
+        declares the handler never writes through a ``buffer_ptr`` argument
+        (see :class:`HandlerRecord`) — it is what allows a replicated data
+        plane to serve the call from any replica."""
 
         def wrap(f: Callable) -> Callable:
             specs = arg_specs
             if specs is None and args is not None:
                 specs = tuple(spec_of(a) for a in args)
-            self.register(f, arg_specs=specs, result_specs=result_specs, name=name)
+            self.register(f, arg_specs=specs, result_specs=result_specs,
+                          name=name, read_only=read_only)
             return f
 
         if fn is not None:

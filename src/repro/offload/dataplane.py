@@ -60,6 +60,25 @@ scheduler rewrites ``BufferPtr`` args against the directory and may
 retarget them at any live holder it routes to), so handler code and the
 per-node :class:`~repro.offload.buffer.BufferRegistry` keep the paper's
 strict own-address-space dereference rule.
+
+Read-only routing contract (what keeps copies from diverging)
+-------------------------------------------------------------
+
+Write-through ``put`` is the ONLY sanctioned way to change a replicated
+buffer's bytes.  A handler that writes through ``deref`` updates exactly
+one copy — so serving such a call from a replica would silently diverge
+it from the primary, and a later crash could promote either version.
+The guard is declarative: only handlers registered with ``read_only=True``
+(:class:`~repro.core.registry.HandlerRecord`) may have their pointers
+retargeted at a replica holder or widen their locality votes to every
+holder; every other call has its pointers pinned to the *primary* (and
+votes for the primary only), so an undeclared mutation can only ever land
+on the authoritative copy.  Note the residual caveat: even on the
+primary, a handler-side in-place write is invisible to the replicas — it
+is not write-through — so a crash before the caller re-puts the buffer
+promotes a replica holding the bytes of the last put.  Handlers
+that mutate buffers should use ``replicas=0`` buffers or follow the call
+with an explicit ``put`` to restore coherence.
 """
 
 from __future__ import annotations
@@ -69,6 +88,7 @@ import threading
 from typing import Callable, Hashable
 
 from repro.core.errors import OffloadError, RegistrySealedError
+from repro.core.migratable import MAX_SCAN_DEPTH
 from repro.offload.buffer import BufferPtr
 
 
@@ -179,13 +199,17 @@ class BufferDirectory:
         given and holds a copy (primary OR replica), the hint is retargeted
         at ``target`` so the receiving node's own-address-space dereference
         check passes — this is what lets locality routing serve a read from
-        any live replica.  Returns ``(new_args, changed)``; the original
-        structure is returned untouched when nothing needed rewriting.
+        any live replica.  Callers must only pass ``target`` for calls
+        declared ``read_only`` (module docs, read-only routing contract);
+        with ``target=None`` every pointer pins to the primary.  Returns
+        ``(new_args, changed)``; the original structure is returned
+        untouched when nothing needed rewriting.
 
-        Containers are descended to the same (practically unbounded) depth
-        ``scan_locality`` walks — a pointer deep enough to vote must also be
-        deep enough to rewrite, or locality routing would ship a frame whose
-        hint fails the holder's own-address-space check.
+        Containers are descended to the same depth-32 bound
+        ``scan_locality`` enforces (``migratable.MAX_SCAN_DEPTH``) — a
+        pointer deep enough to vote is always deep enough to rewrite, so
+        locality routing can never ship a frame whose hint fails the
+        holder's own-address-space check.
         """
 
         def walk(v, depth=0):
@@ -199,7 +223,7 @@ class BufferDirectory:
                     return v
                 self.stats["stale_resolved"] += v.epoch != rec.epoch
                 return v.at(node, rec.epoch)
-            if depth >= 32:  # cycle/pathology guard, not a design limit
+            if depth >= MAX_SCAN_DEPTH:  # same bound as scan_locality's walk
                 return v
             if isinstance(v, (list, tuple)):
                 out = [walk(i, depth + 1) for i in v]
@@ -218,9 +242,12 @@ class BufferDirectory:
         return (new if changed else tuple(args)), changed
 
     def locality_resolver(self, value):
-        """``scan_locality`` resolver: a registered buffer votes for EVERY
-        live holder (any copy can serve a read), nbytes-weighted; unknown
-        values fall back to the codec's single-node hint (return None)."""
+        """``scan_locality`` resolver for READ-ONLY calls: a registered
+        buffer votes for EVERY live holder (any copy can serve a read),
+        nbytes-weighted; unknown values fall back to the codec's
+        single-node hint (return None).  Calls not declared read-only must
+        use :meth:`primary_resolver` instead — routing a mutating call at
+        a replica would diverge the copies (module docs)."""
         if not isinstance(value, BufferPtr):
             return None
         rec = self.lookup(value.handle)
@@ -228,6 +255,18 @@ class BufferDirectory:
             return None
         w = max(1, rec.nbytes)
         return {n: w for n in rec.holders}
+
+    def primary_resolver(self, value):
+        """``scan_locality`` resolver for calls NOT declared read-only: a
+        registered buffer votes for its current *primary* only (fixing a
+        stale ``ptr.node`` hint in passing); unknown values fall back to
+        the codec (return None)."""
+        if not isinstance(value, BufferPtr):
+            return None
+        rec = self.lookup(value.handle)
+        if rec is None:
+            return None
+        return {rec.primary: max(1, rec.nbytes)}
 
     # -- placement mutation (epoch bumps) ----------------------------------
 

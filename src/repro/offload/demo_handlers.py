@@ -27,13 +27,16 @@ def add(a, b):
     return a + b
 
 
-@_reg.handler(name="demo/inner_prod")
+@_reg.handler(name="demo/inner_prod", read_only=True)
 def inner_prod(a_ptr, b_ptr, n):
     a = deref(a_ptr)
     b = deref(b_ptr)
     return float(a[:n] @ b[:n])
 
 
+# saxpy WRITES through y_ptr, so it must not be read_only: the scheduler
+# pins its pointers to the primary copy, and the mutation is invisible to
+# any replicas until the caller re-puts the buffer (dataplane module docs)
 @_reg.handler(name="demo/saxpy")
 def saxpy(alpha, x_ptr, y_ptr):
     y = deref(y_ptr)

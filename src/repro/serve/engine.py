@@ -448,7 +448,10 @@ class ClusterServingEngine:
                     recover_node(node)
             # admission: place each request's session once (rendezvous hash
             # over workers with a free slot), then submit THROUGH the router
-            # so the admit sticks to the placement
+            # so the admit sticks to the placement.  A request whose live
+            # pin is full waits for a slot THERE (KV must not split across
+            # workers) but must not block admission of the requests behind
+            # it — scan past it to the first admissible request instead
             while pending and nodes:
                 free = [
                     n for n in nodes
@@ -457,15 +460,18 @@ class ClusterServingEngine:
                 ]
                 if not free:
                     break
-                req = pending[0]
-                node = self.sched.sessions.route(
-                    f"serve/{req.rid}", eligible=free
-                )
-                if node is None or node not in free:
-                    # a live pin outranks eligible=; if the pinned worker is
-                    # full, wait for a slot there instead of splitting KV
-                    break
-                pending.pop(0)
+                admit_idx = None
+                node = None
+                for idx, req in enumerate(pending):
+                    placed_node = self.sched.sessions.route(
+                        f"serve/{req.rid}", eligible=free
+                    )
+                    if placed_node is not None and placed_node in free:
+                        admit_idx, node = idx, placed_node
+                        break
+                if admit_idx is None:
+                    break  # every pending request waits on a full pin
+                req = pending.pop(admit_idx)
                 queued[node] = queued.get(node, 0) + 1
                 track(self.sched.submit(
                     f2f("_serve/admit", np.asarray(req.prompt, np.int32),

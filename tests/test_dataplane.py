@@ -1,6 +1,7 @@
 """Location-transparent data plane: directory, epochs, replication,
 crash promotion, session repin, lossless drain migration, free hygiene."""
 
+import threading
 import time
 
 import numpy as np
@@ -10,16 +11,26 @@ import repro.cluster.pool  # noqa: F401 — registers _cluster/* + _ham/buf_*
 from repro.cluster import BufferDirectory, ClusterPool, Scheduler, gather
 from repro.cluster.pool import register_cluster_handlers
 from repro.core.closure import f2f
-from repro.core.errors import OffloadError
+from repro.core.errors import OffloadError, RemoteExecutionError
 from repro.core.registry import HandlerRegistry, default_registry
 from repro.offload.buffer import BufferPtr, BufferRegistry, handle_minter
 from repro.offload.runtime import register_internal_handlers
+
+
+def _h_bump(ptr):
+    """Buffer-MUTATING probe (deliberately not read_only): writes through
+    deref, so the scheduler must pin it to the primary copy."""
+    from repro.offload.api import deref
+
+    deref(ptr)[...] += 1.0
+    return None
 
 
 def _registry():
     reg = HandlerRegistry()
     register_internal_handlers(reg)
     register_cluster_handlers(reg)  # includes the _ham/buf_* dataplane set
+    reg.register(_h_bump, name="test/bump")
     reg.init()
     return reg
 
@@ -120,6 +131,46 @@ def test_directory_locality_resolver_votes_for_all_holders():
     assert votes == {1: 100, 2: 100, 3: 100}
     assert d.locality_resolver("not a ptr") is None
     assert d.locality_resolver(BufferPtr(4, 404, 8, 0)) is None
+
+
+def test_directory_primary_resolver_votes_primary_only():
+    """Calls NOT declared read-only use this resolver: only the primary
+    copy may serve them (a replica-routed mutation would diverge)."""
+    d = BufferDirectory()
+    ptr = d.register(BufferPtr(1, 5, 100, 0), (100,), "uint8",
+                     replicas=(2, 3))
+    assert d.primary_resolver(ptr) == {1: 100}
+    d.on_node_death(1)  # promotion moves the vote with the primary
+    assert d.primary_resolver(ptr) == {2: 100}
+    assert d.primary_resolver("not a ptr") is None
+    assert d.primary_resolver(BufferPtr(4, 404, 8, 0)) is None
+
+
+def test_resolve_args_depth_matches_scan_locality_vote_depth():
+    """Vote implies rewrite: a pointer nested at the scan bound is both
+    votable and rewritable; one past the bound is neither (it can never
+    ship with a retargeted-but-unrewritten hint)."""
+    from repro.core.migratable import MAX_SCAN_DEPTH, scan_locality
+
+    d = BufferDirectory()
+    ptr = d.register(BufferPtr(1, 9, 64, 0), (8,), "float64", replicas=(2,))
+    at_bound = ptr
+    for _ in range(MAX_SCAN_DEPTH):
+        at_bound = [at_bound]
+
+    def innermost(v):
+        while isinstance(v, list):
+            v = v[0]
+        return v
+
+    assert scan_locality((at_bound,), resolver=d.locality_resolver) \
+        == {1: 64, 2: 64}
+    (out,), changed = d.resolve_args((at_bound,), target=2)
+    assert changed and innermost(out).node == 2
+    past_bound = [at_bound]
+    assert scan_locality((past_bound,), resolver=d.locality_resolver) == {}
+    (out,), changed = d.resolve_args((past_bound,), target=2)
+    assert not changed and innermost(out) is ptr
 
 
 # -- pool-level replication + crash recovery ---------------------------------
@@ -302,6 +353,94 @@ def test_locality_votes_route_to_live_replica(pool):
     fut = sched.submit(f2f("_cluster/touch", ptr, registry=reg))
     assert fut.get(10) == arr.sum()
     assert sched.stats["routed"][replica] >= 1
+
+
+def test_mutating_call_routes_and_pins_to_primary(pool):
+    """A handler NOT declared read_only must never be served from a
+    replica: locality votes go to the primary only, and its pointers are
+    never retargeted — so the mutation can only land on the authoritative
+    copy (the replica keeps the bytes of the last put, as documented)."""
+    sched = Scheduler(pool, policy="locality")
+    reg = pool.domain.registry
+    arr = np.arange(16.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    pool.put(arr, ptr)
+    rec = pool.directory.lookup(ptr.handle)
+    replica = rec.replicas[0]
+    for _ in range(3):
+        sched.submit(f2f("test/bump", ptr, registry=reg)).get(10)
+    assert sched.stats["routed"].get(replica, 0) == 0
+    assert sched.stats["routed"][1] == 3
+    np.testing.assert_array_equal(pool.get(ptr), arr + 3.0)
+    # handler-side writes are not write-through: the replica still holds
+    # the last put (the documented caveat callers re-put to close)
+    np.testing.assert_array_equal(
+        pool.domain.get(ptr.at(replica, rec.epoch)), arr
+    )
+
+
+def test_mutating_call_pinned_at_replica_fails_loudly(pool):
+    """Pinning a mutating call at a replica holder must fail the deref
+    check (pointer stays at the primary), never silently diverge that
+    copy; the same pin with a read_only handler is retargeted and works."""
+    sched = Scheduler(pool)
+    reg = pool.domain.registry
+    ptr = pool.allocate((8,), "float64", node=1)
+    pool.put(np.zeros(8), ptr)
+    replica = pool.directory.lookup(ptr.handle).replicas[0]
+    with pytest.raises(RemoteExecutionError):
+        sched.submit(f2f("test/bump", ptr, registry=reg),
+                     node=replica).get(10)
+    np.testing.assert_array_equal(pool.get(ptr), np.zeros(8))  # no write
+    fut = sched.submit(f2f("_cluster/touch", ptr, registry=reg),
+                       node=replica)
+    assert fut.get(10) == 0.0
+    assert sched.stats["routed"][replica] >= 1
+
+
+def test_put_serialises_against_join_backfill(pool):
+    """The write-through race: a joiner backfilled from a pre-put snapshot
+    of the bytes must not become a promotable holder without receiving the
+    put.  The backfill copy is held open mid-window; a concurrent put must
+    serialise behind it and write through the new replica too."""
+    sched = Scheduler(pool)
+    ptr = pool.allocate((64,), "float64", node=1)
+    pool.put(np.zeros(64), ptr)
+    replica = pool.directory.lookup(ptr.handle).replicas[0]
+    pool.kill(replica)  # leave the buffer under-replicated
+    _wait_dead(sched, replica)
+    assert pool.directory.lookup(ptr.handle).replicas == ()
+    copied = threading.Event()
+    orig = pool._copy_buffer
+
+    def slow_copy(rec, src, dst, timeout=30.0):
+        orig(rec, src, dst, timeout)  # pre-put snapshot lands on the joiner
+        copied.set()
+        time.sleep(0.3)  # window in which an unserialised put would miss dst
+
+    pool._copy_buffer = slow_copy
+    try:
+        joined = {}
+        t = threading.Thread(
+            target=lambda: joined.setdefault("node", pool.add_node())
+        )
+        t.start()
+        assert copied.wait(30)
+        new_data = np.arange(64.0)
+        pool.put(new_data, ptr)  # must block until the joiner is registered
+        t.join(30)
+        assert not t.is_alive()
+    finally:
+        pool._copy_buffer = orig
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == (joined["node"],)
+    np.testing.assert_array_equal(
+        pool.domain.get(ptr.at(joined["node"], rec.epoch)), new_data
+    )
+    # the backfilled copy is genuinely promotable: kill the primary, read
+    pool.kill(rec.primary)
+    _wait_dead(sched, rec.primary)
+    np.testing.assert_array_equal(pool.get(ptr), new_data)
 
 
 def test_join_backfills_under_replicated_buffers(pool):

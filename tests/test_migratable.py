@@ -141,3 +141,18 @@ def test_scan_locality_weights_by_nbytes():
     assert votes == {1: 24, 2: 100 * 1024 * 1024}
     # unknown-size pointers still vote, with unit weight
     assert mig.scan_locality((BufferPtr(5, 1),)) == {5: 1}
+
+
+def test_scan_locality_depth_bound():
+    """Containers nested past MAX_SCAN_DEPTH are not descended — the same
+    bound the directory's resolve_args rewrite walk applies, so a pointer
+    deep enough to vote is always deep enough to be rewritten."""
+    from repro.offload.buffer import BufferPtr
+
+    ptr = BufferPtr(3, 11, 64)
+    at_bound = ptr
+    for _ in range(mig.MAX_SCAN_DEPTH):  # ptr sits at depth MAX_SCAN_DEPTH
+        at_bound = [at_bound]
+    assert mig.scan_locality((at_bound,)) == {3: 64}
+    past_bound = [at_bound]
+    assert mig.scan_locality((past_bound,)) == {}

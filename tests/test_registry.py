@@ -116,3 +116,15 @@ def test_static_spec_part_of_identity():
     reg2 = HandlerRegistry()
     reg2.register(_noop, name="h", arg_specs=(ham.spec_of(np.zeros(8)),))
     assert reg1.init().digest != reg2.init().digest
+
+
+def test_read_only_is_routing_metadata_not_identity():
+    """read_only feeds sender-side routing (replica serving) only: it must
+    not change the stable name or the key-map digest peers agree on."""
+    reg_a, reg_b = HandlerRegistry(), HandlerRegistry()
+    reg_a.register(_noop, name="x/fn")
+    reg_b.register(_noop, name="x/fn", read_only=True)
+    ta, tb = reg_a.init(), reg_b.init()
+    assert ta.digest == tb.digest
+    assert ta.record_of("x/fn").read_only is False
+    assert tb.record_of("x/fn").read_only is True
