@@ -25,9 +25,16 @@ recording time-to-recovery (death detection + metadata promotion + session
 repin), that ZERO buffers were lost, and that every buffer read back
 intact through its original (stale-epoch) pointer.
 
+A fourth section kills and rebuilds the **host** in place
+(``recovery.host_restart``): a pool holding replicated session buffers has
+its host runtime torn down and restarted on the same endpoint, the
+directory is reconstructed from survivor ``_ham/dir_dump`` shards, and
+every buffer must read back intact through its pre-crash pointer
+(docs/failure-model.md).
+
 Writes ``BENCH_cluster.json`` with the sweeps and the acceptance checks:
 pipelined >= 2x serial at 4 workers; resize with zero failures; kill 4->3
-with zero lost buffers.
+with zero lost buffers; host restart with zero lost buffers.
 """
 
 from __future__ import annotations
@@ -273,6 +280,55 @@ def _recovery_section(smoke: bool) -> dict:
         pool.close()
 
 
+def _host_restart_section(smoke: bool) -> dict:
+    """Host crash + in-place rebuild: the directory must survive.
+
+    A 3-worker pool (``replicas=1``) holds session-bound replicated
+    buffers; after gossip settles the host runtime is torn down and a
+    fresh one starts on the same endpoint, merging ``_ham/dir_dump``
+    shards from every survivor.  Acceptance: zero lost entries, every
+    buffer intact through its pre-crash pointer, and post-restart calls
+    flow through a fresh scheduler.
+    """
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    nbuf = 8 if smoke else 24
+    elems = (4 << 10) if smoke else (64 << 10)
+    pool = ClusterPool.local(3, registry=reg, replicas=1)
+    try:
+        payload = np.arange(float(elems))
+        ptrs = []
+        for i in range(nbuf):
+            ptr = pool.allocate((elems,), "float64", session=f"hr-{i}")
+            pool.put(payload, ptr)
+            ptrs.append(ptr)
+        time.sleep(0.3)  # let directory gossip reach every worker
+        report = pool.restart_host()
+        intact = sum(
+            1 for ptr in ptrs if np.array_equal(pool.get(ptr), payload)
+        )
+        # the old scheduler's future table died with the host: a fresh one
+        # must route session traffic on the rebuilt directory
+        sched = Scheduler(pool, max_inflight=8)
+        fn = f2f("_cluster/sleep", 0.001, registry=reg)
+        for i in range(min(nbuf, 4)):
+            sched.submit(fn, session=f"hr-{i}").get(10)
+        return {
+            "buffers": nbuf,
+            "buffer_nbytes": elems * 8,
+            "restart": "host torn down + rebuilt on same endpoint, "
+                       "3 workers, replicas=1",
+            "recovered": report["recovered"],
+            "lost": report["lost"],
+            "restart_ms": round(report["seconds"] * 1e3, 1),
+            "buffers_intact": intact,
+            "recovered_fraction": round(intact / nbuf, 3),
+        }
+    finally:
+        pool.close()
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     calls = 32 if smoke else CALLS
     sleep_s = SLEEP_S
@@ -308,11 +364,18 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         f"{recovery['buffers_intact']}/{recovery['buffers']} intact, "
         f"write-through {recovery['writethrough_overhead_x']}x",
     ))
+    host_restart = _host_restart_section(smoke)
+    recovery["host_restart"] = host_restart
+    rows.append((
+        "cluster/host_restart_ms", host_restart["restart_ms"],
+        f"host rebuild: {host_restart['lost']} lost, "
+        f"{host_restart['buffers_intact']}/{host_restart['buffers']} intact",
+    ))
     accept = {
         policy: sweep[policy]["4"]["speedup"] >= 2.0 for policy in POLICIES
     }
     report = {
-        "schema": "cluster-v3",
+        "schema": "cluster-v4",
         "service_time_s": sleep_s,
         "calls": calls,
         "max_inflight": MAX_INFLIGHT,
@@ -328,6 +391,9 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
             "kill_4_to_3_zero_lost_buffers": recovery["buffers_lost"] == 0,
             "kill_4_to_3_all_buffers_intact":
                 recovery["recovered_fraction"] == 1.0,
+            "host_restart_zero_lost": host_restart["lost"] == 0,
+            "host_restart_all_buffers_intact":
+                host_restart["recovered_fraction"] == 1.0,
         },
     }
     _JSON_PATH.write_text(json.dumps(report, indent=2) + "\n")

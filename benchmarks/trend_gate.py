@@ -64,6 +64,9 @@ TRACKED = {
         # data-plane crash recovery: fraction of replicated buffers intact
         # after kill 4->3 (must stay 1.0 — any dip is a recovery bug)
         "recovery.recovered_fraction",
+        # host crash + in-place rebuild: directory reconstructed from
+        # survivor dir_dump shards (must stay 1.0, same zero tolerance)
+        "recovery.host_restart.recovered_fraction",
     ],
     "BENCH_hotpath.json": [
         "batching_speedup_x64",
@@ -88,6 +91,7 @@ SMOKE_SIZE_DEPENDENT = {
 #: dip would wave through a real recovery bug
 ZERO_TOLERANCE = {
     "BENCH_cluster.json:recovery.recovered_fraction",
+    "BENCH_cluster.json:recovery.host_restart.recovered_fraction",
 }
 
 

@@ -120,8 +120,12 @@ from repro.core.executor import DirectPolicy
 from repro.core.registry import default_registry, verify_peer_digest
 from repro.offload.api import OffloadDomain
 from repro.offload.buffer import BufferPtr
-from repro.offload.dataplane import BufferDirectory, register_dataplane_handlers
-from repro.offload.runtime import NodeRuntime
+from repro.offload.dataplane import (
+    BufferDirectory,
+    BufferRecord,
+    register_dataplane_handlers,
+)
+from repro.offload.runtime import NodeRuntime, ReplayCache
 from repro.offload.worker import (
     reap,
     spawn_shm_workers,
@@ -342,6 +346,11 @@ class ClusterPool:
         policy_factory=DirectPolicy,
         mode: str = "local",
         replicas: int = 0,
+        restart_backoff: float = 0.5,
+        restart_backoff_max: float = 8.0,
+        max_restarts: int = 5,
+        fail_window: float = 30.0,
+        quarantine_probe: float = 5.0,
     ):
         self.domain = domain
         self.fabric = domain.fabric
@@ -385,6 +394,23 @@ class ClusterPool:
         )
         self._policy_factory = policy_factory
         self.auto_restart = auto_restart
+        # -- auto-restart circuit breaker (module docs) --------------------
+        #: first-retry delay; doubles per consecutive failure, capped below
+        self.restart_backoff = float(restart_backoff)
+        self.restart_backoff_max = float(restart_backoff_max)
+        #: consecutive failures within ``fail_window`` that trip quarantine
+        self.max_restarts = int(max_restarts)
+        self.fail_window = float(fail_window)
+        #: cool-down before a quarantined worker's first half-open probe
+        self.quarantine_probe = float(quarantine_probe)
+        self._restart_fails: dict[int, int] = {}
+        self._last_fail_t: dict[int, float] = {}
+        self._pending_restart: dict[int, float] = {}  # node -> due (monotonic)
+        self._quarantined: set[int] = set()
+        self._probe_at: dict[int, float] = {}
+        self._probe_iv: dict[int, float] = {}
+        # -- directory gossip (durable directory; offload.dataplane docs) --
+        self.directory.on_change(self._gossip_change)
         self._closed = False
         self._stop = threading.Event()
         self._monitor = threading.Thread(
@@ -397,10 +423,19 @@ class ClusterPool:
 
     @classmethod
     def local(cls, num_workers: int, *, registry=None,
-              policy_factory=DirectPolicy, **kw) -> "ClusterPool":
-        """Thread workers in this process (node 0 is the host)."""
+              policy_factory=DirectPolicy, wrap_fabric=None,
+              **kw) -> "ClusterPool":
+        """Thread workers in this process (node 0 is the host).
+
+        ``wrap_fabric=`` (all three constructors) wraps the fabric before
+        any endpoint is handed out — e.g. ``lambda f:
+        ChaosFabric(f, seed=7)`` puts every link under seeded fault
+        injection (``repro.comm.chaos``).
+        """
         reg = registry or default_registry()
         fabric = LocalFabric(num_workers + 1)
+        if wrap_fabric is not None:
+            fabric = wrap_fabric(fabric)
         domain = OffloadDomain(fabric, registry=reg,
                                policy_factory=policy_factory)
         pool = cls.__new__(cls)
@@ -417,16 +452,20 @@ class ClusterPool:
 
     @classmethod
     def shm(cls, num_workers: int, *, registry=None, capacity: int = 1 << 24,
-            setup_modules=None, **kw) -> "ClusterPool":
+            setup_modules=None, wrap_fabric=None, **kw) -> "ClusterPool":
         """Forked processes over shared-memory rings.
 
         ``setup_modules=None`` auto-derives the worker import list from the
         host's default registry (same-source key agreement by construction).
+        ``wrap_fabric=`` as in :meth:`local` — forked workers inherit the
+        wrapper, so both directions of every link are under fault injection.
         """
         from repro.comm.shm import ShmFabric
 
         reg = registry or default_registry()
         fabric = ShmFabric(num_workers + 1, capacity=capacity)
+        if wrap_fabric is not None:
+            fabric = wrap_fabric(fabric)
         procs = spawn_shm_workers(fabric, list(range(1, num_workers + 1)),
                                   setup_modules)
         domain = OffloadDomain(fabric, registry=reg)
@@ -441,13 +480,19 @@ class ClusterPool:
 
     @classmethod
     def socket(cls, num_workers: int, *, registry=None, setup_modules=None,
-               **kw) -> "ClusterPool":
+               wrap_fabric=None, **kw) -> "ClusterPool":
         """Fresh-interpreter workers over loopback TCP (``setup_modules``
-        as in :meth:`shm` — None auto-derives from the host registry)."""
+        as in :meth:`shm` — None auto-derives from the host registry).
+        ``wrap_fabric=`` as in :meth:`local`; socket workers build their own
+        endpoints in the child interpreter, so only the HOST side of each
+        link is wrapped — chaos recv-side injection (keyed by the frame's
+        ``src_node``) still exercises both directions."""
         from repro.comm.socket import SocketFabric
 
         reg = registry or default_registry()
         fabric = SocketFabric(num_workers + 1)
+        if wrap_fabric is not None:
+            fabric = wrap_fabric(fabric)
         popens = [
             spawn_socket_worker_subprocess(node, num_workers + 1,
                                            fabric.base_port, setup_modules)
@@ -513,6 +558,7 @@ class ClusterPool:
                     continue
                 if not handle.alive():
                     self._announce_death(node)
+            self._run_due_restarts()
 
     def _announce_death(self, node: int) -> None:
         with self._lock:
@@ -530,12 +576,100 @@ class ClusterPool:
         with self._lock:
             removing = node in self._removing or node not in self._workers
         if self.auto_restart and not self._closed and not removing:
+            self._schedule_restart(node)
+
+    # -- auto-restart circuit breaker ---------------------------------------
+    #
+    # A crash-looping worker used to restart inline in _announce_death — a
+    # tight respawn/crash/respawn loop that burned CPU and kept readmitting
+    # a node that could not hold traffic.  Deaths now *schedule* a restart
+    # with capped exponential backoff, and ``max_restarts`` consecutive
+    # failures inside ``fail_window`` trip a quarantine: the node stays out
+    # of the pool (on_death was announced exactly once; the scheduler has
+    # already drained it) until a half-open probe — restart + ping after
+    # ``quarantine_probe`` seconds, interval doubling per failed probe —
+    # succeeds, or an operator calls :meth:`readmit`.
+
+    def _schedule_restart(self, node: int) -> None:
+        now = time.monotonic()
+        with self._lock:
+            fails = self._restart_fails.get(node, 0)
+            if now - self._last_fail_t.get(node, 0.0) > self.fail_window:
+                fails = 0  # earlier failures aged out of the window
+            fails += 1
+            self._restart_fails[node] = fails
+            self._last_fail_t[node] = now
+            if fails > self.max_restarts:
+                self._quarantined.add(node)
+                self._pending_restart.pop(node, None)
+                iv = self._probe_iv.get(node, self.quarantine_probe)
+                self._probe_iv[node] = iv
+                self._probe_at[node] = now + iv
+                return
+            delay = min(self.restart_backoff * (2 ** (fails - 1)),
+                        self.restart_backoff_max)
+            self._pending_restart[node] = now + delay
+
+    def _run_due_restarts(self) -> None:
+        """Monitor-loop tail: execute scheduled restarts and half-open
+        probes that have come due (restarts never run inline on the death
+        announcement path any more)."""
+        now = time.monotonic()
+        with self._lock:
+            due = [n for n, t in self._pending_restart.items() if t <= now]
+            for n in due:
+                del self._pending_restart[n]
+            probes = [n for n, t in self._probe_at.items() if t <= now]
+            for n in probes:
+                del self._probe_at[n]
+        for node in due + probes:
+            with self._lock:
+                skip = (self._closed or node in self._removing
+                        or node not in self._workers)
+            if skip:
+                continue
+            probing = node in self._quarantined
             try:
                 self.restart(node)
-            except Exception:  # noqa: BLE001
+                if probing:
+                    self.domain.ping(node, node, timeout=5.0)
+            except Exception:  # noqa: BLE001 — the respawn (or probe ping)
+                # failed: count it as another consecutive failure
                 import traceback
 
                 traceback.print_exc()
+                if probing:
+                    with self._lock:
+                        iv = min(self._probe_iv.get(
+                            node, self.quarantine_probe) * 2, 60.0)
+                        self._probe_iv[node] = iv
+                        self._probe_at[node] = time.monotonic() + iv
+                else:
+                    self._schedule_restart(node)
+                continue
+            with self._lock:
+                # the worker came back (and, if probing, answered a ping):
+                # close the breaker — but keep the failure timestamp, so an
+                # immediate re-crash lands back in the window
+                self._quarantined.discard(node)
+                self._restart_fails[node] = 0
+                self._probe_iv.pop(node, None)
+
+    def is_quarantined(self, node: int) -> bool:
+        with self._lock:
+            return node in self._quarantined
+
+    def readmit(self, node: int) -> None:
+        """Operator override: clear a node's quarantine and restart it now
+        (the breaker re-arms — it is not a permanent exemption)."""
+        with self._lock:
+            self._quarantined.discard(node)
+            self._restart_fails[node] = 0
+            self._probe_at.pop(node, None)
+            self._probe_iv.pop(node, None)
+        if self.is_alive(node):
+            return
+        self.restart(node)
 
     def kill(self, node: int) -> None:
         """Fault injection: hard-stop a worker (no goodbye on the wire)."""
@@ -740,6 +874,139 @@ class ClusterPool:
                     import traceback
 
                     traceback.print_exc()
+
+    # -- durable directory: gossip fan-out + host crash recovery ------------
+    # (protocol in repro.offload.dataplane, "Directory gossip" section)
+
+    @staticmethod
+    def _gossip_entry(handle: int, rec) -> list:
+        """Wire form of one directory record (``_ham/dir_gossip`` /
+        ``_ham/dir_dump`` share it): ``[handle, primary, replicas, epoch,
+        nbytes, shape, dtype, session]``; ``primary = -1`` is a tombstone."""
+        if rec is None:
+            return [int(handle), -1, [], 0, 0, [], "", None]
+        return [int(rec.handle), int(rec.primary),
+                [int(r) for r in rec.replicas], int(rec.epoch),
+                int(rec.nbytes), [int(d) for d in rec.shape],
+                str(rec.dtype), rec.session]
+
+    def _gossip_change(self, handle: int, rec, holders) -> None:
+        """Directory-journal subscriber: push the updated record to every
+        live worker named in ``holders`` as a best-effort ``_ham/dir_gossip``
+        oneway (a lost gossip frame degrades recovery, never correctness —
+        the dataplane module docs state the guarantee)."""
+        if getattr(self, "_closed", False):
+            return
+        entry = self._gossip_entry(handle, rec)
+        me = self.host.node_id
+        for node in holders:
+            if node == me or not self.is_alive(node):
+                continue
+            try:
+                self.domain.oneway(node, f2f(
+                    "_ham/dir_gossip", [entry],
+                    registry=self.domain.registry,
+                ))
+            except Exception:  # noqa: BLE001 — best-effort journal
+                pass
+
+    def restart_host(self, timeout: float = 30.0) -> dict:
+        """Crash-recover the HOST in place (the last unprotected failure
+        domain — workers got this in PR 5).
+
+        The host runtime is torn down — every outstanding future fails with
+        :class:`NodeDownError`, exactly what a real crash does to callers —
+        and a fresh :class:`NodeRuntime` starts on the SAME endpoint with a
+        fresh future table and msg_id space.  The :class:`BufferDirectory`
+        is rebuilt by sync-calling ``_ham/dir_dump`` on every survivor and
+        merging the shards: highest epoch wins, ties prefer the dumper that
+        is its own primary; an entry whose primary did not survive promotes
+        onto its lowest live replica (epoch bump — the crash-promotion
+        rule); an entry with no live holder counts ``lost``.  Finally every
+        survivor's replay cache is flushed (``_ham/replay_ack`` with a
+        max sentinel): the new host's msg_id counter restarts at 1, so a
+        cached reply keyed by an old id could otherwise alias a new call.
+
+        Schedulers bound to the old host runtime must be recreated after
+        this returns (their future table and credit state died with it).
+        Returns ``{"recovered": n, "lost": m, "seconds": s}``.
+        """
+        t0 = time.monotonic()
+        with self._resize_lock:
+            old = self.host
+            host_node = old.node_id
+            old.stop(2.0)  # fails outstanding futures; endpoint stays open
+            new = NodeRuntime(host_node, old.endpoint, self.domain._table)
+            new.start()
+            self.host = new
+            self.domain.host = new
+            self.domain._inproc[host_node] = new
+            survivors = self.live_nodes()
+            # merge the survivors' shards (docstring: epoch-max, dumper-is-
+            # primary tiebreak — a node serving a buffer has the freshest
+            # view of it)
+            best: dict[int, tuple] = {}
+            for node in survivors:
+                try:
+                    entries = self.domain.sync(
+                        node,
+                        f2f("_ham/dir_dump", registry=self.domain.registry),
+                        timeout,
+                    )
+                except Exception:  # noqa: BLE001 — a survivor dying during
+                    # recovery just shrinks the merge set
+                    continue
+                for e in entries:
+                    h, p = int(e[0]), int(e[1])
+                    rank = (int(e[3]), 1 if p == node else 0)
+                    cur = best.get(h)
+                    if cur is None or rank > cur[0]:
+                        best[h] = (rank, e)
+            live = set(survivors)
+            records: list[BufferRecord] = []
+            promoted: list[BufferRecord] = []
+            lost_map: dict[int, str] = {}
+            for h, (_rank, e) in sorted(best.items()):
+                _, p, reps, epoch, nbytes, shape, dtype, session = e
+                p, epoch = int(p), int(epoch)
+                reps = sorted({int(r) for r in reps} & live - {p})
+                was_promoted = False
+                if p not in live:
+                    if not reps:
+                        lost_map[h] = "no holder survived the host crash"
+                        continue
+                    p = reps.pop(0)  # lowest live replica, as on_node_death
+                    epoch += 1
+                    was_promoted = True
+                rec = BufferRecord(
+                    handle=h, primary=p, replicas=tuple(reps), epoch=epoch,
+                    nbytes=int(nbytes), shape=tuple(int(d) for d in shape),
+                    dtype=str(dtype), session=session,
+                )
+                records.append(rec)
+                if was_promoted:
+                    promoted.append(rec)
+            directory = BufferDirectory()
+            directory.install(records, lost=lost_map)
+            directory.on_change(self._gossip_change)
+            self.directory = directory
+            new.buffer_directory = directory
+            # push the rebuild-time promotions back out (install itself does
+            # not re-gossip — but these entries CHANGED during the merge)
+            for rec in promoted:
+                self._gossip_change(rec.handle, rec, rec.holders)
+            # flush worker replay caches: the old host's msg_id space is
+            # dead, and the new counter would alias its low ids
+            for node in survivors:
+                try:
+                    self.domain.oneway(node, f2f(
+                        "_ham/replay_ack", host_node, ReplayCache.FLUSH,
+                        registry=self.domain.registry,
+                    ))
+                except Exception:  # noqa: BLE001 — the FIFO cap still bounds
+                    pass
+            return {"recovered": len(records), "lost": len(lost_map),
+                    "seconds": time.monotonic() - t0}
 
     def _migrate_off(self, node: int, timeout: float = 30.0) -> None:
         """Lossless-shrink half of ``remove_node(drain=True)``: move every

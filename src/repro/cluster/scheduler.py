@@ -136,6 +136,33 @@ table* — popping the table entry, so a straggler reply from a restarted
 node id is dropped rather than resurrecting a failed future — and (3)
 routes subsequent submits to the survivors.  On restart the node rejoins
 with a fresh credit pool.
+
+Deadlines, retries and exactly-once replay (docs/failure-model.md)
+------------------------------------------------------------------
+
+``deadline=`` (per attempt, seconds) arms a watchdog for every submit: a
+call whose reply has not arrived when its attempt expires is either
+**retransmitted** (up to ``retries=`` times, attempt timeouts growing by
+``retry_backoff=`` per attempt and capped at ``retry_cap=`` seconds) or
+**failed** with an :class:`OffloadError` diagnosis — never silently
+stranded.  Both knobs have per-call overrides on :meth:`submit`.
+
+A retransmission reuses the SAME ``msg_id`` toward the SAME worker and
+carries ``FLAG_RETRYABLE`` (as did the first attempt), so the worker's
+:class:`~repro.offload.runtime.ReplayCache` can dedup: a duplicate of a
+call still executing is dropped, a duplicate of a completed call gets the
+cached reply resent — mutating handlers execute exactly once no matter how
+many attempts the fabric forced.  Rerouting a retry to a *different*
+worker would break that guarantee, so retries are target-sticky; a worker
+death while attempts remain fails the call through the normal death path.
+The watchdog also piggybacks cumulative ``_ham/replay_ack`` oneways (the
+highest msg_id below every outstanding retryable call) so workers can
+evict cached replies that can no longer be asked for.  Retryable calls
+bypass small-call fusion — a fused segment cannot be retransmitted alone.
+
+Fault-free cost: calls submitted without a deadline skip all of this
+(no tracking entry, no flag bits, no watchdog thread until the first
+deadlined submit).
 """
 
 from __future__ import annotations
@@ -144,9 +171,10 @@ import threading
 from typing import Iterable
 
 from repro.core import migratable as mig
-from repro.core.closure import Function
+from repro.core.closure import Function, f2f
 from repro.core.errors import NodeDownError, OffloadError
 from repro.core.future import Future, as_completed, gather
+from repro.core.message import FLAG_RETRYABLE
 from repro.cluster.pool import ClusterPool
 from repro.cluster.sessions import SessionRouter
 from repro.offload.runtime import FUSE_THRESHOLD
@@ -170,6 +198,10 @@ class Scheduler:
         fuse_window: float | None = None,
         fuse_max: int = 16,
         fuse_adaptive: bool = True,
+        deadline: float | None = None,
+        retries: int = 0,
+        retry_backoff: float = 2.0,
+        retry_cap: float = 8.0,
     ):
         if policy not in POLICIES:
             raise OffloadError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -178,6 +210,19 @@ class Scheduler:
         self.policy = policy
         self.max_inflight = int(max_inflight)
         self.submit_timeout = submit_timeout
+        # -- deadline / retry defaults (module docs) -----------------------
+        self.deadline = deadline
+        self.retries = int(retries)
+        self.retry_backoff = float(retry_backoff)
+        self.retry_cap = float(retry_cap)
+        #: msg_id -> [node, function, expires, attempts_left, timeout, retryable]
+        self._tracked: dict[int, list] = {}
+        #: per-node replay-ack state: [last_acked_upto, last_sent_monotonic]
+        self._ack_state: dict[int, list] = {}
+        #: per-node highest COMPLETED retryable msg_id (ack high-water mark)
+        self._retry_hwm: dict[int, int] = {}
+        self._watchdog: threading.Thread | None = None
+        self._watchdog_stop = threading.Event()
         self._lock = threading.Lock()
         #: the pool's location-transparent buffer namespace (module docs);
         #: None only for pool-likes that predate the directory
@@ -217,6 +262,9 @@ class Scheduler:
             "locality_hits": 0,
             "session_routed": 0,
             "fused_calls": 0,
+            "retries": 0,
+            "deadline_failed": 0,
+            "replay_acks": 0,
             "routed": {n: 0 for n in pool.worker_nodes},
         }
         #: sticky-session affinity over this scheduler's live set
@@ -290,7 +338,8 @@ class Scheduler:
             return min(candidates, key=lambda n: (self._load(n), n))
 
     def submit(self, function: Function, *, node: int | None = None,
-               session=None) -> Future:
+               session=None, deadline: float | None = None,
+               retries: int | None = None) -> Future:
         """Route ``function`` to a worker and return its future.
 
         ``node=`` pins the target (raises :class:`NodeDownError` if it is
@@ -300,6 +349,14 @@ class Scheduler:
         session's lifetime, re-placed only if that worker leaves the live
         set.  Blocks for a credit when the target is saturated;
         :class:`OffloadError` after ``submit_timeout``.
+
+        ``deadline=`` / ``retries=`` override the scheduler-wide defaults
+        for this call (module docs: Deadlines, retries and exactly-once
+        replay).  A deadlined call whose reply never arrives is
+        retransmitted up to ``retries`` times (same msg_id, same worker,
+        ``FLAG_RETRYABLE`` — the worker's replay cache keeps mutating
+        handlers exactly-once), then failed with an OffloadError diagnosis
+        instead of stranding its future.
 
         A *pinned* submit waits on its node's credit for the whole timeout
         (that node is the request).  A *policy-routed* submit must not get
@@ -313,7 +370,15 @@ class Scheduler:
 
         if node is not None and session is not None:
             raise OffloadError("submit takes node= or session=, not both")
-        deadline = (
+        call_deadline = self.deadline if deadline is None else deadline
+        call_retries = self.retries if retries is None else int(retries)
+        # the flag rides EVERY attempt including the first: the worker must
+        # enter the call into its replay cache before any duplicate can land
+        extra_flags = (
+            FLAG_RETRYABLE
+            if call_deadline is not None and call_retries > 0 else 0
+        )
+        bp_deadline = (
             None if self.submit_timeout is None
             else time.monotonic() + self.submit_timeout
         )
@@ -349,7 +414,8 @@ class Scheduler:
             if sem is None:
                 continue  # node retired between route and credit lookup
             remaining = (
-                None if deadline is None else max(0.0, deadline - time.monotonic())
+                None if bp_deadline is None
+                else max(0.0, bp_deadline - time.monotonic())
             )
             if node is None:
                 # policy AND session submits wait in slices: a session stays
@@ -363,7 +429,7 @@ class Scheduler:
             else:
                 acquired = sem.acquire()
             if not acquired:
-                if deadline is None or time.monotonic() < deadline:
+                if bp_deadline is None or time.monotonic() < bp_deadline:
                     continue  # slice expired: re-pick with fresh queue state
                 raise OffloadError(
                     f"backpressure timeout: worker {target} held "
@@ -395,7 +461,14 @@ class Scheduler:
             sem.release()
             if node is not None:
                 raise NodeDownError(f"worker {node} is down")
-        if self.fuse_window is not None and self._fusible(function):
+        if call_deadline is not None:
+            # armed BEFORE the send so a reply can never race an untracked
+            # call; a reply that beats the insert is reconciled by _on_done's
+            # pop (and the watchdog's discard() losing to the resolve)
+            self._track(msg_id, target, function, call_deadline,
+                        call_retries, bool(extra_flags))
+        if self.fuse_window is not None and not extra_flags \
+                and self._fusible(function):
             # park for fusion: the credit/in-flight reservation above holds,
             # the done-callback is registered NOW (a death or a failed fused
             # send rejects the future, which releases the credit), and the
@@ -424,9 +497,9 @@ class Scheduler:
             # against the flusher thread and concurrent submitters
             with self._send_lock(target):
                 self._pop_and_send(target)
-                self._send_single(target, function, msg_id, sem)
+                self._send_single(target, function, msg_id, sem, extra_flags)
         else:
-            self._send_single(target, function, msg_id, sem)
+            self._send_single(target, function, msg_id, sem, extra_flags)
         # registered after the send: if a death handler already rejected
         # the future, the callback runs immediately and returns the credit
         fut.add_done_callback(lambda f, n=target: self._on_done(n, f))
@@ -464,9 +537,9 @@ class Scheduler:
             release(key)
 
     def _send_single(self, target: int, function: Function, msg_id: int,
-                     sem) -> None:
+                     sem, extra_flags: int = 0) -> None:
         try:
-            self.host._send_request(target, function, msg_id)
+            self.host._send_request(target, function, msg_id, extra_flags)
         except Exception:
             # the frame never left: withdraw the reservation.  If a death
             # handler raced us it already rejected the future (discard is
@@ -475,9 +548,113 @@ class Scheduler:
                 d = self._inflight.get(target)
                 if d is not None:
                     d.pop(msg_id, None)
+                self._tracked.pop(msg_id, None)
             self.host.futures.discard(msg_id)
             sem.release()
             raise
+
+    # -- deadlines / retries (module docs) ----------------------------------
+
+    def _track(self, msg_id: int, node: int, function: Function,
+               timeout: float, retries: int, retryable: bool) -> None:
+        """Arm the watchdog for one call.  Entry layout:
+        ``[node, function, expires, attempts_left, attempt_timeout,
+        retryable]`` — mutated in place by the watchdog on retransmit."""
+        import time
+
+        entry = [node, function, time.monotonic() + float(timeout),
+                 int(retries), float(timeout), retryable]
+        with self._lock:
+            self._tracked[msg_id] = entry
+            if self._watchdog is None:
+                self._watchdog = threading.Thread(
+                    target=self._watchdog_loop, name="ham-sched-watchdog",
+                    daemon=True,
+                )
+                self._watchdog.start()
+
+    def _watchdog_loop(self) -> None:
+        import time
+
+        while not self._watchdog_stop.wait(0.02):
+            now = time.monotonic()
+            with self._lock:
+                expired = [
+                    (msg_id, e) for msg_id, e in self._tracked.items()
+                    if e[2] <= now
+                ]
+            for msg_id, e in expired:
+                node = e[0]
+                if e[5] and e[3] > 0 and self._is_live(node):
+                    with self._lock:
+                        if self._tracked.get(msg_id) is not e:
+                            continue  # completed while we scanned
+                        e[3] -= 1
+                        # capped exponential backoff on the attempt timeout
+                        e[4] = min(e[4] * self.retry_backoff, self.retry_cap)
+                        e[2] = time.monotonic() + e[4]
+                    try:
+                        # same msg_id, same worker, FLAG_RETRYABLE: the
+                        # replay cache makes this exactly-once (module docs)
+                        self.host._send_request(node, e[1], msg_id,
+                                                FLAG_RETRYABLE)
+                        self.stats["retries"] += 1
+                    except Exception:  # noqa: BLE001 — transport refused the
+                        # retransmit (peer fenced/partitioned): fail now, the
+                        # remaining attempts could not leave either
+                        self._fail_tracked(msg_id, e, "retransmit failed")
+                else:
+                    self._fail_tracked(msg_id, e, "deadline exhausted")
+            self._send_replay_acks(now)
+
+    def _fail_tracked(self, msg_id: int, entry: list, why: str) -> None:
+        node, function = entry[0], entry[1]
+        with self._lock:
+            if self._tracked.get(msg_id) is not entry:
+                return
+            del self._tracked[msg_id]
+            fut = self._inflight.get(node, {}).get(msg_id)
+        # discard() pops the table entry: winning this race means no reply
+        # can resolve the future behind us AND a straggler reply is dropped
+        if fut is not None and self.host.futures.discard(msg_id):
+            self.stats["deadline_failed"] += 1
+            fut.set_exception(OffloadError(
+                f"call {function.record.stable_name!r} to worker {node} "
+                f"{why}: no reply within {entry[4]:.3g}s (attempts "
+                f"exhausted).  The worker may be overloaded, partitioned, "
+                f"or its reply was lost — delivery guarantees per path are "
+                f"in docs/failure-model.md"
+            ))
+
+    def _send_replay_acks(self, now: float) -> None:
+        """Piggybacked cumulative acks: tell each worker the highest msg_id
+        below every outstanding retryable call — its replay cache can evict
+        everything at or below.  Best-effort oneways, at most ~1/s/worker
+        (the cache's FIFO cap bounds memory even if these never arrive)."""
+        domain = getattr(self.pool, "domain", None)
+        if domain is None:
+            return
+        pending = []
+        with self._lock:
+            floor: dict[int, int] = {}
+            for msg_id, e in self._tracked.items():
+                if e[5] and (e[0] not in floor or msg_id < floor[e[0]]):
+                    floor[e[0]] = msg_id
+            for node, hwm in self._retry_hwm.items():
+                upto = hwm if node not in floor else min(floor[node] - 1, hwm)
+                st = self._ack_state.setdefault(node, [0, 0.0])
+                if upto > st[0] and now - st[1] >= 1.0 and node in self._live:
+                    st[0], st[1] = upto, now
+                    pending.append((node, upto))
+        for node, upto in pending:
+            try:
+                domain.oneway(node, f2f(
+                    "_ham/replay_ack", self.host.node_id, upto,
+                    registry=domain.registry,
+                ))
+                self.stats["replay_acks"] += 1
+            except Exception:  # noqa: BLE001 — ack loss only delays eviction
+                pass
 
     # -- small-call fusion (module docs) -----------------------------------
 
@@ -533,12 +710,17 @@ class Scheduler:
             self.flush()
 
     def close(self) -> None:
-        """Stop the fusion flusher and ship any parked calls.  Idempotent;
-        only needed when the scheduler was built with ``fuse_window=``."""
+        """Stop the fusion flusher and deadline watchdog, and ship any
+        parked calls.  Idempotent; only needed when the scheduler was built
+        with ``fuse_window=`` or has submitted deadlined calls."""
         self._fuse_stop.set()
         if self._fuse_thread is not None:
             self._fuse_thread.join(timeout=2.0)
             self._fuse_thread = None
+        self._watchdog_stop.set()
+        if self._watchdog is not None:
+            self._watchdog.join(timeout=2.0)
+            self._watchdog = None
         self.flush()
 
     def map(self, functions: Iterable[Function]) -> list[Future]:
@@ -575,6 +757,12 @@ class Scheduler:
             d = self._inflight.get(node)
             if d is not None:
                 d.pop(fut.msg_id, None)
+            entry = self._tracked.pop(fut.msg_id, None)
+            if entry is not None and entry[5] \
+                    and fut.msg_id > self._retry_hwm.get(node, 0):
+                # completed retryable call: raise the replay-ack HWM so the
+                # worker's cached reply for it becomes evictable
+                self._retry_hwm[node] = fut.msg_id
             sem = self._credits.get(node)
             self.stats["completed"] += 1
         if sem is not None:

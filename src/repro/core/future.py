@@ -21,13 +21,26 @@ import threading
 import time
 from typing import Any, Callable, Iterable, Iterator
 
-from repro.core.errors import RemoteExecutionError
+from repro.core.errors import OffloadError, RemoteExecutionError
+
+_UNSET = object()  # "use the default" sentinel (None must keep meaning forever)
 
 
 class Future:
-    """Single-assignment result container with blocking ``get``."""
+    """Single-assignment result container with blocking ``get``.
+
+    Two wait surfaces: :meth:`get` (``timeout=None`` waits forever — the
+    paper's blocking semantics, raises ``TimeoutError`` on expiry) and
+    :meth:`result`, which defaults to :attr:`default_timeout` and raises an
+    :class:`OffloadError` *diagnosis* instead of blocking forever on a lost
+    reply — the failure-model surface (docs/failure-model.md).
+    """
 
     __slots__ = ("_event", "_result", "_error", "_callbacks", "_lock", "msg_id")
+
+    #: class-wide default for :meth:`result` (seconds; None = wait forever).
+    #: Assign ``Future.default_timeout = ...`` to retune a whole process.
+    default_timeout: float | None = 60.0
 
     def __init__(self):
         self._event = threading.Event()
@@ -74,6 +87,26 @@ class Future:
         if self._error is not None:
             raise self._error
         return self._result
+
+    def result(self, timeout=_UNSET):
+        """Like :meth:`get`, but bounded by default: waits at most
+        ``timeout`` (omitted => :attr:`default_timeout`; ``None`` = forever)
+        and expiry raises an :class:`OffloadError` diagnosis — a lost reply
+        surfaces as an explained failure, not an eternal block.  The future
+        stays pending: a late reply can still resolve it."""
+        if timeout is _UNSET:
+            timeout = self.default_timeout
+        if self._event.wait(timeout):
+            if self._error is not None:
+                raise self._error
+            return self._result
+        raise OffloadError(
+            f"no reply within {timeout}s (msg_id {self.msg_id}): the call "
+            "may still be executing, its reply may be lost, or the worker "
+            "may be partitioned.  Submit with a deadline/retries through "
+            "the scheduler for at-least-a-diagnosis semantics — delivery "
+            "guarantees per path are in docs/failure-model.md"
+        )
 
     def exception(self) -> BaseException | None:
         """The stored error of a completed future (None while pending/ok)."""

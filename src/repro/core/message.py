@@ -12,7 +12,9 @@ Header layout (32 bytes, little-endian):
     u32  magic        0x48414D58  ("HAMX")
     u16  version      wire protocol version
     u16  flags        bit0 REPLY, bit1 ERROR, bit2 DYNAMIC payload,
-                      bit3 STATIC (plan-packed) payload, bit4 FUSED frame
+                      bit3 STATIC (plan-packed) payload, bit4 FUSED frame,
+                      bit5 RETRYABLE (sender may retransmit; receiver must
+                      dedup via its replay cache — docs/failure-model.md)
     u32  key          global handler key (sorted-registry index)
     u32  src_node     sender node id (for replies / reverse offload)
     u64  msg_id       correlates replies with futures
@@ -96,6 +98,11 @@ FLAG_ERROR = 1 << 1
 FLAG_DYNAMIC = 1 << 2
 FLAG_STATIC = 1 << 3   # plan-packed payload (repro.core.wireplan)
 FLAG_FUSED = 1 << 4    # multi-call frame: count word + segments
+#: request may be retransmitted by the sender (scheduler deadline/retry
+#: path): the receiver must dedup on (src_node, msg_id) through its replay
+#: cache and resend the cached reply instead of re-executing — the
+#: exactly-once contract of docs/failure-model.md.  Meaningless on replies.
+FLAG_RETRYABLE = 1 << 5
 
 #: fused-frame segment header: key, flags, msg_id, payload_len
 SEG_STRUCT = struct.Struct("<IHQI")

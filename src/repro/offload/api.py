@@ -24,7 +24,7 @@ from repro.comm.local import LocalFabric
 from repro.core.closure import Function, f2f
 from repro.core.errors import OffloadError
 from repro.core.executor import DirectPolicy
-from repro.core.future import Future, as_completed, gather
+from repro.core.future import _UNSET, Future, as_completed, gather
 from repro.core.message import encode_frame, FLAG_DYNAMIC, FLAG_STATIC
 from repro.core.registry import default_registry
 from repro.offload.buffer import BufferPtr
@@ -48,9 +48,14 @@ class OffloadDomain:
         inline_host: bool = False,
         policy_factory=DirectPolicy,
         direct_data_plane: bool = True,
+        default_timeout: float | None = 30.0,
     ):
         self.fabric = fabric
         self.host_node = host_node
+        #: default deadline for the blocking surface (sync/ping/barrier):
+        #: a lost reply raises a diagnosis instead of blocking forever
+        #: (docs/failure-model.md).  ``None`` = wait forever.
+        self.default_timeout = default_timeout
         self.registry = registry or default_registry()
         table = self.registry.table  # must be init()ed by caller (paper §5.2)
         self.host = NodeRuntime(
@@ -112,7 +117,11 @@ class OffloadDomain:
         """``offload::async`` — returns a future for the remote result."""
         return self.host.send_async(node, function)
 
-    def sync(self, node: int, function: Function, timeout: float | None = 30.0):
+    def sync(self, node: int, function: Function, timeout=_UNSET):
+        """Blocking call; ``timeout`` omitted => :attr:`default_timeout`
+        (``None`` = wait forever)."""
+        if timeout is _UNSET:
+            timeout = self.default_timeout
         return self.host.send_sync(node, function, timeout)
 
     def oneway(self, node: int, function: Function) -> None:
@@ -264,11 +273,16 @@ class OffloadDomain:
 
     # -- control ------------------------------------------------------------------
 
-    def ping(self, node: int, token: int = 0, timeout: float = 10.0):
+    def ping(self, node: int, token: int = 0, timeout=_UNSET):
+        if timeout is _UNSET:
+            timeout = (10.0 if self.default_timeout is None
+                       else min(10.0, self.default_timeout))
         return self.sync(node, f2f("_ham/ping", int(token),
                                    registry=self.registry), timeout)
 
-    def barrier(self, timeout: float = 30.0) -> None:
+    def barrier(self, timeout=_UNSET) -> None:
+        if timeout is _UNSET:
+            timeout = self.default_timeout
         futs = [
             self.async_(n, f2f("_ham/ping", 0, registry=self.registry))
             for n in self.targets()

@@ -61,6 +61,40 @@ retarget them at any live holder it routes to), so handler code and the
 per-node :class:`~repro.offload.buffer.BufferRegistry` keep the paper's
 strict own-address-space dereference rule.
 
+Directory gossip / durable directory (host crash recovery)
+----------------------------------------------------------
+
+The directory is host-side state — and PR 5 made every *worker* crash
+recoverable, which left the host as the last unprotected failure domain: a
+host crash used to take the placement map (and with it every tracked
+buffer) down even though the bytes were still sitting in worker memory.
+The durable-directory protocol journals the map to its own data:
+
+* **Journal (gossip-out)**: every directory mutation fires ``on_change``
+  hooks outside the lock; the pool subscribes and pushes the updated record
+  to each *holder* of the buffer as a ``_ham/dir_gossip`` oneway.  A worker
+  keeps only the shard of directory state for buffers it holds
+  (``NodeRuntime.dir_shard``) — per-worker memory is proportional to the
+  worker's own data, not the cluster's.  Entries are installed
+  epoch-monotonically (``>=`` — holder-set changes do not bump epochs, and
+  per-link FIFO orders same-epoch updates); a tombstone (``primary < 0``,
+  sent on free/lost) or an entry that no longer names the worker as holder
+  deletes the shard entry.
+* **Rebuild (gossip-in)**: ``ClusterPool.restart_host`` replaces the host
+  runtime, then sync-calls ``_ham/dir_dump`` on every survivor and merges
+  the shards — highest epoch wins, ties prefer the entry whose dumper is
+  its own primary (a holder always has the freshest view of a buffer it
+  serves).  An entry whose primary did not survive promotes onto its
+  lowest live replica (epoch + 1, exactly the crash-promotion rule); an
+  entry with no live holder is recorded lost.  The merged set is
+  :meth:`BufferDirectory.install`-ed into a fresh directory without
+  re-firing the hooks (the state *came from* the shards).
+* **Guarantee**: gossip oneways are best-effort, but a lost gossip frame
+  can only lose *metadata newer than the bytes' placement changed* — and
+  placement changes are host-driven, so the host that crashed was the only
+  writer.  Any buffer whose holders survive the host crash is recoverable;
+  ``BENCH_cluster.json`` ``recovery.host_restart`` asserts ``lost = 0``.
+
 Read-only routing contract (what keeps copies from diverging)
 -------------------------------------------------------------
 
@@ -129,6 +163,9 @@ class BufferDirectory:
         self._records: dict[int, BufferRecord] = {}
         self._lost: dict[int, str] = {}  # handle -> why
         self._repin_hooks: list[Callable[[Hashable, int], None]] = []
+        #: gossip journal subscribers (module docs, durable directory):
+        #: cb(handle, record_snapshot_or_None, holders_to_notify)
+        self._change_hooks: list[Callable] = []
         self.stats = {"promoted": 0, "lost": 0, "migrated": 0,
                       "backfilled": 0, "stale_resolved": 0, "freed": 0}
 
@@ -144,10 +181,45 @@ class BufferDirectory:
         )
         with self._lock:
             self._records[ptr.handle] = rec
+        self._fire_change(ptr.handle, rec, rec.holders)
         return rec.ptr()
 
     def on_repin(self, cb: Callable[[Hashable, int], None]) -> None:
         self._repin_hooks.append(cb)
+
+    def on_change(self, cb: Callable) -> None:
+        """Subscribe to the directory journal: ``cb(handle, record, holders)``
+        after every mutation, OUTSIDE the lock — ``record`` is a snapshot
+        (None = the buffer is gone: freed or lost) and ``holders`` names the
+        nodes whose gossip shard the change concerns (for a tombstone, the
+        *previous* holders).  The pool's gossip fan-out subscribes here."""
+        self._change_hooks.append(cb)
+
+    def _fire_change(self, handle: int, rec: BufferRecord | None,
+                     holders) -> None:
+        if not self._change_hooks:
+            return
+        snap = None if rec is None else dataclasses.replace(rec)
+        for cb in self._change_hooks:
+            try:
+                cb(int(handle), snap, tuple(holders))
+            except Exception:  # noqa: BLE001 — a bad journal subscriber must
+                # not block the mutation (gossip is best-effort by contract)
+                import traceback
+
+                traceback.print_exc()
+
+    def install(self, records, lost: dict[int, str] | None = None) -> None:
+        """Bulk-install ``records`` (host-crash rebuild from worker shards —
+        module docs): replaces the tracked set; ``lost`` maps handles that
+        did not survive to their diagnosis (resolves raise it).  Does NOT
+        fire change hooks: the installed state came *from* the shards,
+        re-gossiping it would be a no-op round trip."""
+        with self._lock:
+            self._records = {int(r.handle): r for r in records}
+            if lost:
+                self._lost.update({int(h): str(w) for h, w in lost.items()})
+                self.stats["lost"] += len(lost)
 
     # -- lookup / resolution -----------------------------------------------
 
@@ -272,6 +344,7 @@ class BufferDirectory:
 
     def set_primary(self, handle: int, node: int) -> BufferPtr:
         """Move a buffer's primary (drain migration); bumps the epoch."""
+        changed = False
         with self._lock:
             rec = self._records[int(handle)]
             if node != rec.primary:
@@ -280,31 +353,48 @@ class BufferDirectory:
                 )
                 rec.primary, rec.epoch = int(node), rec.epoch + 1
                 self.stats["migrated"] += 1
-            return rec.ptr()
+                changed = True
+            ptr = rec.ptr()
+        if changed:
+            self._fire_change(handle, rec, rec.holders)
+        return ptr
 
     def remove_replica(self, handle: int, node: int) -> None:
         """Forget one replica (its copy failed to update or its node is
         unreachable): a holder that may be stale must never be promoted."""
+        changed = False
         with self._lock:
             rec = self._records.get(int(handle))
             if rec is not None and node in rec.replicas:
                 rec.replicas = tuple(r for r in rec.replicas if r != node)
+                changed = True
+        if changed:
+            # the dropped holder is notified too: its shard entry must go
+            self._fire_change(handle, rec, (*rec.holders, int(node)))
 
     def add_replica(self, handle: int, node: int) -> None:
+        changed = False
         with self._lock:
             rec = self._records.get(int(handle))
             if rec is not None and node != rec.primary \
                     and node not in rec.replicas:
                 rec.replicas = (*rec.replicas, int(node))
                 self.stats["backfilled"] += 1
+                changed = True
+        if changed:
+            self._fire_change(handle, rec, rec.holders)
 
     def detach_node(self, node: int) -> None:
         """Forget ``node`` as a holder everywhere (it left cleanly; its
         primaries must already have been migrated off)."""
+        touched = []
         with self._lock:
             for rec in self._records.values():
                 if node in rec.replicas:
                     rec.replicas = tuple(r for r in rec.replicas if r != node)
+                    touched.append(rec)
+        for rec in touched:
+            self._fire_change(rec.handle, rec, rec.holders)
 
     def primaries_on(self, node: int) -> list[BufferRecord]:
         with self._lock:
@@ -334,6 +424,7 @@ class BufferDirectory:
         class docs) after the lock is released."""
         moved: dict[int, int] = {}
         sessions: set = set()
+        touched: list = []  # (handle, rec_or_None, holders_to_notify)
         with self._lock:
             for handle, rec in list(self._records.items()):
                 if rec.primary == node:
@@ -346,14 +437,19 @@ class BufferDirectory:
                         rec.epoch += 1
                         moved[handle] = rec.primary
                         self.stats["promoted"] += 1
+                        touched.append((handle, rec, rec.holders))
                         if rec.session is not None:
                             sessions.add(rec.session)
                     else:
                         del self._records[handle]
                         self._lost[handle] = f"primary node {node} died"
                         self.stats["lost"] += 1
+                        touched.append((handle, None, ()))
                 elif node in rec.replicas:
                     rec.replicas = tuple(r for r in rec.replicas if r != node)
+                    touched.append((handle, rec, rec.holders))
+        for handle, rec, holders in touched:
+            self._fire_change(handle, rec, holders)
         for key in sessions:
             self._fire_repin(key)
         return moved
@@ -365,6 +461,8 @@ class BufferDirectory:
             rec = self._records.get(int(handle))
             if rec is not None:
                 rec.session = session
+        if rec is not None:
+            self._fire_change(handle, rec, rec.holders)
 
     def session_records(self, session: Hashable) -> list[BufferRecord]:
         with self._lock:
@@ -414,9 +512,13 @@ class BufferDirectory:
         and later resolves raise the diagnosis instead of routing at a
         retired node."""
         with self._lock:
-            if self._records.pop(int(handle), None) is not None:
+            rec = self._records.pop(int(handle), None)
+            if rec is not None:
                 self._lost[int(handle)] = why
                 self.stats["lost"] += 1
+        if rec is not None:
+            # tombstone to the previous holders: their shard entries must go
+            self._fire_change(handle, None, rec.holders)
 
     def drop(self, handle: int) -> BufferRecord | None:
         """Forget a buffer (it is being freed); returns the final record so
@@ -425,7 +527,9 @@ class BufferDirectory:
             rec = self._records.pop(int(handle), None)
             if rec is not None:
                 self.stats["freed"] += 1
-            return rec
+        if rec is not None:
+            self._fire_change(handle, None, rec.holders)
+        return rec
 
     def live_handles(self) -> list[int]:
         with self._lock:
@@ -456,7 +560,9 @@ def _h_buf_invalidate(handle):
     race a local free; both outcomes are 'copy gone')."""
     from repro.offload.runtime import current_node
 
-    return current_node().buffers.discard(int(handle))
+    node = current_node()
+    node.dir_shard.pop(int(handle), None)  # gossip hygiene: copy is gone
+    return node.buffers.discard(int(handle))
 
 
 def _h_buf_count():

@@ -73,3 +73,41 @@ _reg.register(
     name="demo/echo_small_static",
 )
 _reg.register(echo_small, name="demo/echo_small_dyn")
+
+
+# -- chaos-suite probes (tests/test_chaos.py; docs/failure-model.md) --------
+#
+# bump is deliberately MUTATING: the per-token counter is the side-effect
+# witness for the exactly-once contract — if a retried call ever
+# re-executed, the counter total would exceed the number of logical calls.
+# Lives here (not in the test file) so fresh-interpreter socket workers
+# import it via the registered-setup-modules path like any demo handler.
+# The counter is per PROCESS: thread workers (ClusterPool.local) share one
+# — read it from any single node; process workers (shm/socket) each own
+# theirs — sum counts over the pool.
+
+_chaos_counters: dict = {}
+
+
+@_reg.handler(name="chaos/bump")
+def chaos_bump(token):
+    """Mutating probe: increment this worker's counter for ``token`` and
+    return the post-increment value.  Exactly-once under retry means every
+    logical call adds exactly 1 to the cluster-wide total."""
+    n = _chaos_counters.get(token, 0) + 1
+    _chaos_counters[token] = n
+    return int(n)
+
+
+@_reg.handler(name="chaos/counts", read_only=True)
+def chaos_counts(token):
+    """Read-only probe: this worker's counter for ``token`` (0 if never
+    bumped).  Summed across workers to assert zero double-execution."""
+    return int(_chaos_counters.get(token, 0))
+
+
+@_reg.handler(name="chaos/reset")
+def chaos_reset(token):
+    """Clear this worker's counter for ``token`` (test isolation); returns
+    the value it had."""
+    return int(_chaos_counters.pop(token, 0))

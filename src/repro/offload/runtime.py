@@ -77,6 +77,7 @@ from repro.core.message import (
     FLAG_ERROR,
     FLAG_FUSED,
     FLAG_REPLY,
+    FLAG_RETRYABLE,
     FLAG_STATIC,
     FUSED_COUNT_STRUCT,
     HEADER_NBYTES,
@@ -154,6 +155,118 @@ class _FramePool:
 _frame_pool = _FramePool()
 
 
+class ReplayCache:
+    """Exactly-once dedup for retransmitted requests (docs/failure-model.md).
+
+    Keyed by ``(src_node, msg_id)`` — msg_ids are per-sender monotonic, so
+    the pair names one logical call forever.  Entries move through three
+    states: *in progress* (first arrival is executing — a duplicate arriving
+    mid-execution on a pooled policy is dropped, the original will reply),
+    *cached* (the packed reply frame — a retransmit re-sends it instead of
+    re-executing, which is what keeps mutating handlers exactly-once under
+    retry), and *evicted*.
+
+    Memory is bounded two ways: the sender's scheduler piggybacks cumulative
+    acks (``_ham/replay_ack(src, upto)`` — every msg_id <= ``upto`` is
+    complete at the sender, so its cached reply can never be asked for
+    again), and a FIFO cap is the backstop for senders that never ack.
+    The ack watermark is also a *suppression floor*: a duplicate at or
+    below it (a retransmit reordered behind the ack that evicted its cached
+    reply) is dropped outright instead of re-executed — eviction must never
+    reopen the exactly-once window.  An ack of ``upto >= FLUSH`` announces
+    a NEW msg_id space (host restart): the cache forgets everything from
+    that sender, watermark included, so low new ids neither alias old
+    cached replies nor get floor-suppressed.
+    Only requests carrying ``FLAG_RETRYABLE`` enter the cache — the default
+    fault-free path never touches it (the <=5% hot-path overhead contract).
+    """
+
+    IN_PROGRESS = object()
+    #: ack threshold meaning "sender reset its msg_id space — flush"
+    FLUSH = 1 << 61
+
+    def __init__(self, cap: int = 4096):
+        import collections
+
+        self._lock = threading.Lock()
+        self._entries: dict[tuple[int, int], Any] = {}
+        self._order: "collections.deque[tuple[int, int]]" = collections.deque()
+        self._cap = int(cap)
+        self._acked: dict[int, int] = {}  # src -> cumulative ack watermark
+        self.stats = {"replayed": 0, "suppressed": 0, "acked": 0}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def begin(self, src: int, msg_id: int):
+        """First sight of ``(src, msg_id)`` returns None (caller executes);
+        a duplicate returns IN_PROGRESS or the cached reply frame."""
+        key = (src, msg_id)
+        with self._lock:
+            if msg_id <= self._acked.get(src, 0):
+                # already complete at the sender; its cached reply may be
+                # evicted, so executing again would break exactly-once —
+                # drop the straggler (IN_PROGRESS: no execute, no reply)
+                self.stats["suppressed"] += 1
+                return self.IN_PROGRESS
+            cur = self._entries.get(key)
+            if cur is not None:
+                # duplicate bookkeeping lives here so every dedup outcome
+                # is visible in one stats dict: suppressed = swallowed
+                # without reply (still executing), replayed = cached reply
+                # about to be re-sent by the caller
+                if cur is self.IN_PROGRESS:
+                    self.stats["suppressed"] += 1
+                else:
+                    self.stats["replayed"] += 1
+                return cur
+            self._entries[key] = self.IN_PROGRESS
+            self._order.append(key)
+            scan = 0
+            while len(self._order) > self._cap and scan < 8:
+                old = self._order.popleft()
+                entry = self._entries.get(old)
+                if entry is self.IN_PROGRESS:
+                    self._order.append(old)  # never evict a running call
+                    scan += 1
+                elif entry is not None:
+                    del self._entries[old]
+            return None
+
+    def commit(self, src: int, msg_id: int, frame: bytes) -> None:
+        """Store the packed reply frame for a call that just executed (the
+        entry may have been acked/evicted concurrently — then drop it)."""
+        key = (src, msg_id)
+        with self._lock:
+            if key in self._entries:
+                self._entries[key] = frame
+
+    def ack(self, src: int, upto: int) -> int:
+        """Cumulative ack from ``src``: every msg_id <= ``upto`` is complete
+        at the sender — evict their cached replies and raise the suppression
+        floor.  ``upto >= FLUSH`` is the msg_id-space-reset sentinel (host
+        restart): forget *everything* from ``src``, even in-progress entries
+        (their commit then no-ops) and the floor itself, so the new space's
+        low ids start clean.  ``_order`` keeps stale keys; eviction
+        tolerates them (entries.get returns None)."""
+        with self._lock:
+            if upto >= self.FLUSH:
+                dead = [k for k in self._entries if k[0] == src]
+                self._acked.pop(src, None)
+            else:
+                self._acked[src] = max(self._acked.get(src, 0), int(upto))
+                dead = [
+                    k for k, v in self._entries.items()
+                    if k[0] == src and k[1] <= upto
+                    and v is not self.IN_PROGRESS
+                ]
+            for k in dead:
+                del self._entries[k]
+            self.stats["acked"] += len(dead)
+        return len(dead)
+
+
 def _alloc_frame(nbytes: int):
     """Writable frame buffer of ``nbytes``.
 
@@ -189,6 +302,7 @@ def _h_alloc(shape, dtype):
 def _h_free(node_id, handle):
     node = current_node()
     node.buffers.free(BufferPtr(node_id, handle))
+    node.dir_shard.pop(int(handle), None)  # gossip hygiene: copy is gone
     node._announce_buffer_freed(handle)
     return None
 
@@ -231,6 +345,51 @@ def _h_terminate():
     return None
 
 
+def _h_replay_ack(src_node, upto):
+    """Cumulative replay-cache ack (oneway): every msg_id <= ``upto`` from
+    ``src_node`` is complete at the sender — its cached replies can go."""
+    current_node().replay.ack(int(src_node), int(upto))
+    return None
+
+
+def _h_dir_gossip(entries):
+    """Install directory-shard entries on this node (oneway; the gossip
+    half of the durable directory — protocol in ``offload/dataplane``).
+
+    Each entry is ``[handle, primary, replicas, epoch, nbytes, shape,
+    dtype, session]``.  Installation is epoch-monotonic (``>=`` — holder-set
+    changes do not bump the epoch, and per-link FIFO orders same-epoch
+    updates); an entry whose holder set no longer includes this node — or a
+    tombstone (``primary < 0``, the buffer was freed/lost) — drops the
+    shard entry instead.
+    """
+    node = current_node()
+    me = node.node_id
+    shard = node.dir_shard
+    for handle, primary, replicas, epoch, nbytes, shape, dtype, session in entries:
+        handle, primary, epoch = int(handle), int(primary), int(epoch)
+        replicas = [int(r) for r in replicas]
+        if primary < 0 or (me != primary and me not in replicas):
+            shard.pop(handle, None)
+            continue
+        cur = shard.get(handle)
+        if cur is None or epoch >= cur[2]:
+            shard[handle] = (primary, replicas, epoch, int(nbytes),
+                             [int(d) for d in shape], str(dtype), session)
+    return None
+
+
+def _h_dir_dump():
+    """This node's directory shard, for a restarting host's rebuild (same
+    entry layout as ``_ham/dir_gossip``).  Read-only: replica serving is
+    safe, and a rebuild may query any survivor."""
+    node = current_node()
+    return [
+        [h, p, r, e, n, s, d, sess]
+        for h, (p, r, e, n, s, d, sess) in sorted(node.dir_shard.items())
+    ]
+
+
 def register_internal_handlers(registry=None) -> None:
     reg = registry or default_registry()
     for name, fn in (
@@ -241,6 +400,9 @@ def register_internal_handlers(registry=None) -> None:
         ("_ham/ping", _h_ping),
         ("_ham/forward", _h_forward),
         ("_ham/terminate", _h_terminate),
+        ("_ham/replay_ack", _h_replay_ack),
+        ("_ham/dir_gossip", _h_dir_gossip),
+        ("_ham/dir_dump", _h_dir_dump),
     ):
         reg.register(fn, name=name)
 
@@ -291,7 +453,14 @@ class NodeRuntime:
         self._draining = False
         self._loop_tid: int | None = None
         self.stats = {"handled": 0, "replies": 0, "errors": 0, "sent": 0,
-                      "batches": 0, "fused": 0}
+                      "batches": 0, "fused": 0, "replayed": 0}
+        #: exactly-once dedup of FLAG_RETRYABLE requests (docs/failure-model.md)
+        self.replay = ReplayCache()
+        #: this node's shard of the cluster BufferDirectory — entries for
+        #: buffers this node holds, installed by _ham/dir_gossip oneways and
+        #: dumped to a restarting host via _ham/dir_dump (see
+        #: repro.offload.dataplane for the protocol)
+        self.dir_shard: dict[int, tuple] = {}
         # -- queue-depth feedback (scheduler's remote-load signal) ---------
         #: last depth reported BY each peer via _cluster/stats oneways
         #: (populated on the node peers report to — normally the host)
@@ -509,25 +678,27 @@ class NodeRuntime:
         self.stats["fused"] += len(frames)
         return fused
 
-    def _send_request(self, dst: int, function: Function, msg_id: int) -> None:
+    def _send_request(self, dst: int, function: Function, msg_id: int,
+                      extra_flags: int = 0) -> None:
         # zero-extra-copy frame assembly: the frame is allocated at its exact
         # final size and the payload packed straight in after the 32-byte
         # header.  Static-spec handlers ride the compiled WirePlan (exact
         # nbytes known up front, one fused struct call for scalar leaves);
-        # dynamic handlers fall back to measured TLV.
+        # dynamic handlers fall back to measured TLV.  ``extra_flags`` ORs in
+        # caller bits (FLAG_RETRYABLE for deadline/retry calls).
         key = self.table.key_of(function.record.stable_name)
         plan = self._arg_plans[key]
         if plan is not None:
             n = plan.nbytes
             frame = _alloc_frame(HEADER_NBYTES + n)
             plan.pack_args(frame, HEADER_NBYTES, function.args)
-            flags = FLAG_STATIC
+            flags = FLAG_STATIC | extra_flags
         else:
             args = list(function.args)
             n = mig.dynamic_nbytes(args)
             frame = _alloc_frame(HEADER_NBYTES + n)
             mig.pack_dynamic_into(frame, HEADER_NBYTES, args)
-            flags = FLAG_DYNAMIC
+            flags = FLAG_DYNAMIC | extra_flags
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags, key,
                                 self.node_id, msg_id, n)
         self._send_frame(dst, frame)
@@ -796,6 +967,21 @@ class NodeRuntime:
         return mig.unpack_dynamic(payload), None
 
     def _execute(self, record, plan, key, flags, src, msg_id, payload) -> None:
+        # exactly-once gate: a FLAG_RETRYABLE request may be a sender
+        # retransmission.  First sighting marks the key in-progress and
+        # executes; a duplicate with the reply already cached resends that
+        # frame verbatim; a duplicate still in flight is dropped (the reply
+        # of the in-progress execution answers both).  Fault-free cost is
+        # one flags test — non-retryable calls never touch the cache.
+        retry_key = None
+        if flags & FLAG_RETRYABLE and msg_id:
+            cached = self.replay.begin(src, msg_id)
+            if cached is not None:
+                if cached is not ReplayCache.IN_PROGRESS:
+                    self.stats["replayed"] += 1
+                    self._send_frame(src, cached)
+                return
+            retry_key = (src, msg_id)
         token = _current_node.set(self)  # policy may run on a pool thread
         try:
             self.stats["handled"] += 1
@@ -811,31 +997,37 @@ class NodeRuntime:
             except Exception as e:  # noqa: BLE001 — remote errors must travel
                 self.stats["errors"] += 1
                 if msg_id:
-                    self._send_reply(src, key, msg_id,
-                                     {"msg": f"{type(e).__name__}: {e}",
-                                      "tb": traceback.format_exc()},
-                                     FLAG_REPLY | FLAG_ERROR)
+                    frame = self._send_reply(
+                        src, key, msg_id,
+                        {"msg": f"{type(e).__name__}: {e}",
+                         "tb": traceback.format_exc()},
+                        FLAG_REPLY | FLAG_ERROR)
+                    if retry_key:
+                        self.replay.commit(src, msg_id, bytes(frame))
                 return
             if msg_id:
                 try:
-                    self._send_reply(src, key, msg_id, result, FLAG_REPLY,
-                                     self._result_plans[key])
+                    frame = self._send_reply(src, key, msg_id, result,
+                                             FLAG_REPLY,
+                                             self._result_plans[key])
                 except Exception as e:  # noqa: BLE001 — e.g. reply exceeds the
                     # transport frame limit, or the result violates the
                     # handler's declared result spec: the caller must get an
                     # error, not a dead worker and a timeout
                     self.stats["errors"] += 1
-                    self._send_reply(
+                    frame = self._send_reply(
                         src, key, msg_id,
                         {"msg": f"{type(e).__name__}: {e}",
                          "tb": traceback.format_exc()},
                         FLAG_REPLY | FLAG_ERROR,
                     )
+                if retry_key:
+                    self.replay.commit(src, msg_id, bytes(frame))
         finally:
             _current_node.reset(token)
 
     def _send_reply(self, dst: int, key: int, msg_id: int, result, flags,
-                    plan=None) -> None:
+                    plan=None):
         if plan is not None and not flags & FLAG_ERROR:
             # static result fast path: exact-size frame, plan-packed payload
             n = plan.nbytes
@@ -850,6 +1042,7 @@ class NodeRuntime:
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags,
                                 key, self.node_id, msg_id, n)
         self._send_frame(dst, frame)
+        return frame
 
     # -- event loop -----------------------------------------------------------
 

@@ -24,6 +24,12 @@ def pytest_configure(config):
         "(no os.fork — safe after JAX starts threads); skipped where "
         "/dev/shm is unavailable",
     )
+    config.addinivalue_line(
+        "markers",
+        "chaos: seeded fault-injection suite (repro.comm.chaos) — frame "
+        "drop/dup/delay/reorder/partition under deterministic RNG; run "
+        "with `-m chaos` (the CI chaos smoke job does)",
+    )
 
 
 def _fork_available() -> bool:
