@@ -21,6 +21,13 @@ dropped/renamed metric must not silently shrink gate coverage).  Metrics
 not yet in the baseline are reported and skipped — schema growth must not
 break older baselines.
 
+A second gate class, ``CEILINGS``, covers lower-is-better ABSOLUTE
+metrics (currently the static small-RPC round trip): the fresh value must
+stay under a fixed ceiling regardless of the baseline, because a
+transport-wide pathology (e.g. doorbell wakeups lost, every receive eating
+the park timeout) slows every leg of a ratio equally and sails through
+the relative checks.
+
 Smoke-run comparability: most tracked metrics are ratios and survive the
 smoke job's tiny sizes, but a few are *size-dependent* — the x64 batching
 speedup needs enough frames to amortise, and smoke only runs the smallest
@@ -76,7 +83,28 @@ TRACKED = {
         "rpc_us.speedup.static_rtt_vs_dynamic",
         "rpc_us.speedup.static_stream_vs_dynamic",
         "rpc_us.speedup.fused_stream_vs_static",
+        # doorbell/shape-cache/relay-fusion PR: the repeat-shape dynamic
+        # call must stay within 1.3x of static (ratio >= ~0.77), the
+        # shaped-vs-TLV stream win must not collapse, and relayed fused
+        # throughput must track the unfused leg
+        "rpc_us.speedup.dynamic_repeat_shape_rtt_vs_static",
+        "rpc_us.speedup.dynamic_shaped_stream_vs_tlv",
+        "rpc_us.speedup.relay_fused_vs_unfused",
     ],
+}
+
+#: ``file:path`` -> ceiling — LOWER-is-better absolute gates, judged against
+#: the FRESH run alone (no baseline ratio): these catch a mechanism falling
+#: off a cliff (e.g. the doorbell losing wakeups and every RTT eating the
+#: 2 ms park timeout) that a ratio gate cannot see because both legs slow
+#: down together.  Ceilings are deliberately generous — they must hold on a
+#: loaded single-core CI runner, not just an idle multi-core box (measured
+#: ~27 us multi-core, ~400 us single-core; park-timeout pathology ~4000 us).
+#: Ceiling leaves are recorded in the slope history for visibility but are
+#: excluded from the slope fit (the fitted-decline check models
+#: higher-is-better ratios).
+CEILINGS = {
+    "BENCH_hotpath.json:rpc_us.rtt_us.static": 1500.0,
 }
 
 
@@ -256,11 +284,15 @@ def main(argv=None) -> int:
         smoke_skip = SMOKE_SIZE_DEPENDENT.get(fname, ())
         zero_tol = {p.split(":", 1)[1] for p in ZERO_TOLERANCE
                     if p.startswith(fname + ":")}
+        ceil_paths = {p.split(":", 1)[1]: v for p, v in CEILINGS.items()
+                      if p.startswith(fname + ":")}
         if opts.history_dir is not None:
             entries = append_history(
-                opts.history_dir / f"{fname}.history.jsonl", fresh, paths,
-                smoke_skip, now,
+                opts.history_dir / f"{fname}.history.jsonl", fresh,
+                list(paths) + sorted(ceil_paths), smoke_skip, now,
             )
+            # slope fit covers the higher-is-better ratio leaves only;
+            # ceiling leaves ride the history for visibility
             present = _fresh_leaves(fresh, paths, smoke_skip)
             for path, n, decline, ok in slope_check(
                 entries, present, window=opts.slope_window,
@@ -274,6 +306,23 @@ def main(argv=None) -> int:
                       f"(floor -{opts.slope_tolerance:.0%})")
                 if not ok:
                     failures += 1
+        # absolute ceilings (lower is better), judged on the FRESH run
+        # alone — no baseline ratio, no smoke skip: the ceiling is already
+        # sized for the slowest supported runner
+        for path, ceiling in sorted(ceil_paths.items()):
+            value = _dig(fresh, path)
+            checked += 1
+            if not isinstance(value, (int, float)):
+                print(f"REGRESSION  {fname}:{path}  "
+                      f"ceiling={ceiling:.0f}  fresh=MISSING")
+                failures += 1
+                continue
+            ok = float(value) <= ceiling
+            status = "ok" if ok else "CEILING"
+            print(f"{status:>10}  {fname}:{path}  fresh={value:.2f}  "
+                  f"ceiling={ceiling:.2f} (lower is better)")
+            if not ok:
+                failures += 1
         for path, base, new, ok in compare(baseline, fresh, paths,
                                            opts.tolerance,
                                            smoke_skip, zero_tol):

@@ -664,7 +664,18 @@ class Scheduler:
         except Exception:  # noqa: BLE001 — let _send_request raise properly
             return False
         plan = self.host._arg_plans[key]
-        return plan is not None and plan.nbytes <= FUSE_THRESHOLD
+        if plan is not None:
+            return plan.nbytes <= FUSE_THRESHOLD
+        # dynamic handler: a shape-cacheable call packs through a cached
+        # WirePlan (FLAG_SHAPED segment) with known size — fuse it under the
+        # same threshold; non-speccable shapes stay unfused (size unknown
+        # without a TLV measuring walk, which defeats the point)
+        cache = self.host._shape_cache
+        if cache is None:
+            return False
+        shaped = cache.for_values(function.args, "A")
+        return (shaped is not None
+                and shaped[1].nbytes + len(shaped[0]) <= FUSE_THRESHOLD)
 
     def _send_lock(self, target: int) -> threading.RLock:
         with self._lock:

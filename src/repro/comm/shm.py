@@ -79,9 +79,11 @@ from __future__ import annotations
 import struct
 import time
 from collections import deque
+from dataclasses import dataclass, field
 from multiprocessing import shared_memory
 
 from repro.comm.base import CommBackend, Fabric, as_byte_view as _as_view
+from repro.comm.doorbell import Doorbell, bell_name, futex_available
 from repro.core.errors import CommError
 
 _HDR = 32  # head u64 + head-confirm u64 + tail u64 + tail-confirm u64
@@ -443,6 +445,47 @@ def _ring_name(prefix: str, src: int, dst: int) -> str:
     return f"{prefix}_{src}_{dst}"
 
 
+def _default_spin_budget() -> int:
+    # On a single-core host hot-spinning only delays the sender (time.sleep(0)
+    # does not yield the GIL-holder's core), so park almost immediately; with
+    # real parallelism a short spin window converts same-core-park latency
+    # into sub-microsecond pickup for back-to-back frames.
+    import os
+
+    return 2048 if (os.cpu_count() or 1) > 1 else 64
+
+
+@dataclass(frozen=True)
+class RingConfig:
+    """Tunables for the receiver wakeup path (one home for the former
+    hardcoded ``2048`` spin / ``1e-4`` sleep constants).
+
+    ``spin_budget`` polls happen before the endpoint either parks on its
+    doorbell (futex available) or falls back to sleeping ``sleep_quantum``
+    per miss.  ``park_timeout`` bounds each futex park so the documented
+    lost-wakeup races degrade to latency, never to a hang.  Tests force the
+    park path deterministically with ``spin_budget=0``.
+    """
+
+    spin_budget: int = field(default_factory=_default_spin_budget)
+    sleep_quantum: float = 1e-4
+    park_timeout: float = 2e-3
+    use_doorbell: bool = True
+
+    def as_dict(self) -> dict:
+        """JSON-serialisable form for worker spawn specs."""
+        return {
+            "spin_budget": self.spin_budget,
+            "sleep_quantum": self.sleep_quantum,
+            "park_timeout": self.park_timeout,
+            "use_doorbell": self.use_doorbell,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict | None) -> "RingConfig":
+        return cls(**d) if d else cls()
+
+
 class ShmEndpoint(CommBackend):
     """Attaches to the rings of one node: n-1 inbound, n-1 outbound.
 
@@ -458,10 +501,12 @@ class ShmEndpoint(CommBackend):
 
     zero_copy_recv = True
 
-    def __init__(self, prefix: str, node_id: int, num_nodes: int, peers=None):
+    def __init__(self, prefix: str, node_id: int, num_nodes: int, peers=None,
+                 config: RingConfig | None = None):
         self.node_id = node_id
         self.num_nodes = num_nodes
         self._prefix = prefix
+        self.config = config or RingConfig()
         if peers is None:
             peers = range(num_nodes)
         peers = [p for p in peers if p != node_id]
@@ -469,7 +514,21 @@ class ShmEndpoint(CommBackend):
         self._in = {src: ShmRing(_ring_name(prefix, src, node_id)) for src in peers}
         self._rr = sorted(self._in)  # round-robin poll order
         self._leases: list[RingLease] = []  # issued by recv_many, unreleased
+        # Doorbells: ours to park on, one per peer to ring after a push.
+        # Attach-by-name so forked and fresh-interpreter workers both work;
+        # a fabric predating doorbells has no segments and we degrade to the
+        # adaptive-spin path (bell is None).
+        self._bell = self._attach_bell(node_id)
+        self._peer_bells = {dst: self._attach_bell(dst) for dst in peers}
         self._refresh_frame_cap()
+
+    def _attach_bell(self, node: int) -> Doorbell | None:
+        if not (self.config.use_doorbell and futex_available()):
+            return None
+        try:
+            return Doorbell(bell_name(self._prefix, node))
+        except FileNotFoundError:
+            return None
 
     def _refresh_frame_cap(self) -> None:
         # a frame must fit one ring (8-byte length prefix included)
@@ -491,6 +550,7 @@ class ShmEndpoint(CommBackend):
             return
         self._out[node_id] = ShmRing(_ring_name(self._prefix, self.node_id, node_id))
         self._in[node_id] = ShmRing(_ring_name(self._prefix, node_id, self.node_id))
+        self._peer_bells[node_id] = self._attach_bell(node_id)
         self._rr = sorted(self._in)
         self.num_nodes = max(self.num_nodes, node_id + 1)
         self._refresh_frame_cap()
@@ -500,10 +560,13 @@ class ShmEndpoint(CommBackend):
         sends toward the id fail fast (``_check_dst``)."""
         out = self._out.pop(node_id, None)
         inn = self._in.pop(node_id, None)
+        bell = self._peer_bells.pop(node_id, None)
         self._rr = sorted(self._in)
         for ring in (out, inn):
             if ring is not None:
                 ring.close()
+        if bell is not None:
+            bell.close()
         if out is not None:
             self._refresh_frame_cap()
 
@@ -522,64 +585,115 @@ class ShmEndpoint(CommBackend):
             self._out_ring(dst).push(frame)
         except (TypeError, ValueError) as e:  # ring closed mid-push
             raise CommError(f"peer {dst} detached during send") from e
+        bell = self._peer_bells.get(dst)
+        if bell is not None:
+            bell.ring()
 
     def send_many(self, dst: int, frames) -> None:
         try:
             self._out_ring(dst).push_many(frames)
         except (TypeError, ValueError) as e:
             raise CommError(f"peer {dst} detached during send") from e
+        bell = self._peer_bells.get(dst)
+        if bell is not None:
+            bell.ring()
 
     def recv(self, timeout: float | None = None) -> bytes | None:
         deadline = None if timeout is None else time.monotonic() + timeout
+        cfg = self.config
+        bell = self._bell
         spins = 0
-        while True:
-            for src in self._rr:
-                # detach_peer (another thread) may retire a ring mid-poll:
-                # a missing/closed ring reads as empty, never as an error
-                ring = self._in.get(src)
-                if ring is None or ring._buf is None:
-                    continue
-                try:
-                    frame = ring.try_pop()
-                except (TypeError, ValueError):  # closed under our feet
-                    continue
-                if frame is not None:
-                    return frame
-            spins += 1
-            if deadline is not None and time.monotonic() > deadline:
-                return None
-            # adaptive backoff: hot-spin briefly (latency), then yield
-            time.sleep(0 if spins < 2048 else 1e-4)
+        armed = False
+        try:
+            while True:
+                # When armed, snapshot seq BEFORE polling: a publish after
+                # this poll bumps seq and FUTEX_WAIT refuses to sleep.
+                seq = bell.read_seq() if armed else 0
+                for src in self._rr:
+                    # detach_peer (another thread) may retire a ring
+                    # mid-poll: a missing/closed ring reads as empty,
+                    # never as an error
+                    ring = self._in.get(src)
+                    if ring is None or ring._buf is None:
+                        continue
+                    try:
+                        frame = ring.try_pop()
+                    except (TypeError, ValueError):  # closed under our feet
+                        continue
+                    if frame is not None:
+                        return frame
+                spins += 1
+                if deadline is not None and time.monotonic() > deadline:
+                    return None
+                if bell is not None and spins >= cfg.spin_budget:
+                    if not armed:
+                        bell.arm()
+                        armed = True
+                        continue  # mandatory re-poll between arm and park
+                    park = cfg.park_timeout
+                    if deadline is not None:
+                        park = min(park, deadline - time.monotonic())
+                        if park <= 0:
+                            return None
+                    bell.wait(seq, park)
+                else:
+                    # adaptive backoff: hot-spin briefly (latency), then
+                    # yield — the doorbell-less fallback path
+                    time.sleep(0 if spins < cfg.spin_budget else cfg.sleep_quantum)
+        finally:
+            if armed:
+                bell.disarm()
 
     def recv_many(self, max_frames: int = 64, timeout: float | None = None) -> list:
         """Up to ``max_frames`` leased frame views, ``[]`` on timeout.
 
         One ``pop_many`` (= one eventual tail store) per non-empty inbound
-        ring; views stay valid until :meth:`release`.
+        ring; views stay valid until :meth:`release`.  Waiting follows the
+        same spin-then-park protocol as :meth:`recv`.
         """
         deadline = None if timeout is None else time.monotonic() + timeout
+        cfg = self.config
+        bell = self._bell
         spins = 0
-        while True:
-            views: list = []
-            for src in self._rr:
-                ring = self._in.get(src)
-                if ring is None or ring._buf is None:
-                    continue  # retired by detach_peer mid-poll
-                try:
-                    lease = ring.pop_many(max_frames - len(views))
-                except (TypeError, ValueError):  # closed under our feet
-                    continue
-                if lease is not None:
-                    self._leases.append(lease)
-                    views.extend(lease.views)
-                    if len(views) >= max_frames:
-                        break
-            if views:
-                return views
-            spins += 1
-            if deadline is not None and time.monotonic() > deadline:
-                return []
-            time.sleep(0 if spins < 2048 else 1e-4)
+        armed = False
+        try:
+            while True:
+                seq = bell.read_seq() if armed else 0
+                views: list = []
+                for src in self._rr:
+                    ring = self._in.get(src)
+                    if ring is None or ring._buf is None:
+                        continue  # retired by detach_peer mid-poll
+                    try:
+                        lease = ring.pop_many(max_frames - len(views))
+                    except (TypeError, ValueError):  # closed under our feet
+                        continue
+                    if lease is not None:
+                        self._leases.append(lease)
+                        views.extend(lease.views)
+                        if len(views) >= max_frames:
+                            break
+                if views:
+                    return views
+                spins += 1
+                if deadline is not None and time.monotonic() > deadline:
+                    return []
+                if bell is not None and spins >= cfg.spin_budget:
+                    if not armed:
+                        bell.arm()
+                        armed = True
+                        continue  # mandatory re-poll between arm and park
+                    park = cfg.park_timeout
+                    if deadline is not None:
+                        park = min(park, deadline - time.monotonic())
+                        if park <= 0:
+                            return []
+                    bell.wait(seq, park)
+                else:
+                    time.sleep(0 if spins < cfg.spin_budget else cfg.sleep_quantum)
+        finally:
+            if armed:
+                bell.disarm()
 
     def release(self) -> None:
         leases, self._leases = self._leases, []
@@ -607,6 +721,13 @@ class ShmEndpoint(CommBackend):
             r.close()
         for r in self._in.values():
             r.close()
+        if self._bell is not None:
+            self._bell.close()
+            self._bell = None
+        for bell in self._peer_bells.values():
+            if bell is not None:
+                bell.close()
+        self._peer_bells = {}
 
 
 class ShmFabric(Fabric):
@@ -626,15 +747,18 @@ class ShmFabric(Fabric):
     layer) — the fabric owner only manages segment lifetime.
     """
 
-    def __init__(self, num_nodes: int, capacity: int = 1 << 24, prefix: str | None = None):
+    def __init__(self, num_nodes: int, capacity: int = 1 << 24, prefix: str | None = None,
+                 config: RingConfig | None = None):
         import atexit
         import os
         import uuid
 
         self.num_nodes = num_nodes
         self.capacity = capacity
+        self.config = config or RingConfig()
         self.prefix = prefix or f"ham{os.getpid()}_{uuid.uuid4().hex[:8]}"
         self._rings: dict[tuple[int, int], ShmRing] = {}
+        self._bells: dict[int, Doorbell] = {}
         self._nodes: set[int] = set(range(num_nodes))
         self._next_id = num_nodes
         self._closed = False
@@ -646,11 +770,16 @@ class ShmFabric(Fabric):
                         capacity=capacity,
                         create=True,
                     )
+        if self.config.use_doorbell and futex_available():
+            for node in range(num_nodes):
+                self._bells[node] = Doorbell(
+                    bell_name(self.prefix, node), create=True
+                )
         atexit.register(self.close)
 
     def endpoint(self, node_id: int) -> ShmEndpoint:
         return ShmEndpoint(self.prefix, node_id, self.num_nodes,
-                           peers=sorted(self._nodes))
+                           peers=sorted(self._nodes), config=self.config)
 
     def nodes(self) -> list[int]:
         return sorted(self._nodes)
@@ -667,6 +796,10 @@ class ShmFabric(Fabric):
                 _ring_name(self.prefix, peer, node_id),
                 capacity=self.capacity, create=True,
             )
+        if self.config.use_doorbell and futex_available():
+            self._bells[node_id] = Doorbell(
+                bell_name(self.prefix, node_id), create=True
+            )
         self._nodes.add(node_id)
         self.num_nodes = max(self.num_nodes, node_id + 1)
         return node_id
@@ -677,6 +810,10 @@ class ShmFabric(Fabric):
             ring = self._rings.pop(pair)
             ring.close()
             ring.unlink()
+        bell = self._bells.pop(node_id, None)
+        if bell is not None:
+            bell.close()
+            bell.unlink()
 
     def prepare_restart(self, node_id: int) -> None:
         """Clear the dead node's inbound rings so a replacement consumer
@@ -695,3 +832,7 @@ class ShmFabric(Fabric):
         for r in self._rings.values():
             r.close()
             r.unlink()
+        for bell in self._bells.values():
+            bell.close()
+            bell.unlink()
+        self._bells = {}

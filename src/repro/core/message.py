@@ -48,13 +48,28 @@ word followed by back-to-back segments::
 
 Each segment is one complete logical message: its ``flags`` carry the
 usual REPLY/ERROR/STATIC/DYNAMIC bits and its payload is exactly what the
-equivalent standalone frame would carry after the header.  Segments share
-the outer frame's ``src_node`` — which is why only frames *originating* at
-the sender may be fused (a relayed ``_ham/forward`` inner frame keeps its
-own header and is never folded into a fused batch).  Segment order is
-preserved; a receiver executes request segments in order in a single
-dispatch/executor pass, and an error in one segment errors only that
-segment's ``msg_id``.
+equivalent standalone frame would carry after the header.  Segments
+default to sharing the outer frame's ``src_node``; a segment whose true
+origin differs (a relayed ``_ham/forward`` inner frame folded into the
+forwarder's egress batch) instead carries ``FLAG_SEG_SRC`` and prefixes
+its payload with a ``u32`` true source node id (see ``docs/transport.md``
+— the relayed-fused layout).  The receiver strips the prefix and
+dispatches/replies against the embedded source, preserving the forward
+contract that the final target answers the *origin* directly.  Segment
+order is preserved; a receiver executes request segments in order in a
+single dispatch/executor pass, and an error in one segment errors only
+that segment's ``msg_id``.
+
+Shape-keyed dynamic payloads (``FLAG_SHAPED``)
+----------------------------------------------
+
+``FLAG_SHAPED`` marks a dynamic payload packed through a shape-keyed
+cached ``WirePlan`` instead of TLV: the payload is ``u16 sig_len`` +
+signature bytes + the plan-packed leaves.  The signature (grammar in
+``repro.core.wireplan.spec_signature``) fully determines the plan, so the
+receiver compiles-or-looks-up the same plan and unpacks without any
+per-leaf TLV interpretation.  Semantically equivalent to FLAG_DYNAMIC —
+senders fall back to TLV for shapes the spec grammar cannot express.
 
 Batched-frame segment layout (the coalesced hot path)
 -----------------------------------------------------
@@ -103,10 +118,19 @@ FLAG_FUSED = 1 << 4    # multi-call frame: count word + segments
 #: cache and resend the cached reply instead of re-executing — the
 #: exactly-once contract of docs/failure-model.md.  Meaningless on replies.
 FLAG_RETRYABLE = 1 << 5
+#: dynamic payload packed via a shape-keyed cached WirePlan:
+#: u16 sig_len | signature | plan-packed leaves (repro.core.wireplan)
+FLAG_SHAPED = 1 << 6
+#: fused-SEGMENT-only bit: the segment's true origin differs from the outer
+#: frame's src_node; payload starts with u32 true src (relay-aware fusion)
+FLAG_SEG_SRC = 1 << 7
 
 #: fused-frame segment header: key, flags, msg_id, payload_len
 SEG_STRUCT = struct.Struct("<IHQI")
 SEG_NBYTES = SEG_STRUCT.size  # 18
+#: u32 true-source prefix of a FLAG_SEG_SRC segment payload
+SEG_SRC_STRUCT = struct.Struct("<I")
+SEG_SRC_NBYTES = SEG_SRC_STRUCT.size  # 4
 FUSED_COUNT_STRUCT = struct.Struct("<I")
 
 

@@ -318,3 +318,241 @@ class WirePlan:
 def compile_plan(specs) -> WirePlan | None:
     """``None`` specs (dynamic handler side) compile to no plan."""
     return None if specs is None else WirePlan(specs)
+
+
+# ---------------------------------------------------------------------------
+# Shape-keyed plan cache (the FLAG_SHAPED dynamic fast path)
+# ---------------------------------------------------------------------------
+#
+# Dynamic handlers have no registered spec, so every call used to walk the
+# TLV codec per leaf (~25 µs of interpreter for a small pytree).  But real
+# dynamic traffic repeats its *shape* call-to-call: same scalars, same array
+# dtypes/shapes, different values.  spec_of() already maps a value to a
+# hashable frozen Spec, so the value tuple's spec tuple is a cache key, and
+# a cached exec-generated WirePlan gives repeat shapes the same
+# straight-line pack/unpack as static specs.
+#
+# The wire carries a compact *signature* so the receiver can rebuild (and
+# cache) the identical plan without any registration handshake:
+#
+#     signature := arity_tag canonical_spec_string
+#     arity_tag := "A"   args tuple        (request: unpack -> tuple)
+#                | "V"   bare value        (reply: unpack -> values[0])
+#                | "T"   tuple result      (reply: unpack -> tuple)
+#
+# The tag disambiguates the one case the spec tuple cannot: a handler that
+# returned a 1-tuple vs a bare value.  ``None`` results and shapes the spec
+# grammar cannot express (str/bytes/lists/dicts/None leaves) stay on TLV —
+# FLAG_SHAPED is an opportunistic overlay, never a requirement.
+
+_SIG_ARITIES = ("A", "V", "T")
+_SIG_LEAF_RE = None  # compiled lazily (re import cost off the hot path)
+
+
+def spec_signature(specs, arity: str) -> bytes:
+    """Wire signature for a spec tuple (grammar above)."""
+    if arity not in _SIG_ARITIES:
+        raise MigratableError(f"bad signature arity {arity!r}")
+    from repro.core.migratable import canonical_spec_string
+
+    return (arity + canonical_spec_string(specs)).encode("ascii")
+
+
+def parse_signature(sig: bytes) -> tuple[str, tuple]:
+    """Inverse of :func:`spec_signature`: ``(arity, spec_tuple)``.
+
+    Raises :class:`MigratableError` on any malformed signature — the caller
+    treats that as a protocol error, not a fallback.
+    """
+    global _SIG_LEAF_RE
+    if _SIG_LEAF_RE is None:
+        import re
+
+        # leaf tokens never contain ']' internally: scalar kinds are [a-z0-9],
+        # dtypes come from str(np.dtype) of a biufc-kind array, opaque names
+        # are module:qualname
+        _SIG_LEAF_RE = re.compile(
+            rb"scalar\[([^\]]*)\]|array\[([^;\]]*);([^\]]*)\]|opaque\[([^;\]]*);(\d+)\]"
+        )
+    try:
+        text = sig.decode("ascii")
+    except UnicodeDecodeError as e:
+        raise MigratableError(f"undecodable shape signature: {e}") from None
+    if not text or text[0] not in _SIG_ARITIES:
+        raise MigratableError(f"bad shape signature arity in {text[:32]!r}")
+    arity, body = text[0], text[1:]
+    if not (body.startswith("(") and body.endswith(")")):
+        raise MigratableError(f"bad shape signature body {body[:32]!r}")
+    specs = []
+    for m in _SIG_LEAF_RE.finditer(sig, 1):
+        kind, adtype, dims, oname, onbytes = m.groups()
+        if kind is not None:
+            if kind.decode() not in _SCALAR_FMT:
+                raise MigratableError(f"unknown scalar kind {kind!r}")
+            specs.append(ScalarSpec(kind.decode()))
+        elif adtype is not None:
+            shape = tuple(int(d) for d in dims.split(b",")) if dims else ()
+            specs.append(ArraySpec(shape, adtype.decode()))
+        else:
+            specs.append(OpaqueSpec(oname.decode(), int(onbytes)))
+    # reject trailing garbage / unrecognised leaves: rebuilding the body
+    # from what parsed must reproduce the wire bytes exactly
+    if "(" + ",".join(s.canonical() for s in specs) + ")" != body:
+        raise MigratableError(f"unparseable shape signature {body[:64]!r}")
+    return arity, tuple(specs)
+
+
+class ShapeCache:
+    """Bounded LRU of shape-keyed :class:`WirePlan` s, both directions.
+
+    Send side keys on the *spec tuple* (derived from live values via
+    ``spec_of`` — a few hundred ns for small pytrees); receive side keys on
+    the raw signature bytes from the wire.  Entries are tiny (a compiled
+    plan + signature), so the default bound of 256 distinct shapes per side
+    is generous; eviction is plain LRU under one lock (both hooks are
+    called from runtime loop threads *and* user threads).
+    """
+
+    __slots__ = ("maxsize", "_lock", "_by_key", "_by_sig",
+                 "hits", "misses", "evictions")
+
+    def __init__(self, maxsize: int = 256):
+        from collections import OrderedDict
+        from threading import Lock
+
+        self.maxsize = maxsize
+        self._lock = Lock()
+        self._by_key: dict = OrderedDict()   # spec-tuple+arity -> (sig, plan)
+        self._by_sig: dict = OrderedDict()   # sig bytes -> (arity, plan)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- send side ---------------------------------------------------------
+    @staticmethod
+    def _fast_key(values, arity: str):
+        """Hashable shape key without constructing Spec objects (~0.3 µs per
+        leaf vs ~3 µs for ``spec_of``).  ``None`` -> take the spec_of path
+        (np scalar subtypes, codec'd opaques, array-likes)."""
+        key = [arity]
+        append = key.append
+        for v in values:
+            t = type(v)
+            if t is int:
+                append("i")
+            elif t is float:
+                append("f")
+            elif t is bool:
+                append("b")
+            elif t is np.ndarray and v.dtype.kind in "biufc":
+                append((v.dtype, v.shape))
+            else:
+                return None
+        return tuple(key)
+
+    def for_values(self, values, arity: str):
+        """``(signature, plan)`` for a tuple of leaf values, or ``None``
+        when any leaf is outside the spec grammar (caller falls back to
+        TLV).  ``arity`` is the wire tag ("A"/"V"/"T")."""
+        key = self._fast_key(values, arity)
+        if key is None:
+            from repro.core.migratable import spec_of
+
+            try:
+                key = (arity, tuple(spec_of(v) for v in values))
+            except MigratableError:
+                return None
+        with self._lock:
+            ent = self._by_key.get(key)
+            if ent is not None:
+                self._by_key.move_to_end(key)
+                self.hits += 1
+                return ent
+        # miss: derive the authoritative spec tuple (the fast key maps 1:1
+        # onto it — exact int/float/bool/ndarray types only)
+        from repro.core.migratable import spec_of
+
+        try:
+            specs = tuple(spec_of(v) for v in values)
+        except MigratableError:
+            return None
+        sig = spec_signature(specs, arity)
+        plan = WirePlan(specs)
+        with self._lock:
+            self.misses += 1
+            self._by_key[key] = (sig, plan)
+            if len(self._by_key) > self.maxsize:
+                self._by_key.popitem(last=False)
+                self.evictions += 1
+        return sig, plan
+
+    def for_result(self, result):
+        """Shape entry for a reply value (``None``/non-speccable -> TLV)."""
+        if result is None:
+            return None
+        if isinstance(result, tuple):
+            return self.for_values(result, "T")
+        return self.for_values((result,), "V")
+
+    # -- receive side ------------------------------------------------------
+    def for_signature(self, sig: bytes):
+        """``(arity, plan)`` for raw signature bytes off the wire.
+
+        Malformed signatures raise :class:`MigratableError` (protocol
+        error); unknown-but-wellformed shapes compile and cache."""
+        with self._lock:
+            ent = self._by_sig.get(sig)
+            if ent is not None:
+                self._by_sig.move_to_end(sig)
+                self.hits += 1
+                return ent
+        arity, specs = parse_signature(sig)
+        plan = WirePlan(specs)
+        with self._lock:
+            self.misses += 1
+            self._by_sig[sig] = (arity, plan)
+            if len(self._by_sig) > self.maxsize:
+                self._by_sig.popitem(last=False)
+                self.evictions += 1
+        return arity, plan
+
+    def unpack_shaped(self, payload, *, expect_args: bool):
+        """Decode a FLAG_SHAPED payload: u16 sig_len | sig | packed leaves.
+
+        ``expect_args=True`` (request side) returns a tuple regardless of
+        tag; the reply side honours the V/T arity convention.
+        """
+        (sig_len,) = SIG_LEN_STRUCT.unpack_from(payload, 0)
+        sig = bytes(payload[2 : 2 + sig_len])
+        arity, plan = self.for_signature(sig)
+        values = plan.unpack_args(payload[2 + sig_len :])
+        if expect_args or arity == "T":
+            return values
+        if arity == "V":
+            return values[0]
+        return values  # "A" payload surfacing on the reply path
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "send_entries": len(self._by_key),
+                "recv_entries": len(self._by_sig),
+            }
+
+
+#: length prefix of the signature in a FLAG_SHAPED payload
+SIG_LEN_STRUCT = struct.Struct("<H")
+SIG_LEN_NBYTES = SIG_LEN_STRUCT.size  # 2
+
+
+def pack_shaped(sig: bytes, plan: WirePlan, values) -> bytearray:
+    """Standalone FLAG_SHAPED payload (the fused-segment path; the
+    standalone-frame path packs straight into the frame buffer)."""
+    buf = bytearray(SIG_LEN_NBYTES + len(sig) + plan.nbytes)
+    SIG_LEN_STRUCT.pack_into(buf, 0, len(sig))
+    buf[SIG_LEN_NBYTES : SIG_LEN_NBYTES + len(sig)] = sig
+    plan.pack_args(buf, SIG_LEN_NBYTES + len(sig), values)
+    return buf

@@ -58,6 +58,7 @@ offloaded user code dereferences :class:`BufferPtr` arguments and how
 from __future__ import annotations
 
 import contextvars
+import os
 import sys
 import threading
 import time
@@ -78,18 +79,23 @@ from repro.core.message import (
     FLAG_FUSED,
     FLAG_REPLY,
     FLAG_RETRYABLE,
+    FLAG_SEG_SRC,
+    FLAG_SHAPED,
     FLAG_STATIC,
     FUSED_COUNT_STRUCT,
     HEADER_NBYTES,
     HEADER_STRUCT,
     MAGIC,
     SEG_NBYTES,
+    SEG_SRC_NBYTES,
+    SEG_SRC_STRUCT,
     SEG_STRUCT,
     VERSION,
     decode_fast,
     iter_fused,
 )
 from repro.core.registry import HandlerTable, default_registry
+from repro.core.wireplan import SIG_LEN_NBYTES, SIG_LEN_STRUCT, ShapeCache
 from repro.offload.buffer import BufferPtr, BufferRegistry
 
 _current_node: contextvars.ContextVar["NodeRuntime | None"] = contextvars.ContextVar(
@@ -425,18 +431,28 @@ class NodeRuntime:
         policy: ExecutionPolicy | None = None,
         *,
         inline: bool = False,
+        shape_cache: bool | None = None,
     ):
         self.node_id = node_id
         self.endpoint = endpoint
         self.table = table
+        # shape-keyed WirePlan cache for dynamic payloads (FLAG_SHAPED).
+        # ``None`` defers to HAM_SHAPE_CACHE (workers inherit the host's
+        # environment at fork/spawn, so one env var flips both sides — the
+        # benchmark's forced-TLV comparison leg relies on this).
+        if shape_cache is None:
+            shape_cache = os.environ.get("HAM_SHAPE_CACHE", "1") != "0"
+        self._shape_cache = ShapeCache() if shape_cache else None
         # dense key-indexed fast-path arrays (compiled at HandlerTable init):
         # one list index per message instead of record attribute walks
         self._records = table.records
         self._arg_plans = table.arg_plans
         self._result_plans = table.result_plans
         #: fold sub-threshold same-destination egress frames into FLAG_FUSED
-        #: multi-call frames at flush time (off => plain send_many batches)
-        self.fuse_egress = True
+        #: multi-call frames at flush time (off => plain send_many batches).
+        #: HAM_FUSE_EGRESS=0 disables it process-wide — forked workers inherit
+        #: the env, which is how the relay benchmark measures the unfused leg.
+        self.fuse_egress = os.environ.get("HAM_FUSE_EGRESS", "1") != "0"
         self.policy = policy or DirectPolicy()
         self.buffers = BufferRegistry(node_id)
         self.futures = FutureTable()
@@ -622,14 +638,14 @@ class NodeRuntime:
                 self.endpoint.send_many(dst, frames)
 
     def _fusible(self, frame) -> bool:
-        """May this packed egress frame fold into a fused batch?  Small, not
-        itself fused, and *originating here* — a relayed ``_ham/forward``
-        inner frame carries the origin's src_node, which fusion would lose
-        (segments inherit the outer header's src)."""
+        """May this packed egress frame fold into a fused batch?  Small and
+        not itself fused.  A relayed ``_ham/forward`` inner frame (foreign
+        src_node) IS fusible: its true origin travels as a ``FLAG_SEG_SRC``
+        payload prefix so multi-hop topologies keep the fused win."""
         if len(frame) > HEADER_NBYTES + FUSE_THRESHOLD:
             return False
-        _, _, flags, _, src, _, _ = HEADER_STRUCT.unpack_from(frame, 0)
-        return not flags & FLAG_FUSED and src == self.node_id
+        _, _, flags, _, _, _, _ = HEADER_STRUCT.unpack_from(frame, 0)
+        return not flags & FLAG_FUSED
 
     def _fuse_runs(self, frames: list) -> list:
         """Fold consecutive runs of fusible frames (length >= 2) into
@@ -658,17 +674,35 @@ class NodeRuntime:
     def _fuse_frames(self, frames: list):
         """Rewrite N packed frames into one FLAG_FUSED frame (segment layout
         in ``core/message.py``): N-1 headers and N-1 transport publications
-        amortised into one, decoded by the receiver in a single pass."""
-        total = 4 + sum(len(f) - HEADER_NBYTES + SEG_NBYTES for f in frames)
+        amortised into one, decoded by the receiver in a single pass.
+
+        Frames whose src_node is not this node (relayed ``_ham/forward``
+        inner frames re-emitted at the forwarder) become ``FLAG_SEG_SRC``
+        segments carrying their true origin as a u32 payload prefix — the
+        receiver dispatches and replies against the origin, preserving the
+        forward contract (final target answers the origin directly)."""
+        me = self.node_id
+        heads = [HEADER_STRUCT.unpack_from(f, 0) for f in frames]
+        total = 4 + sum(
+            len(f) - HEADER_NBYTES + SEG_NBYTES
+            + (SEG_SRC_NBYTES if h[4] != me else 0)
+            for f, h in zip(frames, heads)
+        )
         fused = _alloc_frame(HEADER_NBYTES + total)
         HEADER_STRUCT.pack_into(fused, 0, MAGIC, VERSION, FLAG_FUSED, 0,
-                                self.node_id, 0, total)
+                                me, 0, total)
         FUSED_COUNT_STRUCT.pack_into(fused, HEADER_NBYTES, len(frames))
         off = HEADER_NBYTES + 4
-        for f in frames:
-            _, _, flags, key, _, msg_id, plen = HEADER_STRUCT.unpack_from(f, 0)
-            SEG_STRUCT.pack_into(fused, off, key, flags, msg_id, plen)
-            off += SEG_NBYTES
+        for f, (_, _, flags, key, src, msg_id, plen) in zip(frames, heads):
+            if src != me:
+                SEG_STRUCT.pack_into(fused, off, key, flags | FLAG_SEG_SRC,
+                                     msg_id, plen + SEG_SRC_NBYTES)
+                off += SEG_NBYTES
+                SEG_SRC_STRUCT.pack_into(fused, off, src)
+                off += SEG_SRC_NBYTES
+            else:
+                SEG_STRUCT.pack_into(fused, off, key, flags, msg_id, plen)
+                off += SEG_NBYTES
             end = HEADER_NBYTES + plen
             fused[off : off + plen] = (
                 f[HEADER_NBYTES:end] if isinstance(f, (bytes, bytearray))
@@ -694,11 +728,30 @@ class NodeRuntime:
             plan.pack_args(frame, HEADER_NBYTES, function.args)
             flags = FLAG_STATIC | extra_flags
         else:
-            args = list(function.args)
-            n = mig.dynamic_nbytes(args)
-            frame = _alloc_frame(HEADER_NBYTES + n)
-            mig.pack_dynamic_into(frame, HEADER_NBYTES, args)
-            flags = FLAG_DYNAMIC | extra_flags
+            frame = n = None
+            # dynamic handler: repeat shapes ride a cached WirePlan
+            # (FLAG_SHAPED) — straight-line pack instead of the TLV walk
+            shaped = (self._shape_cache.for_values(function.args, "A")
+                      if self._shape_cache is not None else None)
+            if shaped is not None:
+                sig, splan = shaped
+                n = SIG_LEN_NBYTES + len(sig) + splan.nbytes
+                frame = _alloc_frame(HEADER_NBYTES + n)
+                SIG_LEN_STRUCT.pack_into(frame, HEADER_NBYTES, len(sig))
+                body = HEADER_NBYTES + SIG_LEN_NBYTES
+                frame[body : body + len(sig)] = sig
+                try:
+                    splan.pack_args(frame, body + len(sig), function.args)
+                    flags = FLAG_SHAPED | extra_flags
+                except Exception:  # noqa: BLE001 — e.g. a misbehaving opaque
+                    # codec; the TLV path below is always a valid encoding
+                    frame = None
+            if frame is None:
+                args = list(function.args)
+                n = mig.dynamic_nbytes(args)
+                frame = _alloc_frame(HEADER_NBYTES + n)
+                mig.pack_dynamic_into(frame, HEADER_NBYTES, args)
+                flags = FLAG_DYNAMIC | extra_flags
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags, key,
                                 self.node_id, msg_id, n)
         self._send_frame(dst, frame)
@@ -747,26 +800,39 @@ class NodeRuntime:
         """One FLAG_FUSED frame for ``[(function, msg_id), ...]``."""
         key_of = self.table.key_of
         plans = self._arg_plans
+        cache = self._shape_cache
         metas = []
         total = 4
         for fn, msg_id in calls:
             key = key_of(fn.record.stable_name)
             plan = plans[key]
+            sig = None
             if plan is not None:
                 n, flags = plan.nbytes, FLAG_STATIC
             else:
-                n, flags = mig.dynamic_nbytes(list(fn.args)), FLAG_DYNAMIC
-            metas.append((key, flags, msg_id, n, plan, fn.args))
+                shaped = (cache.for_values(fn.args, "A")
+                          if cache is not None else None)
+                if shaped is not None:
+                    sig, plan = shaped
+                    n = SIG_LEN_NBYTES + len(sig) + plan.nbytes
+                    flags = FLAG_SHAPED
+                else:
+                    n, flags = mig.dynamic_nbytes(list(fn.args)), FLAG_DYNAMIC
+            metas.append((key, flags, msg_id, n, plan, sig, fn.args))
             total += SEG_NBYTES + n
         frame = _alloc_frame(HEADER_NBYTES + total)
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, FLAG_FUSED, 0,
                                 self.node_id, 0, total)
         FUSED_COUNT_STRUCT.pack_into(frame, HEADER_NBYTES, len(metas))
         off = HEADER_NBYTES + 4
-        for key, flags, msg_id, n, plan, args in metas:
+        for key, flags, msg_id, n, plan, sig, args in metas:
             SEG_STRUCT.pack_into(frame, off, key, flags, msg_id, n)
             off += SEG_NBYTES
-            if plan is not None:
+            if sig is not None:
+                SIG_LEN_STRUCT.pack_into(frame, off, len(sig))
+                frame[off + SIG_LEN_NBYTES : off + SIG_LEN_NBYTES + len(sig)] = sig
+                plan.pack_args(frame, off + SIG_LEN_NBYTES + len(sig), args)
+            elif plan is not None:
                 plan.pack_args(frame, off, args)
             else:
                 mig.pack_dynamic_into(frame, off, list(args))
@@ -802,10 +868,16 @@ class NodeRuntime:
                 # rest through the normal path
                 mine = None
                 for skey, sflags, smid, seg in iter_fused(payload):
+                    if sflags & FLAG_SEG_SRC:  # relayed segment: strip prefix
+                        (sseg_src,) = SEG_SRC_STRUCT.unpack_from(seg, 0)
+                        seg = seg[SEG_SRC_NBYTES:]
+                        sflags &= ~FLAG_SEG_SRC
+                    else:
+                        sseg_src = src
                     if mine is None and sflags & FLAG_REPLY and smid == msg_id:
                         mine = (skey, sflags, seg)
                     else:
-                        self._handle_one(skey, sflags, src, smid, seg, True)
+                        self._handle_one(skey, sflags, sseg_src, smid, seg, True)
                 if mine is None:
                     continue
                 return self._finish_sync_reply(*mine)
@@ -916,10 +988,23 @@ class NodeRuntime:
         if restore_drain:
             self._draining = True
         deferred = None
+        # one contextvar bracket for the whole batch (direct policy executes
+        # segments inline here) — ~0.4 us per call saved at fusion densities
+        token = _current_node.set(self) if direct else None
         try:
             for key, flags, msg_id, seg in iter_fused(payload):
+                if flags & FLAG_SEG_SRC:
+                    # relayed segment: true origin rides a u32 payload prefix
+                    # (relay-aware fusion — see core/message.py); dispatch
+                    # and reply against the origin, exactly as the unfused
+                    # _ham/forward inner frame would have
+                    (seg_src,) = SEG_SRC_STRUCT.unpack_from(seg, 0)
+                    seg = seg[SEG_SRC_NBYTES:]
+                    flags &= ~FLAG_SEG_SRC
+                else:
+                    seg_src = src
                 if flags & FLAG_REPLY:
-                    self._handle_one(key, flags, src, msg_id, seg, owned)
+                    self._handle_one(key, flags, seg_src, msg_id, seg, owned)
                     continue
                 try:
                     record = self._records[key]
@@ -928,12 +1013,16 @@ class NodeRuntime:
                     self.table.handler_at(key)
                     raise
                 if direct:
-                    self._execute(record, plan, key, flags, src, msg_id, seg)
+                    self._execute_gated(record, plan, key, flags, seg_src,
+                                        msg_id, seg)
                 else:
                     if deferred is None:
                         deferred = []
-                    deferred.append((record, plan, key, flags, src, msg_id, seg))
+                    deferred.append((record, plan, key, flags, seg_src,
+                                     msg_id, seg))
         finally:
+            if token is not None:
+                _current_node.reset(token)
             if restore_drain:
                 self._draining = False
                 self._flush_egress()
@@ -947,12 +1036,19 @@ class NodeRuntime:
         """Shared reply decode (event loop AND inline-sync path): returns
         ``(value, None)`` or ``(None, (msg, tb))`` for an error reply.
 
-        ``FLAG_STATIC`` selects the handler's compiled result plan; error
-        replies and un-flagged replies (pre-plan peers) are dynamic TLV.
+        ``FLAG_STATIC`` selects the handler's compiled result plan;
+        ``FLAG_SHAPED`` decodes through the shape cache (signature-keyed
+        plan); error replies and un-flagged replies (pre-plan peers) are
+        dynamic TLV.
         """
         if flags & FLAG_ERROR:
             err = mig.unpack_dynamic(payload)
             return None, (err["msg"], err.get("tb", ""))
+        if flags & FLAG_SHAPED:
+            cache = self._shape_cache
+            if cache is None:
+                cache = self._shape_cache = ShapeCache()
+            return cache.unpack_shaped(payload, expect_args=False), None
         if flags & FLAG_STATIC:
             try:
                 plan = self._result_plans[key]
@@ -967,6 +1063,16 @@ class NodeRuntime:
         return mig.unpack_dynamic(payload), None
 
     def _execute(self, record, plan, key, flags, src, msg_id, payload) -> None:
+        token = _current_node.set(self)  # policy may run on a pool thread
+        try:
+            self._execute_gated(record, plan, key, flags, src, msg_id, payload)
+        finally:
+            _current_node.reset(token)
+
+    def _execute_gated(self, record, plan, key, flags, src, msg_id,
+                       payload) -> None:
+        """:meth:`_execute` minus the contextvar bracket (a fused batch sets
+        the contextvar once around its whole segment loop)."""
         # exactly-once gate: a FLAG_RETRYABLE request may be a sender
         # retransmission.  First sighting marks the key in-progress and
         # executes; a duplicate with the reply already cached resends that
@@ -982,49 +1088,64 @@ class NodeRuntime:
                     self._send_frame(src, cached)
                 return
             retry_key = (src, msg_id)
-        token = _current_node.set(self)  # policy may run on a pool thread
+        self._execute_in_ctx(record, plan, key, flags, src, msg_id,
+                             payload, retry_key)
+
+    def _execute_in_ctx(self, record, plan, key, flags, src, msg_id, payload,
+                        retry_key) -> None:
+        """Decode, run the handler, and reply — the innermost execute step
+        (contextvar and replay gate handled by the callers above)."""
+        self.stats["handled"] += 1
         try:
-            self.stats["handled"] += 1
-            try:
-                # wire compat: a pre-plan peer sends static payloads with no
-                # flag bits — the plan decodes them regardless (identical
-                # layout); FLAG_DYNAMIC forces the TLV path either way
-                if plan is not None and not flags & FLAG_DYNAMIC:
-                    args = plan.unpack_args(payload)
-                else:
-                    args = tuple(mig.unpack_dynamic(payload))
-                result = record.fn(*args)
-            except Exception as e:  # noqa: BLE001 — remote errors must travel
-                self.stats["errors"] += 1
-                if msg_id:
-                    frame = self._send_reply(
-                        src, key, msg_id,
-                        {"msg": f"{type(e).__name__}: {e}",
-                         "tb": traceback.format_exc()},
-                        FLAG_REPLY | FLAG_ERROR)
-                    if retry_key:
-                        self.replay.commit(src, msg_id, bytes(frame))
-                return
+            # wire compat: a pre-plan peer sends static payloads with no
+            # flag bits — the plan decodes them regardless (identical
+            # layout); FLAG_DYNAMIC forces the TLV path either way
+            if flags & FLAG_SHAPED:
+                args = self._shaped_args(payload)
+            elif plan is not None and not flags & FLAG_DYNAMIC:
+                args = plan.unpack_args(payload)
+            else:
+                args = tuple(mig.unpack_dynamic(payload))
+            result = record.fn(*args)
+        except Exception as e:  # noqa: BLE001 — remote errors must travel
+            self.stats["errors"] += 1
             if msg_id:
-                try:
-                    frame = self._send_reply(src, key, msg_id, result,
-                                             FLAG_REPLY,
-                                             self._result_plans[key])
-                except Exception as e:  # noqa: BLE001 — e.g. reply exceeds the
-                    # transport frame limit, or the result violates the
-                    # handler's declared result spec: the caller must get an
-                    # error, not a dead worker and a timeout
-                    self.stats["errors"] += 1
-                    frame = self._send_reply(
-                        src, key, msg_id,
-                        {"msg": f"{type(e).__name__}: {e}",
-                         "tb": traceback.format_exc()},
-                        FLAG_REPLY | FLAG_ERROR,
-                    )
+                frame = self._send_reply(
+                    src, key, msg_id,
+                    {"msg": f"{type(e).__name__}: {e}",
+                     "tb": traceback.format_exc()},
+                    FLAG_REPLY | FLAG_ERROR)
                 if retry_key:
                     self.replay.commit(src, msg_id, bytes(frame))
-        finally:
-            _current_node.reset(token)
+            return
+        if msg_id:
+            try:
+                frame = self._send_reply(src, key, msg_id, result,
+                                         FLAG_REPLY,
+                                         self._result_plans[key])
+            except Exception as e:  # noqa: BLE001 — e.g. reply exceeds the
+                # transport frame limit, or the result violates the
+                # handler's declared result spec: the caller must get an
+                # error, not a dead worker and a timeout
+                self.stats["errors"] += 1
+                frame = self._send_reply(
+                    src, key, msg_id,
+                    {"msg": f"{type(e).__name__}: {e}",
+                     "tb": traceback.format_exc()},
+                    FLAG_REPLY | FLAG_ERROR,
+                )
+            if retry_key:
+                self.replay.commit(src, msg_id, bytes(frame))
+
+    def _shaped_args(self, payload) -> tuple:
+        """Decode a FLAG_SHAPED request payload to an args tuple.  A receiver
+        with the cache disabled still decodes shaped frames (the flag is a
+        wire format, not a capability negotiation) through a lazily created
+        cache."""
+        cache = self._shape_cache
+        if cache is None:
+            cache = self._shape_cache = ShapeCache()
+        return cache.unpack_shaped(payload, expect_args=True)
 
     def _send_reply(self, dst: int, key: int, msg_id: int, result, flags,
                     plan=None):
@@ -1035,10 +1156,29 @@ class NodeRuntime:
             plan.pack_result(frame, HEADER_NBYTES, result)
             flags |= FLAG_STATIC
         else:
-            n = mig.dynamic_nbytes(result)
-            frame = _alloc_frame(HEADER_NBYTES + n)
-            mig.pack_dynamic_into(frame, HEADER_NBYTES, result)
-            flags |= FLAG_DYNAMIC
+            frame = None
+            if not flags & FLAG_ERROR and self._shape_cache is not None:
+                # dynamic-handler reply: repeat shapes ride a cached plan
+                # (FLAG_SHAPED) exactly like shaped requests
+                shaped = self._shape_cache.for_result(result)
+                if shaped is not None:
+                    sig, splan = shaped
+                    values = result if isinstance(result, tuple) else (result,)
+                    n = SIG_LEN_NBYTES + len(sig) + splan.nbytes
+                    frame = _alloc_frame(HEADER_NBYTES + n)
+                    SIG_LEN_STRUCT.pack_into(frame, HEADER_NBYTES, len(sig))
+                    body = HEADER_NBYTES + SIG_LEN_NBYTES
+                    frame[body : body + len(sig)] = sig
+                    try:
+                        splan.pack_args(frame, body + len(sig), values)
+                        flags |= FLAG_SHAPED
+                    except Exception:  # noqa: BLE001 — fall back to TLV
+                        frame = None
+            if frame is None:
+                n = mig.dynamic_nbytes(result)
+                frame = _alloc_frame(HEADER_NBYTES + n)
+                mig.pack_dynamic_into(frame, HEADER_NBYTES, result)
+                flags |= FLAG_DYNAMIC
         HEADER_STRUCT.pack_into(frame, 0, MAGIC, VERSION, flags,
                                 key, self.node_id, msg_id, n)
         self._send_frame(dst, frame)

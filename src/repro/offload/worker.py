@@ -48,10 +48,11 @@ def _worker_body(kind: str, args: dict, node_id: int, setup_modules: list[str]) 
         importlib.import_module(mod)
     table = default_registry().init()
     if kind == "shm":
-        from repro.comm.shm import ShmEndpoint
+        from repro.comm.shm import RingConfig, ShmEndpoint
 
         endpoint = ShmEndpoint(args["prefix"], node_id, args["num_nodes"],
-                               peers=args.get("peers"))
+                               peers=args.get("peers"),
+                               config=RingConfig.from_dict(args.get("ring")))
     elif kind == "socket":
         from repro.comm.socket import SocketEndpoint
 
@@ -116,6 +117,9 @@ def _shm_args(fabric) -> dict:
         "prefix": fabric.prefix,
         "num_nodes": fabric.num_nodes,
         "peers": fabric.nodes(),
+        # wakeup tunables travel with the spawn spec (JSON-serialisable) so
+        # forked and fresh-interpreter workers honour the fabric's RingConfig
+        "ring": fabric.config.as_dict(),
     }
 
 

@@ -16,6 +16,7 @@ from repro.core.message import (
     FLAG_ERROR,
     FLAG_FUSED,
     FLAG_REPLY,
+    FLAG_SHAPED,
     FLAG_STATIC,
     decode_fast,
     encode_frame,
@@ -195,11 +196,17 @@ def test_static_request_and_reply_carry_flag_static():
     assert bytes(payload) == bytes(
         mig.pack_static((2, 3), (ScalarSpec("i8"), ScalarSpec("i8")))
     )
-    # dynamic handler request still rides TLV with FLAG_DYNAMIC
+    # dynamic handler request with a speccable shape rides the shape-keyed
+    # plan cache (FLAG_SHAPED: u16 sig_len | sig | plan-packed leaves)
     host._send_request(1, f2f("t/add_d", 2, 3, registry=reg), 8)
     _, flags, _, _, payload = decode_fast(epw.recv(timeout=5))
-    assert flags & FLAG_DYNAMIC and not flags & FLAG_STATIC
-    assert mig.unpack_dynamic(payload) == [2, 3]
+    assert flags & FLAG_SHAPED and not flags & (FLAG_STATIC | FLAG_DYNAMIC)
+    assert host._shape_cache.unpack_shaped(payload, expect_args=True) == (2, 3)
+    # non-speccable args (a string) keep the TLV fallback with FLAG_DYNAMIC
+    host._send_request(1, f2f("t/add_d", "a", "b", registry=reg), 8)
+    _, flags, _, _, payload = decode_fast(epw.recv(timeout=5))
+    assert flags & FLAG_DYNAMIC and not flags & (FLAG_STATIC | FLAG_SHAPED)
+    assert mig.unpack_dynamic(payload) == ["a", "b"]
     # a worker runtime replies to the static request with a STATIC reply
     worker = NodeRuntime(1, epw, table)
     host._send_request(1, f2f("t/add_s", 20, 22, registry=reg), 9)
@@ -414,7 +421,10 @@ def test_fused_frame_layout_and_truncation():
     assert flags & FLAG_FUSED and (key, mid) == (0, 0) and src == 0
     segs = list(iter_fused(payload))
     assert [s[2] for s in segs] == [101, 102]
-    assert segs[0][1] & FLAG_STATIC and segs[1][1] & FLAG_DYNAMIC
+    assert segs[0][1] & FLAG_STATIC
+    # the dynamic call's shape is speccable, so it rides a shaped segment
+    assert segs[1][1] & FLAG_SHAPED
+    assert host._shape_cache.unpack_shaped(segs[1][3], expect_args=True) == (3, 4)
     # truncated fused payloads must fail loudly, not mis-slice
     with pytest.raises(ham.MessageFormatError):
         list(iter_fused(payload[: len(payload) - 3]))
