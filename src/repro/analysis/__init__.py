@@ -1,0 +1,17 @@
+"""Static analysis for the HAM runtime: protocol linter + model checker.
+
+Two engines (see ``docs/static-analysis.md``):
+
+* :mod:`repro.analysis.hamlint` — AST-based protocol linter over every
+  ``@handler`` / ``register(...)`` site.  ``python -m repro.analysis.hamlint
+  src/``.
+* :mod:`repro.analysis.modelcheck` — explicit-state exhaustive-interleaving
+  checker for the torn-counter and doorbell protocols.
+  ``python -m repro.analysis.modelcheck [--quick]``.
+
+The HAM paper leans on the C++ type system to make handler dispatch safe at
+compile time (§4); this package is the Python runtime's equivalent static
+backstop, encoding the invariant classes behind every protocol bug this
+codebase has shipped (PR 1 torn counters, PR 2 same-source divergence,
+PR 5 undeclared-mutation replica divergence, PR 7 lost-wakeup races).
+"""

@@ -1,0 +1,254 @@
+"""HAM001 — read-only purity.
+
+A handler registered ``read_only=True`` may be routed at (and have its
+buffer pointers retargeted to) ANY replica of its buffers.  If such a
+handler writes through a ``deref``'d pointer it updates one replica and
+silently diverges the others — the exact bug class closed dynamically in
+PR 5 by gating replica serving on the declaration.  This rule closes it
+*statically*: the declaration must be true of the code.
+
+Taint model: every value produced by ``deref(...)`` — and every view
+derived from one by plain assignment, subscripting/slicing, attribute
+chains (``.T``), or view-returning methods (``reshape``/``ravel``/
+``view``/``transpose``) — is buffer memory.  A store through tainted
+memory (subscript/attribute assignment, augmented assignment, a known
+in-place method, an ``out=`` kwarg, ``np.copyto``) is a violation; so is
+alias-escaping a tainted view into module-global state (the write then
+merely happens later, off-site).  Reading, reducing (``.sum()``), and
+returning tainted values are fine — the wire layer copies results.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.rules import Finding, LintContext, rule
+
+#: ndarray methods that mutate the receiver in place
+_INPLACE_METHODS = {
+    "fill", "sort", "put", "resize", "setfield", "itemset", "partition",
+    "byteswap", "setflags",
+}
+#: methods returning a view of (i.e. aliasing) the receiver
+_VIEW_METHODS = {"reshape", "ravel", "view", "transpose", "swapaxes",
+                 "squeeze", "diagonal"}
+#: free functions whose FIRST argument is written in place
+_INPLACE_FUNCS = {"copyto"}
+#: container methods that capture a reference to their argument
+_CAPTURE_METHODS = {"append", "add", "insert", "extend", "setdefault",
+                    "update"}
+
+
+def _root_name(node: ast.expr) -> str | None:
+    """Innermost Name of a Subscript/Attribute chain."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class _PurityChecker:
+    def __init__(self, func_def, module_globals: set, path: str,
+                 wire_name: str):
+        self.func = func_def
+        self.module_globals = set(module_globals)
+        self.path = path
+        self.wire_name = wire_name
+        self.tainted: set[str] = set()
+        self.declared_global: set[str] = set()
+        self.findings: list[Finding] = []
+
+    def run(self) -> list[Finding]:
+        # two passes: the first only propagates taint (assign chains are
+        # short, one pass reaches fixpoint for straight-line code); the
+        # second reports, so a store textually above the assignment that
+        # tainted its target still fires
+        for report in (False, True):
+            self.findings = []
+            for node in self.func.body:
+                self._stmt(node, report)
+        return self.findings
+
+    # -- taint -------------------------------------------------------------
+
+    def _is_tainted(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, (ast.Subscript, ast.Attribute)):
+            # a slice/attr of buffer memory aliases it, except method refs
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in _INPLACE_METHODS | _VIEW_METHODS:
+                return self._is_tainted(node.value)
+            return self._is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Name) and func.id == "deref":
+                return True
+            if isinstance(func, ast.Attribute) and \
+                    func.attr in _VIEW_METHODS:
+                return self._is_tainted(func.value)
+        if isinstance(node, ast.Starred):
+            return self._is_tainted(node.value)
+        return False
+
+    # -- statement walk ----------------------------------------------------
+
+    def _stmt(self, node: ast.stmt, report: bool) -> None:
+        if isinstance(node, ast.Global):
+            self.declared_global.update(node.names)
+        elif isinstance(node, ast.Assign):
+            self._assign(node, report)
+        elif isinstance(node, ast.AugAssign):
+            self._aug_assign(node, report)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name) and \
+                    self._is_tainted(node.value):
+                self.tainted.add(node.target.id)
+        elif isinstance(node, ast.Expr):
+            self._expr_stmt(node.value, report)
+        elif isinstance(node, (ast.If, ast.While, ast.For, ast.With,
+                               ast.Try)):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.stmt):
+                    self._stmt(child, report)
+                elif isinstance(child, (ast.ExceptHandler, ast.withitem)):
+                    for sub in ast.iter_child_nodes(child):
+                        if isinstance(sub, ast.stmt):
+                            self._stmt(sub, report)
+            if isinstance(node, ast.For) and \
+                    isinstance(node.target, ast.Name) and \
+                    self._is_tainted(node.iter):
+                # iterating rows of buffer memory yields views
+                self.tainted.add(node.target.id)
+        # Return / Raise / Pass / nested defs: nothing to do (returning a
+        # view is legal — the wire layer copies)
+
+    def _assign(self, node: ast.Assign, report: bool) -> None:
+        value_tainted = self._is_tainted(node.value)
+        for target in node.targets:
+            if isinstance(target, ast.Name):
+                is_global = (target.id in self.declared_global
+                             or target.id in self.module_globals)
+                if value_tainted and is_global and report:
+                    self._report(
+                        node,
+                        f"stores a buffer view into module global "
+                        f"'{target.id}' (alias escape)",
+                    )
+                if value_tainted:
+                    self.tainted.add(target.id)
+                else:
+                    self.tainted.discard(target.id)  # rebound to clean value
+            elif isinstance(target, (ast.Subscript, ast.Attribute)):
+                root = _root_name(target)
+                if root is None:
+                    continue
+                if root in self.tainted:
+                    if report:
+                        self._report(
+                            node,
+                            f"writes through buffer-derived '{root}' "
+                            f"(offending store at line {node.lineno})",
+                        )
+                elif value_tainted and report and (
+                    root in self.module_globals
+                    or root in self.declared_global
+                ):
+                    self._report(
+                        node,
+                        f"stores a buffer view into module global "
+                        f"'{root}' (alias escape)",
+                    )
+            elif isinstance(target, ast.Tuple) and value_tainted:
+                for el in target.elts:
+                    if isinstance(el, ast.Name):
+                        self.tainted.add(el.id)
+
+    def _aug_assign(self, node: ast.AugAssign, report: bool) -> None:
+        target = node.target
+        root = _root_name(target) if isinstance(
+            target, (ast.Subscript, ast.Attribute)
+        ) else (target.id if isinstance(target, ast.Name) else None)
+        if root is not None and root in self.tainted and report:
+            self._report(
+                node,
+                f"augmented assignment mutates buffer-derived '{root}' in "
+                f"place (offending store at line {node.lineno})",
+            )
+
+    def _expr_stmt(self, node: ast.expr, report: bool) -> None:
+        if not isinstance(node, ast.Call):
+            return
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            recv_root = _root_name(func.value)
+            if func.attr in _INPLACE_METHODS and recv_root in self.tainted:
+                if report:
+                    self._report(
+                        node,
+                        f"in-place method '.{func.attr}()' mutates "
+                        f"buffer-derived '{recv_root}'",
+                    )
+            if func.attr in _CAPTURE_METHODS and \
+                    recv_root is not None and \
+                    recv_root in self.module_globals and \
+                    any(self._is_tainted(a) for a in node.args):
+                if report:
+                    self._report(
+                        node,
+                        f"captures a buffer view into module global "
+                        f"'{recv_root}' (alias escape)",
+                    )
+            if func.attr in _INPLACE_FUNCS and node.args and \
+                    self._is_tainted(node.args[0]) and report:
+                self._report(
+                    node,
+                    f"'{func.attr}' writes into its first argument, which "
+                    "is buffer-derived",
+                )
+        elif isinstance(func, ast.Name) and func.id in _INPLACE_FUNCS and \
+                node.args and self._is_tainted(node.args[0]) and report:
+            self._report(
+                node,
+                f"'{func.id}' writes into its first argument, which is "
+                "buffer-derived",
+            )
+        for kw in node.keywords:
+            if kw.arg == "out" and self._is_tainted(kw.value) and report:
+                self._report(node, "out= targets a buffer-derived array")
+
+    def _report(self, node: ast.AST, detail: str) -> None:
+        self.findings.append(Finding(
+            rule="HAM001",
+            path=self.path,
+            line=node.lineno,
+            col=node.col_offset,
+            message=(
+                f"handler {self.wire_name!r} is declared read_only=True "
+                f"but {detail}; a replica-served call would diverge the "
+                "other replicas (PR 5 bug class)"
+            ),
+        ))
+
+
+@rule(
+    "HAM001",
+    title="read_only=True handlers must not mutate or alias-escape "
+          "BufferPtr-derived memory",
+    historical="PR 5: an undeclared-mutation handler served from a replica "
+               "silently diverged the other replicas",
+)
+def check(ctx: LintContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for site in ctx.sites:
+        if site.read_only is not True or site.func_def is None:
+            continue
+        checker = _PurityChecker(
+            site.func_def,
+            site.module.toplevel_assigns,
+            site.module.path,
+            site.wire_name or site.fn_name or "<anonymous>",
+        )
+        findings.extend(checker.run())
+    return findings

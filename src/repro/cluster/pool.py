@@ -168,7 +168,6 @@ def _h_reset_peer(node_id):
     from repro.offload.runtime import current_node
 
     current_node().endpoint.reset_peer(int(node_id))
-    return None
 
 
 def _h_attach_peer(node_id):
@@ -178,7 +177,6 @@ def _h_attach_peer(node_id):
     from repro.offload.runtime import current_node
 
     current_node().endpoint.attach_peer(int(node_id))
-    return None
 
 
 def _h_detach_peer(node_id):
@@ -187,7 +185,6 @@ def _h_detach_peer(node_id):
     from repro.offload.runtime import current_node
 
     current_node().endpoint.detach_peer(int(node_id))
-    return None
 
 
 def _h_stats(node_id, depth):
@@ -196,7 +193,6 @@ def _h_stats(node_id, depth):
     from repro.offload.runtime import current_node
 
     current_node().note_peer_depth(int(node_id), int(depth))
-    return None
 
 
 def _h_digest():

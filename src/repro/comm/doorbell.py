@@ -49,15 +49,41 @@ import struct
 from multiprocessing import shared_memory
 
 __all__ = [
+    "CONSUMER_PARK_PROTOCOL",
     "Doorbell",
+    "PRODUCER_RING_PROTOCOL",
+    "SEQ_OFF",
+    "WAITERS_OFF",
     "futex_available",
     "futex_wait",
     "futex_wake",
 ]
 
 _U32 = struct.Struct("<I")
-_SEQ_OFF = 0
-_WAITERS_OFF = 4
+
+# Word layout and protocol step orders.  These are the single source of
+# truth shared with the exhaustive-interleaving model
+# (repro.analysis.models.doorbell): the model builds its transition system
+# from these tuples, so an implementation reorder that reopens a lost-wakeup
+# window (PR 7's publish-before-arm / publish-after-repoll races) changes
+# the model too and the checker finds the stranded park.
+SEQ_OFF = 0
+WAITERS_OFF = 4
+
+#: producer step order in :meth:`Doorbell.ring` (after the ring push that
+#: precedes it): bump ``seq`` (non-atomic RMW), then read ``waiters``, then
+#: the conditional FUTEX_WAKE
+PRODUCER_RING_PROTOCOL = ("publish", "bump_seq", "read_waiters", "wake_if_armed")
+
+#: consumer step order in the shm endpoints' spin-then-park loop: arm
+#: (waiters=1), snapshot ``seq``, MANDATORY ring re-poll, and only then the
+#: compare-on-entry FUTEX_WAIT on the pre-poll snapshot.  The snapshot MUST
+#: precede the re-poll: a publish that lands between them bumps ``seq`` and
+#: FUTEX_WAIT refuses to sleep (EAGAIN) instead of stranding the park.
+CONSUMER_PARK_PROTOCOL = ("arm", "read_seq", "repoll", "wait_if_unchanged")
+
+_SEQ_OFF = SEQ_OFF
+_WAITERS_OFF = WAITERS_OFF
 
 # futex(2) operation codes.  Deliberately NOT using FUTEX_PRIVATE_FLAG: the
 # word lives in shared memory mapped by unrelated processes, so the futex

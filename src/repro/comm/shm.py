@@ -86,6 +86,28 @@ from repro.comm.base import CommBackend, Fabric, as_byte_view as _as_view
 from repro.comm.doorbell import Doorbell, bell_name, futex_available
 from repro.core.errors import CommError
 
+# Counter block layout and publication discipline.  Single source of truth
+# shared with the exhaustive-interleaving model
+# (repro.analysis.models.ring_counters): the model's load/store routines are
+# generated from this discipline, so weakening it here (e.g. dropping the
+# confirm copy that closes PR 1's torn-counter window) weakens the model and
+# the checker reports the frame-boundary corruption.
+HEAD_OFF = 0
+HEAD_CONFIRM_OFF = 8
+TAIL_OFF = 16
+TAIL_CONFIRM_OFF = 24
+#: byte distance from a counter's primary word to its confirm copy
+COUNTER_CONFIRM_STRIDE = 8
+#: reader re-reads until primary == confirm, up to this many times, then
+#: falls back to min(primary, confirm) — conservative for monotonic counters
+COUNTER_STABLE_RETRIES = 10000
+#: writer order in ``_store_counter``: primary word first, confirm last
+COUNTER_STORE_ORDER = ("primary", "confirm")
+#: reader order in ``_load_counter``: the confirm copy (stored last) is
+#: loaded FIRST, so primary == confirm proves the pair was stable across
+#: both loads; the model executes its loads in exactly this order
+COUNTER_LOAD_ORDER = ("confirm", "primary")
+
 _HDR = 32  # head u64 + head-confirm u64 + tail u64 + tail-confirm u64
 _U64 = struct.Struct("<Q")
 
@@ -146,9 +168,10 @@ class ShmRing:
 
     def _load_counter(self, off: int) -> int:
         buf = self._buf
-        for _ in range(10000):
-            (confirm,) = _U64.unpack_from(buf, off + 8)  # stored last
-            (primary,) = _U64.unpack_from(buf, off)      # stored first
+        stride = COUNTER_CONFIRM_STRIDE
+        for _ in range(COUNTER_STABLE_RETRIES):
+            (confirm,) = _U64.unpack_from(buf, off + stride)  # stored last
+            (primary,) = _U64.unpack_from(buf, off)           # stored first
             if primary == confirm:
                 return primary
             time.sleep(0)  # writer mid-publish: sub-microsecond window
@@ -159,19 +182,19 @@ class ShmRing:
 
     def _store_counter(self, off: int, v: int) -> None:
         _U64.pack_into(self._buf, off, v)
-        _U64.pack_into(self._buf, off + 8, v)
+        _U64.pack_into(self._buf, off + COUNTER_CONFIRM_STRIDE, v)
 
     def _head(self) -> int:
-        return self._load_counter(0)
+        return self._load_counter(HEAD_OFF)
 
     def _tail(self) -> int:
-        return self._load_counter(16)
+        return self._load_counter(TAIL_OFF)
 
     def _set_head(self, v: int) -> None:
-        self._store_counter(0, v)
+        self._store_counter(HEAD_OFF, v)
 
     def _set_tail(self, v: int) -> None:
-        self._store_counter(16, v)
+        self._store_counter(TAIL_OFF, v)
 
     def _read_pos(self) -> int:
         """Next unread offset: the cursor while leases are outstanding,

@@ -103,27 +103,33 @@ import struct
 
 from repro.core.errors import MessageFormatError
 
+# Flag bits live in the centralized wire-constant registry (one table,
+# import-time collision assertions, read by the static analyzer) and are
+# re-exported here so existing ``from repro.core.message import FLAG_*``
+# imports keep working.  Semantics:
+#   FLAG_RETRYABLE — request may be retransmitted by the sender (scheduler
+#     deadline/retry path): the receiver must dedup on (src_node, msg_id)
+#     through its replay cache and resend the cached reply instead of
+#     re-executing (docs/failure-model.md).  Meaningless on replies.
+#   FLAG_SHAPED — dynamic payload packed via a shape-keyed cached WirePlan:
+#     u16 sig_len | signature | plan-packed leaves (repro.core.wireplan).
+#   FLAG_SEG_SRC — fused-SEGMENT-only bit: the segment's true origin differs
+#     from the outer frame's src_node; payload starts with u32 true src.
+from repro.core.flags import (  # noqa: F401  (re-exported wire constants)
+    FLAG_DYNAMIC,
+    FLAG_ERROR,
+    FLAG_FUSED,
+    FLAG_REPLY,
+    FLAG_RETRYABLE,
+    FLAG_SEG_SRC,
+    FLAG_SHAPED,
+    FLAG_STATIC,
+)
+
 MAGIC = 0x48414D58
 VERSION = 1
 HEADER_STRUCT = struct.Struct("<IHHIIQQ")
 HEADER_NBYTES = HEADER_STRUCT.size  # 32
-
-FLAG_REPLY = 1 << 0
-FLAG_ERROR = 1 << 1
-FLAG_DYNAMIC = 1 << 2
-FLAG_STATIC = 1 << 3   # plan-packed payload (repro.core.wireplan)
-FLAG_FUSED = 1 << 4    # multi-call frame: count word + segments
-#: request may be retransmitted by the sender (scheduler deadline/retry
-#: path): the receiver must dedup on (src_node, msg_id) through its replay
-#: cache and resend the cached reply instead of re-executing — the
-#: exactly-once contract of docs/failure-model.md.  Meaningless on replies.
-FLAG_RETRYABLE = 1 << 5
-#: dynamic payload packed via a shape-keyed cached WirePlan:
-#: u16 sig_len | signature | plan-packed leaves (repro.core.wireplan)
-FLAG_SHAPED = 1 << 6
-#: fused-SEGMENT-only bit: the segment's true origin differs from the outer
-#: frame's src_node; payload starts with u32 true src (relay-aware fusion)
-FLAG_SEG_SRC = 1 << 7
 
 #: fused-frame segment header: key, flags, msg_id, payload_len
 SEG_STRUCT = struct.Struct("<IHQI")

@@ -189,6 +189,56 @@ def _derive_stable_name(fn: Callable, specs: tuple | None, explicit: str | None)
     return f"{base}#{digest}"
 
 
+def _validate_registration(fn, arg_specs, result_specs, name) -> None:
+    """Call-time twin of the static checks in ``repro.analysis.hamlint``:
+    everything hamlint rejects statically that is *cheap* to verify here is
+    rejected at the registration site too, so the dynamic path and the
+    static pass can never disagree silently.
+
+    Two checks: (1) a static ``arg_specs`` tuple must match the function's
+    positional arity (skipped for ``*args`` signatures and C callables
+    without introspectable signatures); (2) static specs must actually be
+    wire-plan-compilable — a bad leaf fails HERE, naming the handler, not
+    at ``init()`` in a different stack frame.
+    """
+    import inspect
+
+    if arg_specs is not None:
+        try:
+            sig = inspect.signature(fn)
+        except (TypeError, ValueError):
+            sig = None
+        if sig is not None:
+            params = list(sig.parameters.values())
+            has_varargs = any(
+                p.kind is inspect.Parameter.VAR_POSITIONAL for p in params
+            )
+            positional = [
+                p for p in params
+                if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                              inspect.Parameter.POSITIONAL_OR_KEYWORD)
+            ]
+            if not has_varargs and len(arg_specs) != len(positional):
+                raise RegistryError(
+                    f"handler {name or getattr(fn, '__qualname__', fn)!r}: "
+                    f"arg_specs declares {len(arg_specs)} leaves but the "
+                    f"function takes {len(positional)} positional "
+                    "parameters — the wire payload and the call would "
+                    "disagree (hamlint: spec-coherence)"
+                )
+    for label, specs in (("arg_specs", arg_specs),
+                         ("result_specs", result_specs)):
+        if specs is None:
+            continue
+        try:
+            compile_plan(specs)
+        except Exception as e:
+            raise RegistryError(
+                f"handler {name or getattr(fn, '__qualname__', fn)!r}: "
+                f"{label} is not wire-plan compilable: {e}"
+            ) from e
+
+
 class HandlerRegistry:
     """Collects handler registrations, then seals into a :class:`HandlerTable`.
 
@@ -215,6 +265,7 @@ class HandlerRegistry:
         doc: str = "",
         read_only: bool = False,
     ) -> HandlerRecord:
+        _validate_registration(fn, arg_specs, result_specs, name)
         stable = _derive_stable_name(fn, arg_specs, name)
         record = HandlerRecord(stable, fn, arg_specs, result_specs, doc,
                                read_only)

@@ -170,7 +170,7 @@ def lm_forward(p, batch, cfg: ModelConfig, *, sharder=None, window=None,
         aux = jnp.zeros((), jnp.float32)
         caches_list = []
         for i in range(cfg.num_layers):
-            layer_p = jax.tree_util.tree_map(lambda q: q[i], p["layers"])
+            layer_p = jax.tree_util.tree_map(lambda q, i=i: q[i], p["layers"])
             (x, aux), c = body((x, aux), layer_p)
             caches_list.append(c)
         caches = (
@@ -234,7 +234,7 @@ def lm_decode_step(p, cache, batch, cfg: ModelConfig, *, sharder=None,
         outs = []
         aux = jnp.zeros((), jnp.float32)
         for i in range(cfg.num_layers):
-            sel = lambda q: q[i]
+            sel = lambda q, i=i: q[i]  # bind i: late-binding closure pitfall
             (x, aux), c = body(
                 (x, aux),
                 (jax.tree_util.tree_map(sel, p["layers"]),

@@ -41,10 +41,9 @@ def causal_conv(p, x, dtype):
     w = p["w"].astype(dtype)
     width = w.shape[0]
     xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
-    out = sum(
+    return sum(
         xp[:, i : i + x.shape[1], :] * w[i] for i in range(width)
     )
-    return out
 
 
 def causal_conv_step(p, x_t, conv_state, dtype):

@@ -175,7 +175,8 @@ class OffloadDomain:
                         flat.dtype, copy=False
                     )
 
-                return self._run_direct(_store)
+                self._run_direct(_store)
+                return
         arr = np.ascontiguousarray(src)
         limit = self.chunk_nbytes if chunk_nbytes is None else chunk_nbytes
         # clamp to what the transport can move in one frame (shm ring size),

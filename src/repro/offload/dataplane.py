@@ -552,7 +552,6 @@ def _h_buf_adopt(handle, shape, dtype):
     from repro.offload.runtime import current_node
 
     current_node().buffers.adopt_empty(int(handle), shape, dtype)
-    return None
 
 
 def _h_buf_invalidate(handle):
@@ -584,10 +583,10 @@ def _h_buf_freed(node_id, handle):
     node = current_node()
     directory = getattr(node, "buffer_directory", None)
     if directory is None:
-        return None
+        return
     rec = directory.drop(int(handle))
     if rec is None:  # already dropped (e.g. a host-side free raced us)
-        return None
+        return
     record = node.table.record_of("_ham/buf_invalidate")
     for holder in rec.holders:
         if holder == int(node_id):
@@ -597,7 +596,6 @@ def _h_buf_freed(node_id, handle):
         except Exception:  # noqa: BLE001 — best effort; the holder may be
             # mid-removal, and a leaked replica is recovered at its teardown
             pass
-    return None
 
 
 def register_dataplane_handlers(registry=None) -> None:
@@ -606,15 +604,17 @@ def register_dataplane_handlers(registry=None) -> None:
     handlers — then callers must have registered these before ``init()``)."""
     from repro.core.registry import default_registry
 
+    # adopt/invalidate/freed mutate the replica map; buf_count is a pure
+    # read of the local buffer registry (read_only => replica-servable)
     reg = registry or default_registry()
-    for name, fn in (
-        ("_ham/buf_adopt", _h_buf_adopt),
-        ("_ham/buf_invalidate", _h_buf_invalidate),
-        ("_ham/buf_count", _h_buf_count),
-        ("_ham/buf_freed", _h_buf_freed),
+    for name, fn, read_only in (
+        ("_ham/buf_adopt", _h_buf_adopt, False),
+        ("_ham/buf_invalidate", _h_buf_invalidate, False),
+        ("_ham/buf_count", _h_buf_count, True),
+        ("_ham/buf_freed", _h_buf_freed, False),
     ):
         try:
-            reg.register(fn, name=name)
+            reg.register(fn, name=name, read_only=read_only)
         except RegistrySealedError:
             return
 

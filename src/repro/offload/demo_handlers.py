@@ -16,13 +16,12 @@ from repro.offload.api import deref
 _reg = default_registry()
 
 
-@_reg.handler(name="demo/empty")
+@_reg.handler(name="demo/empty", read_only=True)
 def empty() -> None:
     """The paper's Fig. 3 microbenchmark payload: an empty function."""
-    return None
 
 
-@_reg.handler(name="demo/add")
+@_reg.handler(name="demo/add", read_only=True)
 def add(a, b):
     return a + b
 
@@ -37,14 +36,13 @@ def inner_prod(a_ptr, b_ptr, n):
 # saxpy WRITES through y_ptr, so it must not be read_only: the scheduler
 # pins its pointers to the primary copy, and the mutation is invisible to
 # any replicas until the caller re-puts the buffer (dataplane module docs)
-@_reg.handler(name="demo/saxpy")
+@_reg.handler(name="demo/saxpy", read_only=False)
 def saxpy(alpha, x_ptr, y_ptr):
     y = deref(y_ptr)
     y += alpha * deref(x_ptr)
-    return None
 
 
-@_reg.handler(name="demo/matmul")
+@_reg.handler(name="demo/matmul", read_only=True)
 def matmul(a, b):
     return np.asarray(a) @ np.asarray(b)
 
@@ -52,7 +50,8 @@ def matmul(a, b):
 # static-spec variant of the empty offload: zero-byte payload AND zero-byte
 # static reply (result_specs=()), the true lower bound for dispatch cost
 # (key + header only, both directions)
-_reg.register(empty, arg_specs=(), result_specs=(), name="demo/empty_static")
+_reg.register(empty, arg_specs=(), result_specs=(), name="demo/empty_static",
+              read_only=True)
 
 
 def echo_small(a, b, scale, arr):
@@ -71,8 +70,9 @@ _reg.register(
     arg_specs=tuple(spec_of(a) for a in _ECHO_ARGS),
     result_specs=(ScalarSpec("f8"),),
     name="demo/echo_small_static",
+    read_only=True,
 )
-_reg.register(echo_small, name="demo/echo_small_dyn")
+_reg.register(echo_small, name="demo/echo_small_dyn", read_only=True)
 
 
 # -- chaos-suite probes (tests/test_chaos.py; docs/failure-model.md) --------
@@ -89,7 +89,7 @@ _reg.register(echo_small, name="demo/echo_small_dyn")
 _chaos_counters: dict = {}
 
 
-@_reg.handler(name="chaos/bump")
+@_reg.handler(name="chaos/bump", read_only=False)
 def chaos_bump(token):
     """Mutating probe: increment this worker's counter for ``token`` and
     return the post-increment value.  Exactly-once under retry means every
@@ -106,7 +106,7 @@ def chaos_counts(token):
     return int(_chaos_counters.get(token, 0))
 
 
-@_reg.handler(name="chaos/reset")
+@_reg.handler(name="chaos/reset", read_only=False)
 def chaos_reset(token):
     """Clear this worker's counter for ``token`` (test isolation); returns
     the value it had."""

@@ -71,6 +71,7 @@ from repro.comm.base import CommBackend
 from repro.core import migratable as mig
 from repro.core.closure import Function
 from repro.core.errors import MessageFormatError, NodeDownError, OffloadError
+from repro.core.flags import MSG_ID_FLUSH
 from repro.core.future import Future, FutureTable
 from repro.core.executor import DirectPolicy, ExecutionPolicy
 from repro.core.message import (
@@ -188,8 +189,10 @@ class ReplayCache:
     """
 
     IN_PROGRESS = object()
-    #: ack threshold meaning "sender reset its msg_id space — flush"
-    FLUSH = 1 << 61
+    #: ack threshold meaning "sender reset its msg_id space — flush";
+    #: value lives in the centralized wire-constant registry, which asserts
+    #: it stays out of live msg_id space (repro.core.flags)
+    FLUSH = MSG_ID_FLUSH
 
     def __init__(self, cap: int = 4096):
         import collections
@@ -310,7 +313,6 @@ def _h_free(node_id, handle):
     node.buffers.free(BufferPtr(node_id, handle))
     node.dir_shard.pop(int(handle), None)  # gossip hygiene: copy is gone
     node._announce_buffer_freed(handle)
-    return None
 
 
 def _h_put(node_id, handle, offset, array):
@@ -319,7 +321,6 @@ def _h_put(node_id, handle, offset, array):
     flat = current_node().buffers.flat(BufferPtr(node_id, handle))
     n = array.size
     flat[offset : offset + n] = array.reshape(-1).astype(flat.dtype, copy=False)
-    return None
 
 
 def _h_get(node_id, handle, offset, count):
@@ -343,19 +344,16 @@ def _h_forward(dst, frame_bytes):
     target replies straight to the origin recorded in the inner header."""
     node = current_node()
     node._send_frame(dst, frame_bytes)
-    return None
 
 
 def _h_terminate():
     current_node().request_stop()
-    return None
 
 
 def _h_replay_ack(src_node, upto):
     """Cumulative replay-cache ack (oneway): every msg_id <= ``upto`` from
     ``src_node`` is complete at the sender — its cached replies can go."""
     current_node().replay.ack(int(src_node), int(upto))
-    return None
 
 
 def _h_dir_gossip(entries):
@@ -382,7 +380,6 @@ def _h_dir_gossip(entries):
         if cur is None or epoch >= cur[2]:
             shard[handle] = (primary, replicas, epoch, int(nbytes),
                              [int(d) for d in shape], str(dtype), session)
-    return None
 
 
 def _h_dir_dump():
@@ -397,20 +394,25 @@ def _h_dir_dump():
 
 
 def register_internal_handlers(registry=None) -> None:
+    # read_only is the replica-serving contract (see HandlerRecord): True
+    # only for handlers that never mutate node/buffer state.  alloc/free/put
+    # mutate the buffer registry; forward re-injects traffic; terminate,
+    # replay_ack and dir_gossip mutate runtime state.  get/ping/dir_dump
+    # are pure reads and may be served by any replica.
     reg = registry or default_registry()
-    for name, fn in (
-        ("_ham/alloc", _h_alloc),
-        ("_ham/free", _h_free),
-        ("_ham/put", _h_put),
-        ("_ham/get", _h_get),
-        ("_ham/ping", _h_ping),
-        ("_ham/forward", _h_forward),
-        ("_ham/terminate", _h_terminate),
-        ("_ham/replay_ack", _h_replay_ack),
-        ("_ham/dir_gossip", _h_dir_gossip),
-        ("_ham/dir_dump", _h_dir_dump),
+    for name, fn, read_only in (
+        ("_ham/alloc", _h_alloc, False),
+        ("_ham/free", _h_free, False),
+        ("_ham/put", _h_put, False),
+        ("_ham/get", _h_get, True),
+        ("_ham/ping", _h_ping, True),
+        ("_ham/forward", _h_forward, False),
+        ("_ham/terminate", _h_terminate, False),
+        ("_ham/replay_ack", _h_replay_ack, False),
+        ("_ham/dir_gossip", _h_dir_gossip, False),
+        ("_ham/dir_dump", _h_dir_dump, True),
     ):
-        reg.register(fn, name=name)
+        reg.register(fn, name=name, read_only=read_only)
 
 
 # module import = static initialisation (paper §4.3)

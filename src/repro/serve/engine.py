@@ -210,62 +210,13 @@ class ServingEngine:
 # cluster serving: continuous batching driven through the worker pool
 # --------------------------------------------------------------------------
 
-#: engines owned by pool workers, keyed by the identity of the worker's
-#: NodeRuntime — handlers resolve "their" engine via current_node().  (One
-#: entry per live runtime; ClusterServingEngine.close() removes its own.)
-_NODE_ENGINES: dict[int, "ServingEngine"] = {}
-
-
-def _h_serve_admit(prompt, rid, max_new_tokens, temperature):
-    """Admit one request into this node's engine (prefill runs HERE, on the
-    worker, overlapping other workers' decode steps).  Returns the first
-    generated token."""
-    from repro.core.errors import OffloadError
-    from repro.offload.runtime import current_node
-
-    eng = _NODE_ENGINES.get(id(current_node()))
-    if eng is None:
-        # the replica was retired (node mid-removal) or never built (a
-        # non-local worker mode) — fail diagnosably; the driver only admits
-        # through serving_nodes(), so reaching this is a routing bug
-        raise OffloadError("no serving-engine replica on this worker")
-    free = eng.free_slots()
-    if not free:
-        # a session re-placed here by a death mid-admission (the router's
-        # eligible= restriction applies to the engine's placement, not to a
-        # re-placement inside Scheduler.submit) — fail diagnosably rather
-        # than IndexError; the driver surfaces it as RemoteExecutionError
-        raise OffloadError("no free serving slot on this worker")
-    slot = free[0]
-    req = Request(
-        prompt=np.asarray(prompt, np.int32),
-        max_new_tokens=int(max_new_tokens),
-        temperature=float(temperature),
-        rid=int(rid),
-    )
-    eng.admit(req, slot)
-    return [int(rid), int(eng.outputs[req.rid][0])]
-
-
-def _h_serve_step():
-    """One decode step of this node's engine; returns the emitted
-    ``[rid, token]`` pairs plus the engine's free-slot count (ground truth
-    for the driver's admission accounting)."""
-    from repro.offload.runtime import current_node
-
-    eng = _NODE_ENGINES[id(current_node())]
-    emitted = eng.step()
-    return [[int(r), int(t)] for r, t in emitted], len(eng.free_slots())
-
-
-def register_serve_handlers(registry=None) -> None:
-    """Register the cluster-serving handlers (call before ``init()``)."""
-    from repro.core.registry import default_registry
-
-    reg = registry or default_registry()
-    for name, fn in (("_serve/admit", _h_serve_admit),
-                     ("_serve/step", _h_serve_step)):
-        reg.register(fn, name=name)
+# the control handlers and their replica map live in repro.serve.handlers
+# (a jax-free module, cheap for fresh-interpreter workers to re-import);
+# re-exported here for callers that predate the split
+from repro.serve.handlers import (  # noqa: E402,F401
+    _NODE_ENGINES,
+    register_serve_handlers,
+)
 
 
 class ClusterServingEngine:

@@ -1,0 +1,88 @@
+"""Cluster-serving control handlers, importable by worker processes.
+
+These live apart from ``repro.serve.engine`` because the *registering*
+module must be cheap to import everywhere: a worker derives its import
+list from the modules that define the host's handlers
+(:func:`repro.offload.worker.registered_setup_modules`), and if the
+handlers lived in ``engine.py`` every fresh-interpreter worker would pull
+the full jax stack at spawn just to re-register two control functions.
+Here the module-level registration (static initialisation, paper §4.3)
+costs a numpy import; the engine itself is only imported by nodes that
+actually host a serving replica.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.errors import RegistrySealedError
+
+#: engines owned by pool workers, keyed by the identity of the worker's
+#: NodeRuntime — handlers resolve "their" engine via current_node().  (One
+#: entry per live runtime; ClusterServingEngine.close() removes its own.)
+_NODE_ENGINES: dict[int, object] = {}
+
+
+def _h_serve_admit(prompt, rid, max_new_tokens, temperature):
+    """Admit one request into this node's engine (prefill runs HERE, on the
+    worker, overlapping other workers' decode steps).  Returns the first
+    generated token."""
+    from repro.core.errors import OffloadError
+    from repro.offload.runtime import current_node
+    from repro.serve.engine import Request
+
+    eng = _NODE_ENGINES.get(id(current_node()))
+    if eng is None:
+        # the replica was retired (node mid-removal) or never built (a
+        # non-local worker mode) — fail diagnosably; the driver only admits
+        # through serving_nodes(), so reaching this is a routing bug
+        raise OffloadError("no serving-engine replica on this worker")
+    free = eng.free_slots()
+    if not free:
+        # a session re-placed here by a death mid-admission (the router's
+        # eligible= restriction applies to the engine's placement, not to a
+        # re-placement inside Scheduler.submit) — fail diagnosably rather
+        # than IndexError; the driver surfaces it as RemoteExecutionError
+        raise OffloadError("no free serving slot on this worker")
+    slot = free[0]
+    req = Request(
+        prompt=np.asarray(prompt, np.int32),
+        max_new_tokens=int(max_new_tokens),
+        temperature=float(temperature),
+        rid=int(rid),
+    )
+    eng.admit(req, slot)
+    return [int(rid), int(eng.outputs[req.rid][0])]
+
+
+def _h_serve_step():
+    """One decode step of this node's engine; returns the emitted
+    ``[rid, token]`` pairs plus the engine's free-slot count (ground truth
+    for the driver's admission accounting)."""
+    from repro.offload.runtime import current_node
+
+    eng = _NODE_ENGINES[id(current_node())]
+    emitted = eng.step()
+    return [[int(r), int(t)] for r, t in emitted], len(eng.free_slots())
+
+
+def register_serve_handlers(registry=None) -> None:
+    """Register the cluster-serving handlers.  Safe to call repeatedly;
+    silently skipped on an already-sealed registry (as with the cluster /
+    dataplane sets — then callers must have registered before ``init()``)."""
+    from repro.core.registry import default_registry
+
+    # both handlers mutate the per-node engine (admission writes a prompt
+    # cache into the batch; step advances it) — never replica-servable
+    reg = registry or default_registry()
+    for name, fn, read_only in (("_serve/admit", _h_serve_admit, False),
+                                ("_serve/step", _h_serve_step, False)):
+        try:
+            reg.register(fn, name=name, read_only=read_only)
+        except RegistrySealedError:
+            return
+
+
+# module import = static initialisation: a worker that imports this module
+# (because the host's registry includes _serve/*) re-derives the same keys
+register_serve_handlers()

@@ -1,0 +1,256 @@
+"""Static analysis + model checking: the tools that gate the tools.
+
+Two engines under test (``docs/static-analysis.md``):
+
+* **hamlint** — the AST protocol linter.  A known-bad fixture corpus under
+  ``tests/fixtures/hamlint_bad/`` seeds one violation per rule variant; the
+  tests assert each rule fires at the exact file:line, that the live tree
+  is clean with zero suppressions, and that ``register()`` rejects at call
+  time the subset of defects that are cheap to detect dynamically.
+* **modelcheck** — the exhaustive-interleaving explorer.  The mitigated
+  protocol models must verify; toggling a mitigation off must rediscover
+  the corresponding historical bug (PR 1 torn counter, PR 7 lost wakeups)
+  within seconds, as a shortest counterexample trace.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.hamlint import lint_paths, main as hamlint_main
+from repro.analysis.modelcheck import explore, main as modelcheck_main
+from repro.analysis.models.doorbell import DoorbellModel
+from repro.analysis.models.ring_counters import RingCounterModel
+from repro.core.errors import RegistryError
+from repro.core.migratable import ArraySpec, ScalarSpec
+from repro.core.registry import HandlerRegistry
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "hamlint_bad"
+SRC = REPO / "src"
+
+
+def _line_of(path: Path, needle: str) -> int:
+    """1-based line number of the unique line containing ``needle``."""
+    hits = [
+        i
+        for i, line in enumerate(path.read_text().splitlines(), start=1)
+        if needle in line
+    ]
+    assert len(hits) == 1, f"{needle!r} not unique in {path}: {hits}"
+    return hits[0]
+
+
+@pytest.fixture(scope="module")
+def fixture_findings():
+    return lint_paths([str(FIXTURES)])
+
+
+def _expect(findings, rule: str, filename: str, line: int):
+    """Assert exactly one finding of ``rule`` at ``filename:line``."""
+    matches = [
+        f
+        for f in findings
+        if f.rule == rule and Path(f.path).name == filename and f.line == line
+    ]
+    assert len(matches) == 1, (
+        f"expected one {rule} at {filename}:{line}, got "
+        f"{[g.format() for g in findings]}"
+    )
+    return matches[0]
+
+
+# ---------------------------------------------------------------------------
+# hamlint: each rule fires on its fixture at the right location
+
+
+def test_readonly_purity_catches_inplace_mutation(fixture_findings):
+    line = _line_of(FIXTURES / "bad_readonly.py", "y += alpha")
+    f = _expect(fixture_findings, "HAM001", "bad_readonly.py", line)
+    assert "read_only=True" in f.message
+    assert f"line {line}" in f.message  # names the offending store
+
+
+def test_readonly_purity_catches_store_through_view(fixture_findings):
+    line = _line_of(FIXTURES / "bad_readonly.py", "row[:] = 0.0")
+    f = _expect(fixture_findings, "HAM001", "bad_readonly.py", line)
+    assert "row" in f.message
+
+
+def test_readonly_purity_catches_alias_escape(fixture_findings):
+    line = _line_of(FIXTURES / "bad_readonly.py", '_stash["x"]')
+    f = _expect(fixture_findings, "HAM001", "bad_readonly.py", line)
+    assert "alias escape" in f.message
+
+
+def test_spec_coherence_catches_arity_mismatch(fixture_findings):
+    # the finding anchors on the register() call that follows this comment
+    line = _line_of(FIXTURES / "bad_arity.py", "# three leaves") + 1
+    f = _expect(fixture_findings, "HAM002", "bad_arity.py", line)
+    assert "3 leaves" in f.message and "2 positional" in f.message
+
+
+def test_spec_coherence_catches_bad_scalar_kind(fixture_findings):
+    line = _line_of(FIXTURES / "bad_arity.py", 'ScalarSpec("u4")')
+    f = _expect(fixture_findings, "HAM002", "bad_arity.py", line)
+    assert "'u4'" in f.message
+
+
+def test_same_source_catches_foreign_registration(fixture_findings):
+    line = _line_of(FIXTURES / "bad_unreachable.py", 'name="bad/foreign_fn"')
+    f = _expect(fixture_findings, "HAM003", "bad_unreachable.py", line)
+    assert "_bad_unreachable_helper" in f.message
+
+
+def test_same_source_catches_never_at_import(fixture_findings):
+    line = _line_of(FIXTURES / "bad_unreachable.py", 'name="bad/never_at_import"')
+    f = _expect(fixture_findings, "HAM003", "bad_unreachable.py", line)
+    assert "never executes at import" in f.message
+
+
+def test_wire_constants_catches_collision_and_live_sentinel(fixture_findings):
+    line = _line_of(FIXTURES / "bad_flags.py", "FLAG_EXPERIMENTAL")
+    f = _expect(fixture_findings, "HAM004", "bad_flags.py", line)
+    assert "collides with FLAG_STATIC" in f.message
+    line = _line_of(FIXTURES / "bad_flags.py", "MSG_ID_DRAIN")
+    f = _expect(fixture_findings, "HAM004", "bad_flags.py", line)
+    assert "INSIDE live msg_id space" in f.message
+
+
+def test_fixture_corpus_is_fully_accounted_for(fixture_findings):
+    """Every fixture finding is one the tests above asserted — a rule that
+    starts over- or under-firing on the corpus fails here."""
+    by_rule = sorted(f.rule for f in fixture_findings)
+    assert by_rule == [
+        "HAM001", "HAM001", "HAM001",
+        "HAM002", "HAM002",
+        "HAM003", "HAM003",
+        "HAM004", "HAM004",
+    ]
+
+
+def test_live_tree_is_clean_with_zero_suppressions():
+    findings = lint_paths([str(SRC)])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_exit_codes(capsys):
+    assert hamlint_main([str(SRC)]) == 0
+    assert hamlint_main([str(FIXTURES)]) == 1
+    out = capsys.readouterr().out
+    # CLI output is file:line:col: RULE message
+    assert "bad_readonly.py:" in out and "HAM001" in out
+
+
+# ---------------------------------------------------------------------------
+# register(): the cheap subset of hamlint, enforced at call time
+
+
+def test_register_rejects_arity_mismatch():
+    reg = HandlerRegistry()
+
+    def takes_two(a, b):
+        return a
+
+    with pytest.raises(RegistryError, match="hamlint"):
+        reg.register(
+            takes_two,
+            arg_specs=(ScalarSpec("i8"), ScalarSpec("i8"), ScalarSpec("f8")),
+            name="t/arity",
+        )
+
+
+def test_register_rejects_uncompilable_specs():
+    reg = HandlerRegistry()
+
+    def takes_one(a):
+        return a
+
+    with pytest.raises(RegistryError, match="t/kind"):
+        reg.register(takes_one, arg_specs=(ScalarSpec("u4"),), name="t/kind")
+
+
+def test_register_accepts_valid_specs():
+    reg = HandlerRegistry()
+
+    def saxpy(a, x, y):
+        return y
+
+    rec = reg.register(
+        saxpy,
+        arg_specs=(
+            ScalarSpec("f8"),
+            ArraySpec((4,), "float32"),
+            ArraySpec((4,), "float32"),
+        ),
+        name="t/ok",
+    )
+    assert rec.stable_name.startswith("t/ok")
+
+
+# ---------------------------------------------------------------------------
+# modelcheck: mitigated protocols verify, broken variants rediscover bugs
+
+
+def test_ring_counters_mitigated_verifies():
+    result = explore(RingCounterModel(publishes=2, mitigated=True))
+    assert result.ok, result.describe()
+    assert result.states > 100  # exhaustive, not a trivial walk
+
+
+def test_ring_counters_broken_rediscovers_pr1_torn_read():
+    start = time.monotonic()
+    result = explore(RingCounterModel(publishes=2, mitigated=False))
+    assert time.monotonic() - start < 5.0
+    assert not result.ok
+    assert "torn counter" in result.violation
+    # the counterexample is the historical race: a raw read split across a
+    # writer's two half-word stores fabricates a never-published value
+    assert any("accept raw primary" in step for step in result.trace)
+
+
+def test_doorbell_mitigated_verifies():
+    result = explore(DoorbellModel(producers=2, items=1))
+    assert result.ok, result.describe()
+
+
+def test_doorbell_no_repoll_rediscovers_lost_wakeup():
+    start = time.monotonic()
+    result = explore(DoorbellModel(producers=1, items=1, repoll=False))
+    assert time.monotonic() - start < 5.0
+    assert not result.ok
+    assert "lost wakeup" in result.violation
+    assert any("FUTEX_WAIT parks" in step for step in result.trace)
+
+
+def test_doorbell_no_seq_check_rediscovers_lost_wakeup():
+    result = explore(DoorbellModel(producers=1, items=1, seq_check=False))
+    assert not result.ok
+    assert "lost wakeup" in result.violation
+
+
+def test_doorbell_model_tracks_implementation_step_order(monkeypatch):
+    """The model builds its consumer from CONSUMER_PARK_PROTOCOL, so an
+    implementation reorder (snapshotting seq AFTER the re-poll — a real
+    lost-wakeup window) is model-checked, not assumed away."""
+    import repro.analysis.models.doorbell as model_mod
+
+    monkeypatch.setattr(
+        model_mod,
+        "CONSUMER_PARK_PROTOCOL",
+        ("arm", "repoll", "read_seq", "wait_if_unchanged"),
+    )
+    result = explore(DoorbellModel(producers=1, items=1))
+    assert not result.ok
+    assert "lost wakeup" in result.violation
+
+
+def test_modelcheck_cli_quick_gate(capsys):
+    start = time.monotonic()
+    assert modelcheck_main(["--quick"]) == 0
+    assert time.monotonic() - start < 5.0
+    out = capsys.readouterr().out
+    assert out.count("[PASS]") == 5

@@ -23,7 +23,6 @@ def _h_bump(ptr):
     from repro.offload.api import deref
 
     deref(ptr)[...] += 1.0
-    return None
 
 
 def _registry():

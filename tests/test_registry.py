@@ -8,7 +8,11 @@ from repro.core.registry import HandlerRegistry
 
 
 def _noop():
-    return None
+    pass
+
+
+def _ident(x):
+    return x
 
 
 def _mk(names):
@@ -112,9 +116,9 @@ def test_static_spec_part_of_identity():
     import numpy as np
 
     reg1 = HandlerRegistry()
-    reg1.register(_noop, name="h", arg_specs=(ham.spec_of(np.zeros(4)),))
+    reg1.register(_ident, name="h", arg_specs=(ham.spec_of(np.zeros(4)),))
     reg2 = HandlerRegistry()
-    reg2.register(_noop, name="h", arg_specs=(ham.spec_of(np.zeros(8)),))
+    reg2.register(_ident, name="h", arg_specs=(ham.spec_of(np.zeros(8)),))
     assert reg1.init().digest != reg2.init().digest
 
 

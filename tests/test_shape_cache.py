@@ -157,8 +157,7 @@ def _domain_result(shape_cache: bool):
         w._shape_cache = ShapeCache() if shape_cache else None
     try:
         call = f2f("demo/add", np.arange(4.0), np.full(4, 2.0))
-        outs = [dom.sync(1, call) for _ in range(3)]
-        return outs
+        return [dom.sync(1, call) for _ in range(3)]
     finally:
         dom.shutdown()
 

@@ -24,7 +24,6 @@ def _user_handlers(reg):
 
     def scale(ptr, alpha):
         deref(ptr)[:] *= alpha
-        return None
 
     reg.register(inner_prod, name="app/inner_prod")
     reg.register(scale, name="app/scale")
