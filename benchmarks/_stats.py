@@ -1,0 +1,62 @@
+"""Shared statistics helpers for the benchmark suite.
+
+Every section used to carry its own ``_median_us`` copy (identical up to
+the default repeat counts) and its own percentile arithmetic; they live
+here once so a methodology change — warmup policy, percentile convention —
+lands in one place and applies to every published ``BENCH_*.json`` number.
+
+Percentiles use the **nearest-rank** convention: p99 of 100 samples is the
+99th-largest observation, never an interpolated value that no request
+actually experienced.  SLO math must be pessimistic about tails, and
+interpolation between the two worst samples understates them.
+"""
+
+from __future__ import annotations
+
+import math
+import statistics
+import time
+from typing import Callable, Iterable, Sequence
+
+__all__ = ["median", "median_us", "percentile", "percentiles"]
+
+
+def median(xs: Iterable[float]) -> float:
+    return statistics.median(xs)
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile of ``xs`` (``p`` in [0, 100])."""
+    if not xs:
+        raise ValueError("percentile of an empty sample")
+    if not 0 <= p <= 100:
+        raise ValueError(f"percentile {p} outside [0, 100]")
+    s = sorted(xs)
+    rank = max(1, math.ceil(p / 100.0 * len(s)))
+    return s[rank - 1]
+
+
+def percentiles(xs: Sequence[float],
+                ps: Sequence[float] = (50, 99)) -> dict[str, float]:
+    """``{"p50": ..., "p99": ...}`` over one sorted pass of ``xs``."""
+    s = sorted(xs)
+    out = {}
+    for p in ps:
+        label = f"p{p:g}"
+        out[label] = percentile(s, p)
+    return out
+
+
+def median_us(fn: Callable[[], object], n: int, warmup: int) -> float:
+    """Median wall time of ``fn()`` in microseconds over ``n`` timed calls
+    after ``warmup`` untimed ones — the suite's standard microbenchmark
+    primitive (per-call medians are robust against scheduler/GC
+    stragglers; means are not)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    return statistics.median(ts)

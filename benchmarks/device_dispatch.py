@@ -14,24 +14,16 @@ Plus ``switch_scaling``: table dispatch cost vs table size (O(1) claim).
 
 from __future__ import annotations
 
-import statistics
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.device_table import DeviceHandlerTable
 
+from benchmarks._stats import median_us
+
 
 def _median_us(fn, n=300, warmup=20) -> float:
-    for _ in range(warmup):
-        fn()
-    ts = []
-    for _ in range(n):
-        t0 = time.perf_counter_ns()
-        fn()
-        ts.append((time.perf_counter_ns() - t0) / 1e3)
-    return statistics.median(ts)
+    return median_us(fn, n, warmup)
 
 
 def _make_branches(k: int):

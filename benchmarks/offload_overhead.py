@@ -14,9 +14,7 @@ validation criterion is a large HAM-vs-naive ratio on identical transport.
 
 from __future__ import annotations
 
-import statistics
 import sys
-import time
 
 import repro.offload.demo_handlers  # noqa: F401  (registers demo/empty*)
 from repro.comm.local import LocalFabric
@@ -32,17 +30,11 @@ from repro.offload.worker import (
 )
 
 from benchmarks import naive_rpc
+from benchmarks._stats import median_us
 
 
 def _median_us(fn, n, warmup=50) -> float:
-    for _ in range(warmup):
-        fn()
-    ts = []
-    for _ in range(n):
-        t0 = time.perf_counter_ns()
-        fn()
-        ts.append((time.perf_counter_ns() - t0) / 1e3)
-    return statistics.median(ts)
+    return median_us(fn, n, warmup)
 
 
 def _ensure_init():

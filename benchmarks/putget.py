@@ -8,7 +8,6 @@ records both.
 
 from __future__ import annotations
 
-import statistics
 import time
 
 import numpy as np
@@ -16,6 +15,8 @@ import numpy as np
 import repro.offload.demo_handlers  # noqa: F401
 from repro.core.registry import default_registry
 from repro.offload.api import OffloadDomain
+
+from benchmarks._stats import median
 
 
 #: (nbytes, label) per measured transfer size; smoke trims to the smallest
@@ -84,7 +85,7 @@ def run_median(smoke: bool = False) -> dict[str, float]:
                     t0 = time.perf_counter()
                     fn()
                     ts.append((time.perf_counter() - t0) * 1e6)
-                out[f"{prefix}{op}_{label}"] = round(statistics.median(ts), 1)
+                out[f"{prefix}{op}_{label}"] = round(median(ts), 1)
             dom.free(ptr)
     dom.shutdown()
     return out

@@ -43,12 +43,13 @@ absolute static-RTT ceiling are gated by ``benchmarks/trend_gate.py``.
 
 from __future__ import annotations
 
-import statistics
 import time
 
 import repro.offload.demo_handlers  # noqa: F401 — registers demo/echo_small_*
 from repro.core.closure import f2f
 from repro.core.registry import default_registry
+
+from benchmarks._stats import median, median_us
 
 #: pre-WirePlan numbers for the same echo_small call shapes, measured at the
 #: PR-3 revision in this container (shm fabric, forked worker, idle machine)
@@ -73,14 +74,7 @@ TARGET_DYN_REPEAT_MAX_RATIO = 1.3
 
 
 def _median_us(fn, n, warmup) -> float:
-    for _ in range(warmup):
-        fn()
-    ts = []
-    for _ in range(n):
-        t0 = time.perf_counter_ns()
-        fn()
-        ts.append((time.perf_counter_ns() - t0) / 1e3)
-    return statistics.median(ts)
+    return median_us(fn, n, warmup)
 
 
 def _shm_available() -> bool:
@@ -186,7 +180,7 @@ def _fused_oneway_rate(dom, host, n_batches: int, reps: int) -> float:
         dom.ping(1, timeout=60.0)
         rates.append(n_batches * FUSE_MAX_SEGMENTS
                      / (time.perf_counter() - t0))
-    return statistics.median(rates)
+    return median(rates)
 
 
 def _relay_rate(n_calls: int, reps: int, env: dict | None) -> float | None:
@@ -227,7 +221,7 @@ def _relay_rate(n_calls: int, reps: int, env: dict | None) -> float | None:
             burst(n_batches)
             rates.append(n_batches * FUSE_MAX_SEGMENTS
                          / (time.perf_counter() - t0))
-        return statistics.median(rates)
+        return median(rates)
     finally:
         _teardown(dom, procs)
 
@@ -279,7 +273,7 @@ def measure(smoke: bool = False) -> dict:
             t0 = time.perf_counter()
             fn()
             ts.append(time.perf_counter() - t0)
-        return statistics.median(ts) / stream_n * 1e6
+        return median(ts) / stream_n * 1e6
 
     try:
         rtt_static = _median_us(lambda: host.send_sync(1, call_static),

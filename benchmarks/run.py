@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
 * ``serialise/*``  — static bitwise pack vs self-describing vs pickle
 * ``putget/*``     — offload data-plane bandwidth
 * ``cluster/*``    — pipelined scheduler throughput vs serial round trips
+* ``serving/*``    — worker-driven continuous batching vs the lockstep
+  drive, open-loop Poisson SLOs, kill-under-traffic recovery
 
 ``--smoke`` runs every section at tiny sizes with one repeat — a CI
 tripwire, not a measurement: the ``BENCH_*.json`` files it writes are
@@ -41,6 +43,7 @@ def main(argv=None) -> None:
         putget,
         registry_scaling,
         serialisation,
+        serving,
     )
 
     # the serialisation section's rows are reused by batching.run (which
@@ -61,6 +64,8 @@ def main(argv=None) -> None:
          lambda smoke=False: batching.run(
              smoke=smoke, serialise_rows=serialise_rows or None)),
         ("cluster (scheduler pipelining -> BENCH_cluster.json)", cluster.run),
+        ("serving (worker-driven continuous batching -> BENCH_serving.json)",
+         serving.run),
     ]
     failures = 0
     print("name,us_per_call,derived")

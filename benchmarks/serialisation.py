@@ -8,23 +8,16 @@ quantifies what that buys over self-describing encodings.
 from __future__ import annotations
 
 import pickle
-import statistics
-import time
 
 import numpy as np
 
 from repro.core import migratable as mig
 
+from benchmarks._stats import median_us
+
 
 def _median_us(fn, n=2000, warmup=100) -> float:
-    for _ in range(warmup):
-        fn()
-    ts = []
-    for _ in range(n):
-        t0 = time.perf_counter_ns()
-        fn()
-        ts.append((time.perf_counter_ns() - t0) / 1e3)
-    return statistics.median(ts)
+    return median_us(fn, n, warmup)
 
 
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:

@@ -91,6 +91,15 @@ TRACKED = {
         "rpc_us.speedup.dynamic_shaped_stream_vs_tlv",
         "rpc_us.speedup.relay_fused_vs_unfused",
     ],
+    "BENCH_serving.json": [
+        # worker-driven serving PR: aggregate decode throughput, its ratio
+        # over the lockstep drive, and kill-under-traffic recovery (the
+        # recovery leaves must stay 1.0 — zero tolerance below)
+        "serving.tokens_per_s",
+        "serving.speedup_vs_lockstep",
+        "serving.kill_recovery.slo_held",
+        "serving.kill_recovery.completed_fraction",
+    ],
 }
 
 #: ``file:path`` -> ceiling — LOWER-is-better absolute gates, judged against
@@ -105,6 +114,11 @@ TRACKED = {
 #: higher-is-better ratios).
 CEILINGS = {
     "BENCH_hotpath.json:rpc_us.rtt_us.static": 1500.0,
+    # the worker-driven serving contract: ~1 admission RPC per request and
+    # nothing per token — at max_new_tokens >= 16 that is <= 1/16 with
+    # margin for cancel/recovery traffic.  Breaching 0.1 means the host is
+    # back in the per-token loop.
+    "BENCH_serving.json:serving.host_rpcs_per_token": 0.1,
 }
 
 
@@ -112,6 +126,11 @@ CEILINGS = {
 #: meaningless to compare between a full baseline and a smoke fresh run
 SMOKE_SIZE_DEPENDENT = {
     "BENCH_hotpath.json": ["batching_speedup_x64"],
+    # absolute tokens/s depends on request count/budget and the runner;
+    # the speedup ratio also shifts with the smoke leg's shorter decode
+    # budgets (fewer steps amortising each admission)
+    "BENCH_serving.json": ["serving.tokens_per_s",
+                           "serving.speedup_vs_lockstep"],
 }
 
 #: correctness leaves gated with ZERO tolerance (point and slope): these are
@@ -120,6 +139,10 @@ SMOKE_SIZE_DEPENDENT = {
 ZERO_TOLERANCE = {
     "BENCH_cluster.json:recovery.recovered_fraction",
     "BENCH_cluster.json:recovery.host_restart.recovered_fraction",
+    # kill-a-worker-under-live-traffic: every request must finish with its
+    # full token budget and the SLO must hold through the failure
+    "BENCH_serving.json:serving.kill_recovery.slo_held",
+    "BENCH_serving.json:serving.kill_recovery.completed_fraction",
 }
 
 

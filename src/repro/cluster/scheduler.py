@@ -265,6 +265,7 @@ class Scheduler:
             "retries": 0,
             "deadline_failed": 0,
             "replay_acks": 0,
+            "oneways": 0,
             "routed": {n: 0 for n in pool.worker_nodes},
         }
         #: sticky-session affinity over this scheduler's live set
@@ -526,6 +527,44 @@ class Scheduler:
         if not changed:
             return function
         return Function(function.record, new_args)
+
+    def oneway(self, function: Function, *, node: int | None = None,
+               session=None) -> None:
+        """Fire-and-forget control send: no future, no credit, no reply —
+        the cluster-level twin of ``NodeRuntime.send_oneway`` with this
+        scheduler's routing applied.  ``session=`` follows the sticky pin
+        (a cancel must land on the worker decoding the session), ``node=``
+        pins, otherwise the policy picks.  Raises :class:`NodeDownError` /
+        :class:`OffloadError` when no target is live; delivery past the
+        send is best-effort (docs/failure-model.md: oneways are
+        at-most-once)."""
+        if node is not None and session is not None:
+            raise OffloadError("oneway takes node= or session=, not both")
+        if node is not None:
+            if not self._is_live(node):
+                raise NodeDownError(f"worker {node} is down")
+            target = node
+        elif session is not None:
+            target = self.sessions.route(session)
+            if target is None:
+                raise OffloadError("no live workers in the pool")
+        else:
+            target = self._pick(function)
+            if target is None:
+                raise OffloadError("no live workers in the pool")
+        function = self._resolve_for(function, target)
+        domain = getattr(self.pool, "domain", None)
+        if domain is None:
+            raise OffloadError("pool exposes no oneway transport")
+        if self.fuse_window is not None:
+            # must not overtake calls parked for fusion toward this target
+            with self._send_lock(target):
+                self._pop_and_send(target)
+                domain.oneway(target, function)
+        else:
+            domain.oneway(target, function)
+        with self._lock:
+            self.stats["oneways"] += 1
 
     def end_session(self, key) -> None:
         """End a sticky session: drop its routing pin AND free the buffers

@@ -92,7 +92,8 @@ class SessionRouter:
         self._live_nodes = live_nodes
         self._pins: dict[Hashable, int] = {}
         self._lock = threading.Lock()
-        self.stats = {"placed": 0, "replaced": 0, "hits": 0, "recovered": 0}
+        self.stats = {"placed": 0, "replaced": 0, "hits": 0, "recovered": 0,
+                      "ended": 0}
 
     def route(self, key: Hashable, *, eligible: Iterable[int] | None = None) -> int | None:
         """Worker for ``key``: the live pin if one exists, else a fresh HRW
@@ -140,7 +141,8 @@ class SessionRouter:
 
     def end_session(self, key: Hashable) -> None:
         with self._lock:
-            self._pins.pop(key, None)
+            if self._pins.pop(key, None) is not None:
+                self.stats["ended"] += 1
 
     def sessions_on(self, node: int) -> list:
         with self._lock:

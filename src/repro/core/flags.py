@@ -75,6 +75,26 @@ MSG_ID_SENTINELS: dict[str, int] = {
     "MSG_ID_FLUSH": MSG_ID_FLUSH,
 }
 
+# -- serve/stream status words ---------------------------------------------
+
+#: status word carried by every ``_serve/stream`` token oneway (the
+#: worker-driven serving path, docs/serving.md).  A tiny shared namespace
+#: like the flag bits: host and workers must agree on these across
+#: versions, so they live here, not in the serving modules.  ``TOKEN`` and
+#: ``DONE`` messages carry a real token; ``CANCELLED``/``EXPIRED`` are
+#: end-of-stream markers whose token field is a placeholder (-1).
+SERVE_STREAM_STATUS: dict[str, int] = {
+    "STREAM_TOKEN": 0,      # one decoded token, request still running
+    "STREAM_DONE": 1,       # final token: the request reached its budget
+    "STREAM_CANCELLED": 2,  # request cancelled; slot freed, no token
+    "STREAM_EXPIRED": 3,    # request deadline passed; slot freed, no token
+}
+
+STREAM_TOKEN = SERVE_STREAM_STATUS["STREAM_TOKEN"]
+STREAM_DONE = SERVE_STREAM_STATUS["STREAM_DONE"]
+STREAM_CANCELLED = SERVE_STREAM_STATUS["STREAM_CANCELLED"]
+STREAM_EXPIRED = SERVE_STREAM_STATUS["STREAM_EXPIRED"]
+
 
 def _validate() -> None:
     """Import-time collision assertions — the module refuses to load with
@@ -103,6 +123,9 @@ def _validate() -> None:
             f"header field widths sum to {header_bits} bits, expected 256 "
             "(the fixed 32-byte header)"
         )
+    statuses = list(SERVE_STREAM_STATUS.values())
+    if len(set(statuses)) != len(statuses):
+        raise AssertionError("colliding serve-stream status words")
 
 
 _validate()

@@ -32,6 +32,10 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0     # 0 => greedy
     rid: int = -1
+    #: seconds of decode budget from admission (None => no deadline).  An
+    #: expired request leaves the running batch at the next step, frees its
+    #: slot and ends its session (docs/failure-model.md: abandoned requests)
+    deadline: float | None = None
 
 
 def build_serve_table(model, params, *, sharder=None, window=None):
@@ -102,12 +106,13 @@ class ServingEngine:
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.payload
         )
         self.dispatch = self.table.build(spec, donate_payload=donate)
+        # un-jitted dispatch, scanned by step_many (fused multi-step blocks)
+        self._dispatch_raw = self.table.build(spec, jit=False)
+        self._multi_fns: dict[int, Any] = {}
         self.key_greedy = self.table.key_of("serve/decode_greedy")
         self.key_sample = self.table.key_of("serve/decode_sample")
         self.key_noop = self.table.key_of("serve/noop")
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, sharder=sharder)
-        )
+        self._admit_fused = self._build_admit_fused(sharder)
         # slot bookkeeping (host side)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.slot_remaining = np.zeros(num_slots, np.int64)
@@ -116,45 +121,76 @@ class ServingEngine:
 
     # -- slot admission ----------------------------------------------------------
 
-    def _insert_cache(self, prompt_cache, slot: int) -> None:
-        """Write a single-sequence prompt cache into the batch cache at
-        ``slot``.  Each leaf's batch axis is the axis where the prompt leaf
-        has extent 1 and the full cache has ``num_slots``; prompt caches
-        shorter than max_len (KV) land at offset 0 via dynamic_update_slice.
-        """
+    def _build_admit_fused(self, sharder):
+        """Compile the whole admission — prefill, batch-cache insert, slot
+        token/pos writes, first-token argmax — into ONE dispatch.  The
+        eager path pays a separate op dispatch per cache leaf (a dozen
+        ``dynamic_update_slice`` launches); fused, an admit costs one
+        executable call, which is what keeps TTFT flat under load.  The
+        slot index rides as device data (traced scalar), so one compile
+        covers every slot; prompt *length* is a shape, so each distinct
+        length compiles once (same as the bare prefill jit)."""
+        model, B = self.model, self.B
 
-        def ins(full, part):
+        def ins(full, part, slot):
             part = part.astype(full.dtype)
             batch_axis = None
             for a in range(full.ndim):
-                if part.shape[a] == 1 and full.shape[a] == self.B:
+                if part.shape[a] == 1 and full.shape[a] == B:
                     batch_axis = a
                     break
-            if batch_axis is None:  # B == 1 or already matching: overwrite
+            if batch_axis is None:
                 batch_axis = 0 if full.shape == part.shape else None
-            starts = [0] * full.ndim
+            starts: list = [0] * full.ndim
             if batch_axis is not None:
                 starts[batch_axis] = slot
             return jax.lax.dynamic_update_slice(full, part, tuple(starts))
 
-        self.payload["cache"] = jax.tree_util.tree_map(
-            ins, self.payload["cache"], prompt_cache
-        )
+        def admit_fused(params, cache, tokens, pos, prompt, slot):
+            logits, pcache = model.prefill(
+                params, {"tokens": prompt}, sharder=sharder
+            )
+            cache = jax.tree_util.tree_map(
+                lambda f, p: ins(f, p, slot), cache, pcache
+            )
+            first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            tokens = jax.lax.dynamic_update_slice(tokens, first[:, None],
+                                                  (slot, 0))
+            pos = jax.lax.dynamic_update_slice(
+                pos, jnp.full((1,), prompt.shape[1], jnp.int32), (slot,)
+            )
+            return cache, tokens, pos, first[0]
+
+        return jax.jit(admit_fused, donate_argnums=(1, 2, 3))
 
     def admit(self, req: Request, slot: int) -> None:
         prompt = np.asarray(req.prompt, np.int32)[None, :]  # (1, S)
-        batch = {"tokens": jnp.asarray(prompt)}
-        logits, prompt_cache = self._prefill(self.params, batch)
-        self._insert_cache(prompt_cache, slot)
-        first = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        self.payload["tokens"] = self.payload["tokens"].at[slot, 0].set(first[0])
-        self.payload["pos"] = self.payload["pos"].at[slot].set(prompt.shape[1])
+        cache, tokens, pos, first = self._admit_fused(
+            self.params, self.payload["cache"], self.payload["tokens"],
+            self.payload["pos"], jnp.asarray(prompt),
+            jnp.asarray(slot, jnp.int32),
+        )
+        self.payload["cache"] = cache
+        self.payload["tokens"] = tokens
+        self.payload["pos"] = pos
         self.slot_req[slot] = req
         self.slot_remaining[slot] = req.max_new_tokens - 1
-        self.outputs[req.rid] = [int(first[0])]
+        self.outputs[req.rid] = [int(first)]
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def evict(self, rid: int) -> bool:
+        """Free the slot decoding ``rid`` without emitting — the
+        cancel/deadline departure path: the request simply isn't part of
+        the next step's active set (its stale cache lane is overwritten by
+        the next admission)."""
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                self.slot_req[slot] = None
+                self.slot_remaining[slot] = 0
+                return True
+        return False
 
     # -- stepping ------------------------------------------------------------------
 
@@ -163,12 +199,18 @@ class ServingEngine:
 
         Returns the ``(rid, token)`` pairs emitted this step (empty for a
         noop step) — the unit a pool driver streams back per completion.
+
+        Early-out: with every slot idle and no explicit ``key``, the call
+        returns immediately WITHOUT dispatching — a fully empty batch must
+        not burn a padded noop decode (the worker loop parks on its
+        doorbell instead; an explicit ``key=`` still dispatches, which is
+        what the noop-preservation test exercises).
         """
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if key is None and not active:
+            return []
         if key is None:
-            if not active:
-                key = self.key_noop
-            elif any(r is not None and r.temperature > 0 for r in self.slot_req):
+            if any(r is not None and r.temperature > 0 for r in self.slot_req):
                 key = self.key_sample
             else:
                 key = self.key_greedy
@@ -189,6 +231,71 @@ class ServingEngine:
             self.slot_remaining[slot] -= 1
             if self.slot_remaining[slot] <= 0:
                 self.slot_req[slot] = None
+        return emitted
+
+    def _multi_dispatch(self, k: int):
+        raw = self._dispatch_raw
+
+        def multi(key, payload):
+            def body(p, _):
+                p2 = raw(key, p)
+                return p2, p2["tokens"][:, 0]
+
+            return jax.lax.scan(body, payload, None, length=k)
+
+        return jax.jit(multi, donate_argnums=(1,))
+
+    def step_many(self, k: int) -> list[tuple[int, int]]:
+        """Up to ``k`` decode steps fused into ONE device dispatch: a
+        ``lax.scan`` over the same compiled handler table, returning the
+        stacked per-step tokens in a single host transfer.
+
+        This is the worker-driven loop's amortisation lever: the per-step
+        Python/dispatch overhead that dominates a tiny decode step is paid
+        once per *block* instead of once per token.  A lockstep driver
+        cannot use it — it must observe every step over an RPC round trip.
+
+        Semantics match ``k`` sequential :meth:`step` calls for greedy
+        decode: slot lanes are independent, so a slot whose budget ends
+        mid-block simply has its surplus lane tokens dropped host-side
+        (the lane keeps computing on stale state, exactly like any freed
+        lane does between admissions).  Sampling falls back to single
+        steps — a fused block would advance the shared rng stream past
+        what the lockstep drive consumes, breaking mode comparability.
+        """
+        if k <= 1:
+            return self.step()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        if any(self.slot_req[s].temperature > 0 for s in active):
+            out: list[tuple[int, int]] = []
+            for _ in range(k):
+                out.extend(self.step())
+                if all(r is None for r in self.slot_req):
+                    break
+            return out
+        fn = self._multi_fns.get(k)
+        if fn is None:
+            fn = self._multi_fns[k] = self._multi_dispatch(k)
+        self.payload["temp"] = jnp.asarray(0.0, jnp.float32)
+        self.payload, toks = fn(
+            jnp.asarray(self.key_greedy, jnp.int32), self.payload
+        )
+        self.steps_dispatched += k
+        toks_np = np.asarray(toks)  # (k, B)
+        emitted: list[tuple[int, int]] = []
+        for i in range(k):
+            for slot in active:
+                req = self.slot_req[slot]
+                if req is None:
+                    continue  # budget reached earlier in this block
+                tok = int(toks_np[i, slot])
+                emitted.append((req.rid, tok))
+                self.outputs[req.rid].append(tok)
+                self.slot_remaining[slot] -= 1
+                if self.slot_remaining[slot] <= 0:
+                    self.slot_req[slot] = None
         return emitted
 
     def run(self, requests: list[Request]) -> dict[int, list[int]]:
@@ -215,6 +322,11 @@ class ServingEngine:
 # re-exported here for callers that predate the split
 from repro.serve.handlers import (  # noqa: E402,F401
     _NODE_ENGINES,
+    _NODE_LOOPS,
+    _STREAM_BLOCK_SINKS,
+    _STREAM_SINKS,
+    MAX_PROMPT,
+    pad_prompt,
     register_serve_handlers,
 )
 
@@ -223,12 +335,24 @@ class ClusterServingEngine:
     """Continuous batching sharded across a worker pool.
 
     One :class:`ServingEngine` replica per pool worker (thread workers —
-    the replicas share the process and its jax devices); the host drives
-    them through a :class:`~repro.cluster.scheduler.Scheduler` with one
-    pipelined step call in flight per active worker, so decode steps for
-    different request slots overlap across workers (compiled jax steps
-    release the GIL).  Admissions are async too: a prefill on worker A
-    overlaps decode on worker B.
+    the replicas share the process and its jax devices).  Two drive modes:
+
+    **Worker-driven** (default, the production path — docs/serving.md):
+    each replica gets a :class:`~repro.serve.stream.WorkerDecodeLoop` that
+    self-steps its continuous batch; the host's per-request involvement is
+    ONE ``_serve/admit_stream`` slot-lease call (FLAG_STATIC), after which
+    tokens stream back as fused ``_serve/stream`` oneways.  The host loop
+    reduces to admission control — per-worker slot accounting plus a
+    bounded admission queue that sheds with :class:`OffloadError` on
+    overflow — and completion bookkeeping through the
+    :class:`~repro.cluster.sessions.SessionRouter`.  Host RPCs per emitted
+    token drop from ~1 (lockstep) to ``1/max_new_tokens``.
+
+    **Lockstep** (``worker_driven=False``): the host drives every replica
+    with one pipelined ``_serve/step`` call in flight per active worker —
+    kept behind the flag as the benchmark's comparison leg; both modes
+    produce token-identical output on the same prompts/seed (greedy decode
+    is deterministic and slot-isolated).
 
     Request routing goes through the scheduler's :class:`SessionRouter`:
     each request is a session keyed ``serve/<rid>``, placed once by
@@ -260,7 +384,10 @@ class ClusterServingEngine:
 
     def __init__(self, model, params, *, num_workers: int = 2,
                  slots_per_worker: int = 2, max_len: int, seed: int = 0,
-                 registry=None):
+                 registry=None, worker_driven: bool = True,
+                 admission_limit: int | None = None, decode_block: int = 16):
+        import threading
+
         from repro.cluster.pool import ClusterPool, register_cluster_handlers
         from repro.cluster.scheduler import Scheduler
         from repro.core.registry import HandlerRegistry
@@ -274,18 +401,49 @@ class ClusterServingEngine:
             registry.init()
         self.registry = registry
         self.slots_per_worker = slots_per_worker
+        self.worker_driven = bool(worker_driven)
+        #: bounded admission queue (worker-driven mode): submit_request
+        #: sheds with OffloadError past this depth; None => unbounded
+        self.admission_limit = admission_limit
+        #: decode steps each worker loop fuses per iteration (step_many)
+        self.decode_block = max(1, int(decode_block))
         self._model, self._params = model, params
         self._max_len, self._seed = max_len, seed
         self.pool = ClusterPool.local(num_workers, registry=registry)
         self.sched = Scheduler(self.pool, policy="least_outstanding",
                                max_inflight=slots_per_worker + 2)
         self._engine_keys: dict[int, int] = {}  # node -> id(runtime)
+        # -- worker-driven host state (all guarded by _wd) ------------------
+        self._wd = threading.Condition()
+        self._pending: list[Request] = []       # admission queue (FIFO)
+        self._transcripts: dict[int, list[int]] = {}
+        self._events: dict[int, dict] = {}      # rid -> timing/seq record
+        self._gen: dict[int, int] = {}          # rid -> stream generation
+        self._budget: dict[int, int] = {}
+        self._temp: dict[int, float] = {}
+        self._prompt0: dict[int, Any] = {}
+        self._expires: dict[int, float | None] = {}   # absolute monotonic
+        self._placed: dict[int, int] = {}       # rid -> node decoding it
+        self._admitting: dict[int, int] = {}    # rid -> node, admit in flight
+        self._active: dict[int, int] = {}       # node -> occupied slots
+        self._queued: dict[int, int] = {}       # node -> unconfirmed admits
+        self._done: dict[int, int] = {}         # rid -> final stream status
+        self._cancel_req: dict[int, int] = {}   # rid -> requested status
+        self._errors: dict[int, Exception] = {}
+        self._end_q: list[int] = []             # sessions to end (pump-side)
+        self._next_rid = 0
+        self.shed = 0                           # admission-overflow count
+        self._pump: threading.Thread | None = None
+        self._pump_stop = False
+        if self.worker_driven:
+            _STREAM_SINKS[id(self.pool.host)] = self._on_stream
+            _STREAM_BLOCK_SINKS[id(self.pool.host)] = self._on_stream_block
         for node in self.pool.worker_nodes:
             self._add_replica(node)
         # serving elasticity: replicas track membership from here on
         self.pool.on_join(self._add_replica)
         self.pool.on_restart(self._add_replica)
-        self.pool.on_death(self._drop_replica)
+        self.pool.on_death(self._on_death)
         self.pool.on_leave(self._on_leave)
 
     # -- replica lifecycle (elasticity contract in the class docs) ---------
@@ -295,16 +453,35 @@ class ClusterServingEngine:
         if rt is None:
             return  # non-local worker modes build engines worker-side
         self._drop_replica(node)  # a restarted node gets a fresh engine
-        _NODE_ENGINES[id(rt)] = ServingEngine(
+        eng = ServingEngine(
             self._model, self._params, num_slots=self.slots_per_worker,
             max_len=self._max_len, seed=self._seed + node,
         )
+        _NODE_ENGINES[id(rt)] = eng
+        if self.worker_driven:
+            from repro.serve.stream import WorkerDecodeLoop
+
+            _NODE_LOOPS[id(rt)] = WorkerDecodeLoop(
+                rt, eng, host_node=self.pool.domain.host_node,
+                registry=self.registry, name=f"-{node}",
+                block=self.decode_block,
+            )
         self._engine_keys[node] = id(rt)
+        with self._wd:
+            self._wd.notify_all()  # fresh capacity for the admission pump
 
     def _drop_replica(self, node: int) -> None:
         key = self._engine_keys.pop(node, None)
         if key is not None:
+            loop = _NODE_LOOPS.pop(key, None)
+            if loop is not None:
+                loop.stop(join=False)
             _NODE_ENGINES.pop(key, None)
+
+    def _on_death(self, node: int) -> None:
+        self._drop_replica(node)
+        if self.worker_driven:
+            self._recover_node(node)
 
     def _on_leave(self, node: int):
         # retire the replica only AFTER the scheduler's drain waiter let the
@@ -312,6 +489,9 @@ class ClusterServingEngine:
         # the scheduler subscribed first)
         def waiter(timeout: float | None = None) -> None:
             self._drop_replica(node)
+            if self.worker_driven:
+                # drained removal mid-decode: its requests repin elsewhere
+                self._recover_node(node)
 
         return waiter
 
@@ -320,11 +500,433 @@ class ClusterServingEngine:
         live = set(self.sched.live_nodes())
         return sorted(n for n in self._engine_keys if n in live)
 
+    # -- worker-driven mode: admission control + stream bookkeeping ---------
+
+    def _on_stream(self, node: int, rid: int, gen: int, seq: int,
+                   token: int, status: int, free_slots: int) -> None:
+        """Token sink — runs on the host event-loop thread per fused
+        segment; must stay cheap and never block.  Session teardown is
+        deferred to the pump thread via ``_end_q``."""
+        import time
+
+        now = time.monotonic()
+        with self._wd:
+            # ground-truth occupancy from the worker's own slot count
+            # (queued-but-unapplied admits are still in _queued)
+            self._active[node] = self.slots_per_worker - int(free_slots)
+            self._apply_stream_locked(node, rid, gen, seq, token, status, now)
+            self._wd.notify_all()
+
+    def _on_stream_block(self, node: int, rid: int, gen: int, seq0: int,
+                         tokens, status: int, free_slots: int) -> None:
+        """Block sink: a whole fused decode block's tokens for one request
+        under ONE lock acquisition — ``status`` applies to the last token,
+        the earlier ones are implicitly STREAM_TOKEN."""
+        import time
+
+        from repro.core.flags import STREAM_TOKEN
+
+        now = time.monotonic()
+        with self._wd:
+            self._active[node] = self.slots_per_worker - int(free_slots)
+            last = len(tokens) - 1
+            for i, tok in enumerate(tokens):
+                st = status if i == last else STREAM_TOKEN
+                self._apply_stream_locked(node, rid, gen, seq0 + i,
+                                          int(tok), st, now)
+            self._wd.notify_all()
+
+    def _apply_stream_locked(self, node: int, rid: int, gen: int, seq: int,
+                             token: int, status: int, now: float) -> None:
+        from repro.core.flags import STREAM_DONE, STREAM_TOKEN
+
+        if self._gen.get(rid) != gen or rid in self._done:
+            return  # stale generation (pre-recovery straggler) or late
+        # placement ground truth: the node actually streaming wins over
+        # the admit-time pick (a session can re-place mid-admit if the
+        # picked worker died between route and send)
+        self._placed[rid] = node
+        ev = self._events.setdefault(rid, {})
+        if status in (STREAM_TOKEN, STREAM_DONE) and token >= 0:
+            t = self._transcripts.setdefault(rid, [])
+            if len(t) < self._budget.get(rid, 1 << 30):
+                t.append(int(token))
+                ev.setdefault("t_first", now)
+                ev.setdefault("token_ts", []).append(now)
+            # fused-oneway ordering contract: seq counts emissions
+            # within this generation — any gap/reorder trips this flag
+            expected = len(t) - 1 - ev.get("seq_base", 0)
+            if seq != expected:
+                ev["seq_ok"] = False
+        if status == STREAM_DONE or (
+            status == STREAM_TOKEN
+            and len(self._transcripts.get(rid, ()))
+            >= self._budget.get(rid, 1 << 30)
+        ):
+            self._finalize_locked(rid, STREAM_DONE, now)
+        elif status not in (STREAM_TOKEN, STREAM_DONE):
+            self._finalize_locked(rid, status, now)
+
+    def _finalize_locked(self, rid: int, status: int, now: float) -> None:
+        self._done[rid] = status
+        self._placed.pop(rid, None)
+        self._admitting.pop(rid, None)
+        self._cancel_req.pop(rid, None)
+        self._events.setdefault(rid, {}).setdefault("t_done", now)
+        self._end_q.append(rid)
+
+    def _recover_node(self, node: int) -> None:
+        """A serving node left mid-decode (death or drained removal): its
+        replica's KV is gone, but the host holds prompt + every emitted
+        token — bump each of its requests' stream generation (stragglers
+        from the old loop are dropped by gen mismatch) and re-queue them as
+        continuation admits; their sessions repin on a survivor."""
+        with self._wd:
+            self._active[node] = 0
+            self._queued[node] = 0
+            for rid in [r for r, n in self._placed.items() if n == node]:
+                self._placed.pop(rid, None)
+                self._requeue_locked(rid)
+            for rid in [r for r, n in self._admitting.items() if n == node]:
+                self._admitting.pop(rid, None)
+                self._requeue_locked(rid)
+            self._wd.notify_all()
+
+    def _requeue_locked(self, rid: int) -> None:
+        import time
+
+        from repro.core.flags import STREAM_DONE, STREAM_EXPIRED
+
+        if rid in self._done:
+            return
+        now = time.monotonic()
+        if rid in self._cancel_req:
+            self._finalize_locked(rid, self._cancel_req[rid], now)
+            return
+        done_toks = self._transcripts.get(rid, [])
+        remaining = self._budget[rid] - len(done_toks)
+        if remaining <= 0:
+            self._finalize_locked(rid, STREAM_DONE, now)
+            return
+        expires = self._expires.get(rid)
+        if expires is not None and now >= expires:
+            self._finalize_locked(rid, STREAM_EXPIRED, now)
+            return
+        self._gen[rid] += 1
+        ev = self._events.setdefault(rid, {})
+        ev["repins"] = ev.get("repins", 0) + 1
+        ev["seq_base"] = len(done_toks)
+        # continuation admit: prefill of prompt + tokens-so-far picks up
+        # decode exactly where the departed worker stopped
+        self._pending.insert(0, Request(
+            prompt=np.concatenate(
+                [np.asarray(self._prompt0[rid], np.int32),
+                 np.asarray(done_toks, np.int32)]
+            ),
+            max_new_tokens=remaining,
+            temperature=self._temp[rid],
+            rid=rid,
+        ))
+
+    def _ensure_pump(self) -> None:
+        import threading
+
+        with self._wd:
+            if self._pump is not None or self._pump_stop:
+                return
+            self._pump = threading.Thread(
+                target=self._pump_loop, name="ham-serve-admit", daemon=True
+            )
+            self._pump.start()
+
+    def _pump_loop(self) -> None:
+        """Admission pump: places each pending request's session once
+        (rendezvous hash over workers with a free slot), leases the slot
+        with ONE ``_serve/admit_stream`` submit through the router, and
+        retires completed sessions.  This thread is the only caller of
+        ``sched.submit``/``end_session`` in worker-driven mode — the event
+        loop's sink never blocks on scheduler locks."""
+        import time
+
+        from repro.core.flags import STREAM_EXPIRED
+
+        while True:
+            with self._wd:
+                while not self._pump_stop and not self._pending \
+                        and not self._end_q:
+                    self._wd.wait(0.05)
+                if self._pump_stop:
+                    return
+                ended, self._end_q = self._end_q, []
+                batch = self._collect_admits_locked()
+            for rid in ended:
+                self.sched.end_session(f"serve/{rid}")
+            for req, node, gen in batch:
+                self._send_admit(req, node, gen)
+            if not batch and not ended:
+                time.sleep(0.002)  # pending but nowhere admissible yet
+                # host-side deadline sweep for queue-stuck requests
+                with self._wd:
+                    now = time.monotonic()
+                    for i in range(len(self._pending) - 1, -1, -1):
+                        rid = self._pending[i].rid
+                        exp = self._expires.get(rid)
+                        if exp is not None and now >= exp:
+                            del self._pending[i]
+                            self._finalize_locked(rid, STREAM_EXPIRED, now)
+                            self._wd.notify_all()
+
+    def _collect_admits_locked(self) -> list:
+        """Match pending requests to workers with lease capacity (the
+        lockstep admission scan, minus the per-step traffic): session pins
+        win; fresh placements go rendezvous-hash over workers with a free
+        slot.  A request whose pinned worker is full must not block the
+        queue behind it."""
+        batch = []
+        nodes = self.serving_nodes()
+        if not nodes:
+            return batch
+        while self._pending:
+            free = [
+                n for n in nodes
+                if self._active.get(n, 0) + self._queued.get(n, 0)
+                < self.slots_per_worker
+            ]
+            if not free:
+                break
+            pick = None
+            for idx, req in enumerate(self._pending):
+                node = self.sched.sessions.route(
+                    f"serve/{req.rid}", eligible=free
+                )
+                if node is not None and node in free:
+                    pick = (idx, node)
+                    break
+            if pick is None:
+                break  # every pending request waits on a full pin
+            idx, node = pick
+            req = self._pending.pop(idx)
+            self._queued[node] = self._queued.get(node, 0) + 1
+            self._admitting[req.rid] = node
+            batch.append((req, node, self._gen[req.rid]))
+        return batch
+
+    def _send_admit(self, req: Request, node: int, gen: int) -> None:
+        import time
+
+        from repro.core.closure import f2f
+
+        prompt = np.asarray(req.prompt, np.int32)
+        expires = self._expires.get(req.rid)
+        deadline_s = 0.0
+        if expires is not None:
+            deadline_s = max(expires - time.monotonic(), 1e-3)
+        try:
+            fut = self.sched.submit(
+                f2f("_serve/admit_stream", pad_prompt(prompt),
+                    int(prompt.shape[0]), int(req.rid), int(gen),
+                    int(req.max_new_tokens), float(req.temperature),
+                    float(deadline_s), registry=self.registry),
+                session=f"serve/{req.rid}",
+            )
+        except Exception as e:  # noqa: BLE001 — no live workers / backpressure
+            self._admit_failed(req.rid, node, e)
+            return
+        fut.add_done_callback(
+            lambda f, rid=req.rid, n=node, g=gen: self._on_admit_done(
+                f, rid, n, g)
+        )
+
+    def _on_admit_done(self, fut, rid: int, node: int, gen: int) -> None:
+        import time
+
+        try:
+            fut.get(0)
+        except Exception as e:  # noqa: BLE001 — classified below
+            self._admit_failed(rid, node, e)
+            return
+        with self._wd:
+            self._queued[node] = max(0, self._queued.get(node, 0) - 1)
+            if self._admitting.pop(rid, None) is not None \
+                    and rid not in self._done and self._gen.get(rid) == gen:
+                self._placed[rid] = node
+                self._events.setdefault(rid, {}).setdefault(
+                    "t_admit", time.monotonic())
+            self._wd.notify_all()
+
+    def _admit_failed(self, rid: int, node: int, exc: Exception) -> None:
+        """Lease call failed: a dead/draining worker re-queues the request
+        (its session re-places); a failure on a healthy worker is a real
+        error and fails the request diagnosably."""
+        with self._wd:
+            self._queued[node] = max(0, self._queued.get(node, 0) - 1)
+            if self._admitting.pop(rid, None) is None or rid in self._done:
+                self._wd.notify_all()
+                return
+            if self.pool.is_alive(node) and node in self._engine_keys:
+                import time
+
+                self._errors[rid] = exc
+                self._finalize_locked(rid, -1, time.monotonic())
+            else:
+                self._requeue_locked(rid)
+            self._wd.notify_all()
+
+    # -- worker-driven public API -------------------------------------------
+
+    def submit_request(self, req: Request, *, shed: bool = True) -> int:
+        """Admit one request into the serving system (worker-driven mode).
+
+        Non-blocking: returns the request id immediately; tokens accumulate
+        in the host transcript as the worker streams them.  With ``shed=``
+        True (the open-loop default), raises :class:`OffloadError` when the
+        admission queue is at ``admission_limit`` — shed-on-overflow is the
+        back-pressure contract of the open-loop harness.
+        """
+        import time
+
+        from repro.core.errors import OffloadError
+
+        if not self.worker_driven:
+            raise OffloadError(
+                "submit_request requires worker_driven=True "
+                "(lockstep mode only supports run())"
+            )
+        self._ensure_pump()
+        with self._wd:
+            if req.rid < 0:
+                req.rid = self._next_rid
+            rid = req.rid
+            self._next_rid = max(self._next_rid, rid + 1)
+            if rid in self._budget and rid not in self._done:
+                raise OffloadError(f"request {rid} is already in flight")
+            if shed and self.admission_limit is not None \
+                    and len(self._pending) >= self.admission_limit:
+                self.shed += 1
+                raise OffloadError(
+                    f"admission queue full ({self.admission_limit}); "
+                    f"request {rid} shed"
+                )
+            prompt = np.asarray(req.prompt, np.int32)
+            if prompt.shape[0] + req.max_new_tokens > MAX_PROMPT:
+                raise OffloadError(
+                    f"prompt+budget {prompt.shape[0] + req.max_new_tokens} "
+                    f"exceeds the serve wire bound MAX_PROMPT={MAX_PROMPT}"
+                )
+            now = time.monotonic()
+            # rid reuse after completion (back-to-back run() calls): reset
+            self._done.pop(rid, None)
+            self._errors.pop(rid, None)
+            self._transcripts[rid] = []
+            self._events[rid] = {"t_submit": now}
+            self._gen[rid] = self._gen.get(rid, -1) + 1
+            self._budget[rid] = int(req.max_new_tokens)
+            self._temp[rid] = float(req.temperature)
+            self._prompt0[rid] = prompt
+            self._expires[rid] = (
+                now + req.deadline if req.deadline is not None else None
+            )
+            self._pending.append(req)
+            self._wd.notify_all()
+            return rid
+
+    def cancel(self, rid: int, *, status: int | None = None) -> bool:
+        """Cancel a request: it leaves the running batch at the worker's
+        next step, frees its slot, and its session ends.  Returns False
+        when the request already finished."""
+        import time
+
+        from repro.core.closure import f2f
+        from repro.core.errors import OffloadError
+        from repro.core.flags import STREAM_CANCELLED
+
+        status = STREAM_CANCELLED if status is None else int(status)
+        with self._wd:
+            if rid not in self._budget:
+                raise OffloadError(f"unknown request {rid}")
+            if rid in self._done:
+                return False
+            for i, q in enumerate(self._pending):
+                if q.rid == rid:  # still queued host-side: shed locally
+                    del self._pending[i]
+                    self._finalize_locked(rid, status, time.monotonic())
+                    self._wd.notify_all()
+                    return True
+            self._cancel_req[rid] = status
+            gen = self._gen[rid]
+        try:
+            self.sched.oneway(
+                f2f("_serve/cancel", int(rid), int(gen), int(status),
+                    registry=self.registry),
+                session=f"serve/{rid}",
+            )
+        except Exception:  # noqa: BLE001 — worker died: recovery finalizes
+            pass
+        return True
+
+    def wait(self, rids=None, timeout: float | None = 300.0) -> None:
+        """Block until every request in ``rids`` (default: all submitted)
+        reached a terminal state; raises the first recorded per-request
+        error, TimeoutError past ``timeout``, or OffloadError when the
+        pool can no longer serve the remainder."""
+        import time
+
+        from repro.core.errors import OffloadError
+
+        deadline = (
+            None if timeout is None else time.monotonic() + timeout
+        )
+        with self._wd:
+            target = set(self._budget) if rids is None else set(rids)
+            while not target <= self._done.keys():
+                waiting = target - self._done.keys()
+                if not self.serving_nodes() and not self.pool.worker_nodes:
+                    raise OffloadError(
+                        f"no live serving workers remain for {len(waiting)} "
+                        "unfinished requests"
+                    )
+                remaining = (
+                    None if deadline is None
+                    else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"cluster serve exceeded {timeout}s with "
+                        f"{len(waiting)} requests unfinished"
+                    )
+                self._wd.wait(
+                    0.1 if remaining is None else min(0.1, remaining)
+                )
+            for rid in sorted(target & self._errors.keys()):
+                raise self._errors[rid]
+
+    def _run_worker_driven(self, requests: list[Request],
+                           timeout: float) -> dict[int, list[int]]:
+        rids = [self.submit_request(r, shed=False) for r in requests]
+        self.wait(rids, timeout=timeout)
+        with self._wd:
+            out = {rid: list(self._transcripts.get(rid, ())) for rid in rids}
+        for rid in rids:  # idempotent with the pump's session teardown
+            self.sched.end_session(f"serve/{rid}")
+        return out
+
     def run(self, requests: list[Request],
             timeout: float = 300.0) -> dict[int, list[int]]:
-        """Serve ``requests`` to completion, pipelining across workers;
-        survives pool resizes and worker deaths mid-run (class docs).
-        ``timeout`` bounds the whole drive loop."""
+        """Serve ``requests`` to completion; survives pool resizes and
+        worker deaths mid-run (class docs).  ``timeout`` bounds the whole
+        drive.  Worker-driven by default; ``worker_driven=False`` at
+        construction selects the lockstep drive loop."""
+        for i, r in enumerate(requests):
+            if r.rid < 0:
+                r.rid = i
+        if self.worker_driven:
+            return self._run_worker_driven(requests, timeout)
+        return self._run_lockstep(requests, timeout)
+
+    def _run_lockstep(self, requests: list[Request],
+                      timeout: float = 300.0) -> dict[int, list[int]]:
+        """Host-lockstep drive loop: one pipelined ``_serve/step`` call in
+        flight per active worker (the benchmark's comparison leg)."""
         import queue as _queue
         import time
 
@@ -503,7 +1105,18 @@ class ClusterServingEngine:
         return outputs
 
     def close(self) -> None:
+        with self._wd:
+            self._pump_stop = True
+            self._wd.notify_all()
+        if self._pump is not None:
+            self._pump.join(timeout=5.0)
+            self._pump = None
+        _STREAM_SINKS.pop(id(self.pool.host), None)
+        _STREAM_BLOCK_SINKS.pop(id(self.pool.host), None)
         for key in list(self._engine_keys.values()):
+            loop = _NODE_LOOPS.pop(key, None)
+            if loop is not None:
+                loop.stop()
             _NODE_ENGINES.pop(key, None)
         self._engine_keys.clear()
         self.pool.close()
