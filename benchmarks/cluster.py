@@ -32,9 +32,23 @@ directory is reconstructed from survivor ``_ham/dir_dump`` shards, and
 every buffer must read back intact through its pre-crash pointer
 (docs/failure-model.md).
 
+A fifth section measures the **active-access data plane**
+(``dataplane``) on the shm *process* pool: chain-replicated put at
+``replicas={1,2}`` against a measured host-sequential leg (the pre-chain
+model — the host pushes the bytes to every holder itself; the gated
+``vs_host_sequential_x`` ratio is core-count independent, while
+``overhead_x`` vs ``replicas=0`` floors at ~(R+1)x on a single-core
+runner and is recorded as informational), mutate-at-data RTT
+(``demo/saxpy``, ``mutates=True``) vs the naive get-mutate-put round
+trip per buffer size, and the invalidate-to-converged latency of a
+mutation under ``mutation_refresh=True`` — the replica must hold the new
+bytes by the time the mutating future resolves.
+
 Writes ``BENCH_cluster.json`` with the sweeps and the acceptance checks:
 pipelined >= 2x serial at 4 workers; resize with zero failures; kill 4->3
-with zero lost buffers; host restart with zero lost buffers.
+with zero lost buffers; host restart with zero lost buffers; chain-put
+vs host-sequential within target (1.3x full, trend-gate ceiling 1.5x);
+mutate-at-data >= 3x at >= 1 MB (full); refresh-mode mutation converged.
 """
 
 from __future__ import annotations
@@ -47,6 +61,7 @@ from pathlib import Path
 import numpy as np
 
 import repro.cluster.pool  # noqa: F401 — registers _cluster/* pre-init
+import repro.offload.demo_handlers  # noqa: F401 — demo/saxpy (mutates=True)
 from repro.cluster import ClusterPool, Scheduler, SessionRouter, as_completed
 from repro.core.closure import f2f
 from repro.core.registry import default_registry
@@ -329,6 +344,190 @@ def _host_restart_section(smoke: bool) -> dict:
         pool.close()
 
 
+def _dataplane_section(smoke: bool) -> dict:
+    """Active-access data plane: chain-replicated put, mutate-at-data,
+    invalidate-to-converged (dataplane module docs; docs/failure-model.md,
+    "Write visibility and convergence").
+
+    Phase 1 — chain-put overhead on the shm PROCESS pool: timed puts with
+    ``replicas=R`` (host sends bytes ONCE, the primary streams the chain)
+    against ``replicas=0`` and against a *measured* host-sequential leg
+    (the pre-chain model: the host pushes the same bytes to every holder
+    itself).  ``vs_host_sequential_x`` is the gated ratio — it isolates
+    what the chain adds over the unavoidable single host send, and is
+    core-count independent; ``overhead_x`` (vs ``replicas=0``) is
+    recorded for the record but on a single-core runner it has an
+    arithmetic floor of ~(R+1)x (the bytes are physically written R+1
+    times and nothing overlaps), so it is not gate material.
+    Phase 2 — mutate-at-data RTT via ``pool.mutate`` (``demo/saxpy``,
+    mutates=True, one sync call at the primary + the dirty-epoch
+    commit) vs the naive get-mutate-put round trip, per buffer size,
+    median-timed on a 2-process shm pool.  Phase 3 — a mutation
+    under ``mutation_refresh=True``: the replica must hold the NEW bytes
+    when the mutating future resolves (convergence is the contract, the
+    latency is the metric).
+    """
+    reg = default_registry()
+    if not reg.initialised:
+        reg.init()
+    nbuf = 4 if smoke else 8
+    # bandwidth-sized even under smoke: the gated vs_host_sequential ratio
+    # measures chain *streaming* — at latency-dominated sizes the extra
+    # hop RTT alone dominates and the gate would see noise, not the
+    # mechanism
+    elems = 128 << 10  # float64: 1 MB
+    payload = np.arange(float(elems))
+
+    def timed_puts(replicas: int) -> tuple[float, float]:
+        """(median chain-put s, median host-sequential s) on a 4-process
+        shm pool — real wire framing, no in-process memcpy shortcut."""
+        pool = ClusterPool.shm(4, registry=reg, replicas=replicas)
+        try:
+            ptrs = [
+                pool.allocate((elems,), "float64", session=f"dp{replicas}-{i}")
+                for i in range(nbuf)
+            ]
+            for ptr in ptrs:
+                pool.put(payload, ptr)  # warm links + buffers off the clock
+            chain_ts, seq_ts = [], []
+            for ptr in ptrs:
+                t0 = time.perf_counter()
+                pool.put(payload, ptr)
+                chain_ts.append(time.perf_counter() - t0)
+                # the pre-chain model, measured not modelled: the host
+                # itself pushes the bytes to the primary AND each replica
+                rec = pool.directory.lookup(ptr.handle)
+                holders = [ptr.node, *(rec.replicas if rec else ())]
+                t0 = time.perf_counter()
+                for h in holders:
+                    pool.domain.put(payload, ptr.at(h))
+                seq_ts.append(time.perf_counter() - t0)
+            chain_ts.sort()
+            seq_ts.sort()
+            return chain_ts[len(chain_ts) // 2], seq_ts[len(seq_ts) // 2]
+        finally:
+            pool.close()
+
+    t_plain, _ = timed_puts(0)
+    chain: dict = {"put_ms_replicas0": round(t_plain * 1e3, 2)}
+    for r in (1, 2):
+        t_r, t_seq = timed_puts(r)
+        chain[f"replicas{r}"] = {
+            "put_ms": round(t_r * 1e3, 2),
+            "host_sequential_ms": round(t_seq * 1e3, 2),
+            # vs replicas=0 — informational: floors at ~(R+1)x on a
+            # single-core runner (every byte is written R+1 times, and
+            # nothing overlaps); approaches vs_host_sequential_x once
+            # links run in parallel
+            "overhead_x": round(t_r / max(t_plain, 1e-9), 2),
+            # the gated ratio: chain put vs the measured pre-chain model
+            # (the host sends the bytes R+1 times); core-count independent
+            "vs_host_sequential_x": round(t_r / max(t_seq, 1e-9), 2),
+        }
+
+    # -- mutate-at-data vs get-mutate-put ------------------------------
+    # ``pool.mutate`` is the protocol under test: ONE sync call at the
+    # primary plus the dirty-epoch commit, nothing else attached.  A
+    # Scheduler layers queueing/deadlines/retries on top of this same
+    # protocol — that machinery is what the sweep section above prices,
+    # not a data-plane cost.  Measured on a 2-process shm pool (real
+    # wire framing, same rationale as the chain-put phase) against the
+    # naive round trip the paper's offload model forces: pull the bytes
+    # to the host, modify, push them back.
+    sizes = ((256 << 10),) if smoke else ((1 << 20), (8 << 20))
+    iters = 3 if smoke else 5
+    mutate: dict = {}
+    pool = ClusterPool.shm(2, registry=reg, replicas=1)
+    try:
+        for nbytes in sizes:
+            n = nbytes // 8
+            # co-located on one primary: a mutating call executes where
+            # its buffers live, so every referenced buffer must be there
+            home = pool.worker_nodes[0]
+            x = pool.allocate((n,), "float64", node=home,
+                              session=f"m-{nbytes}")
+            y = pool.allocate((n,), "float64", node=home,
+                              session=f"m-{nbytes}")
+            pool.put(np.ones(n), x)
+            pool.put(np.zeros(n), y)
+            fn = f2f("demo/saxpy", 0.5, x, y, registry=reg)
+            pool.mutate(fn)  # warmup (also drops y's replica)
+            correct = bool(np.allclose(pool.get(y), 0.5))
+            mut_ts, naive_ts = [], []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                pool.mutate(fn)
+                mut_ts.append(time.perf_counter() - t0)
+            xs = pool.get(x)
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                # shm get hands out a READ-ONLY zero-copy view; the
+                # host-modify model needs its own writable copy — an
+                # inherent cost of moving the bytes to the computation
+                ys = np.array(pool.get(y))
+                ys += 0.5 * xs
+                pool.put(ys, y)
+                naive_ts.append(time.perf_counter() - t0)
+            mut_ts.sort()
+            naive_ts.sort()
+            t_mutate = mut_ts[len(mut_ts) // 2]
+            t_naive = naive_ts[len(naive_ts) // 2]
+            mutate[str(nbytes)] = {
+                "mutate_rtt_ms": round(t_mutate * 1e3, 3),
+                "get_mutate_put_ms": round(t_naive * 1e3, 3),
+                "correct": correct,
+            }
+        speedups = {
+            k: round(v["get_mutate_put_ms"] / max(v["mutate_rtt_ms"], 1e-9), 2)
+            for k, v in mutate.items()
+        }
+    finally:
+        pool.close()
+
+    # -- invalidate-to-converged (refresh mode) -------------------------
+    n = (8 << 10) if smoke else (128 << 10)
+    pool = ClusterPool.local(3, registry=reg, replicas=1,
+                             mutation_refresh=True)
+    pool.domain.direct_data_plane = False  # wire protocol, as above
+    try:
+        sched = Scheduler(pool, policy="locality", max_inflight=8)
+        home = pool.worker_nodes[0]
+        x = pool.allocate((n,), "float64", node=home, session="inv")
+        y = pool.allocate((n,), "float64", node=home, session="inv")
+        pool.put(np.ones(n), x)
+        pool.put(np.zeros(n), y)
+        fn = f2f("demo/saxpy", 1.0, x, y, registry=reg)
+        t0 = time.perf_counter()
+        sched.submit(fn).get(30)
+        to_converged_ms = (time.perf_counter() - t0) * 1e3
+        rec = pool.directory.lookup(y.handle)
+        replica_holders = list(rec.replicas) if rec is not None else []
+        converged = False
+        if replica_holders:
+            # read the REPLICA's actual bytes: refresh streamed the new
+            # write down the chain before the mutating future resolved
+            rep_view = pool.domain.get(y.at(replica_holders[0], rec.epoch))
+            converged = bool(np.allclose(rep_view, 1.0))
+        invalidate = {
+            "mode": "refresh",
+            "buffer_nbytes": n * 8,
+            "to_converged_ms": round(to_converged_ms, 2),
+            "replica_holders": len(replica_holders),
+            "converged_fraction": 1.0 if converged else 0.0,
+        }
+    finally:
+        pool.close()
+
+    return {
+        "buffers": nbuf,
+        "buffer_nbytes": elems * 8,
+        "chain_put": chain,
+        "mutate_at_data": mutate,
+        "speedup": speedups,
+        "invalidate": invalidate,
+    }
+
+
 def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     calls = 32 if smoke else CALLS
     sleep_s = SLEEP_S
@@ -371,11 +570,39 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         f"host rebuild: {host_restart['lost']} lost, "
         f"{host_restart['buffers_intact']}/{host_restart['buffers']} intact",
     ))
+    dataplane = _dataplane_section(smoke)
+    r1 = dataplane["chain_put"]["replicas1"]
+    rows.append((
+        "dataplane/chain_put_r1_vs_host_seq_x", r1["vs_host_sequential_x"],
+        f"chain put replicas=1: {r1['put_ms']} ms "
+        f"({r1['overhead_x']}x of replicas=0)",
+    ))
+    rows.append((
+        "dataplane/chain_put_r2_vs_host_seq_x",
+        dataplane["chain_put"]["replicas2"]["vs_host_sequential_x"],
+        "chain put replicas=2 vs host pushing bytes 3x itself",
+    ))
+    big = max(dataplane["speedup"], key=int)
+    rows.append((
+        "dataplane/mutate_vs_getput_x", dataplane["speedup"][big],
+        f"mutate-at-data vs get-mutate-put at {int(big) >> 10} KB",
+    ))
+    rows.append((
+        "dataplane/invalidate_to_converged_ms",
+        dataplane["invalidate"]["to_converged_ms"],
+        f"refresh-mode mutation, replica converged: "
+        f"{dataplane['invalidate']['converged_fraction'] == 1.0}",
+    ))
     accept = {
         policy: sweep[policy]["4"]["speedup"] >= 2.0 for policy in POLICIES
     }
+    # smoke sizes are noise-dominated (64 KB mutate buffers, 2 iters):
+    # hold the smoke run to the absolute trend-gate ceiling, the full run
+    # to target
+    chain_target = 1.5 if smoke else 1.3
+    mutate_target = 1.5 if smoke else 3.0
     report = {
-        "schema": "cluster-v4",
+        "schema": "cluster-v5",
         "service_time_s": sleep_s,
         "calls": calls,
         "max_inflight": MAX_INFLIGHT,
@@ -383,7 +610,23 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         "sweep": sweep,
         "resize": resize,
         "recovery": recovery,
+        "dataplane": dataplane,
         "acceptance": {
+            "chain_put_overhead_within_target": {
+                "target_x": chain_target,
+                "replicas1": r1["vs_host_sequential_x"] <= chain_target,
+            },
+            "mutate_at_data_speedup_within_target": {
+                "target_x": mutate_target,
+                "all_sizes": all(
+                    v >= mutate_target for v in dataplane["speedup"].values()
+                ),
+            },
+            "mutate_at_data_correct": all(
+                v["correct"] for v in dataplane["mutate_at_data"].values()
+            ),
+            "invalidate_converged":
+                dataplane["invalidate"]["converged_fraction"] == 1.0,
             "pipelined_ge_2x_serial_at_4_workers": accept,
             "resize_zero_failed_calls": resize["failed_calls"] == 0,
             "pinned_sessions_zero_remap_on_grow":

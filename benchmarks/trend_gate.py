@@ -74,6 +74,14 @@ TRACKED = {
         # host crash + in-place rebuild: directory reconstructed from
         # survivor dir_dump shards (must stay 1.0, same zero tolerance)
         "recovery.host_restart.recovered_fraction",
+        # active-access data plane: mutate-at-data speedup over the naive
+        # get-mutate-put round trip (dict leaf per buffer size; smoke runs
+        # produce their own sizes and skip the full-run leaves), and the
+        # refresh-mode convergence witness (must stay 1.0 — a replica
+        # serving stale bytes after a committed mutation is a coherence
+        # bug, not a slowdown)
+        "dataplane.speedup",
+        "dataplane.invalidate.converged_fraction",
     ],
     "BENCH_hotpath.json": [
         "batching_speedup_x64",
@@ -114,6 +122,17 @@ TRACKED = {
 #: higher-is-better ratios).
 CEILINGS = {
     "BENCH_hotpath.json:rpc_us.rtt_us.static": 1500.0,
+    # chain-replicated put: host sends bytes ONCE, the primary streams the
+    # replica chain — put must stay under an absolute 1.5x of the MEASURED
+    # host-sequential leg (host pushes the bytes to every holder itself;
+    # full-run target is 1.3x, the ceiling holds for smoke too).  This
+    # ratio is core-count independent — overhead vs replicas=0 is not (it
+    # floors at ~(R+1)x on a single-core runner).  Breaching it means the
+    # chain stopped streaming (e.g. a forward serialised behind a blocked
+    # flush, as in the drain-batch self-deadlock this PR fixed) — that
+    # pathology parks a hop on a 30 s timeout, far past any ceiling.
+    "BENCH_cluster.json:dataplane.chain_put.replicas1.vs_host_sequential_x":
+        1.5,
     # the worker-driven serving contract: ~1 admission RPC per request and
     # nothing per token — at max_new_tokens >= 16 that is <= 1/16 with
     # margin for cancel/recovery traffic.  Breaching 0.1 means the host is
@@ -139,6 +158,9 @@ SMOKE_SIZE_DEPENDENT = {
 ZERO_TOLERANCE = {
     "BENCH_cluster.json:recovery.recovered_fraction",
     "BENCH_cluster.json:recovery.host_restart.recovered_fraction",
+    # a committed mutation's replicas must hold the new bytes — fraction
+    # is 0 or 1, any dip is a coherence bug
+    "BENCH_cluster.json:dataplane.invalidate.converged_fraction",
     # kill-a-worker-under-live-traffic: every request must finish with its
     # full token budget and the SLO must hold through the failure
     "BENCH_serving.json:serving.kill_recovery.slo_held",

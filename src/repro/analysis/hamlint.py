@@ -202,6 +202,8 @@ class _SiteExtractor(ast.NodeVisitor):
         wire_name = _const(name_node)
         ro_node = self._resolve_value(kws.get("read_only"))
         ro = _const(ro_node)
+        mu_node = self._resolve_value(kws.get("mutates"))
+        mu = _const(mu_node)
         specs_kw = None
         specs_node = None
         for key in ("arg_specs", "args"):
@@ -229,6 +231,7 @@ class _SiteExtractor(ast.NodeVisitor):
             fn_name=fn_name,
             func_def=func_def,
             read_only=ro if isinstance(ro, bool) else None,
+            mutates=mu if isinstance(mu, bool) else None,
             specs_node=specs_node,
             specs_kw=specs_kw,
             result_specs_node=self._resolve_value(kws.get("result_specs")),

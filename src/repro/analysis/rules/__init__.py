@@ -73,6 +73,7 @@ class RegistrationSite:
     fn_name: str | None          # identifier of the registered function
     func_def: ast.AST | None     # same-module def, when resolvable
     read_only: bool | None       # literal read_only= value; None if absent
+    mutates: bool | None         # literal mutates= value; None if absent
     specs_node: ast.expr | None  # arg_specs= / args= expression
     specs_kw: str | None         # which keyword carried the specs
     result_specs_node: ast.expr | None

@@ -1,4 +1,4 @@
-"""HAM001 — read-only purity.
+"""HAM001 — buffer-write declarations must be true of the code.
 
 A handler registered ``read_only=True`` may be routed at (and have its
 buffer pointers retargeted to) ANY replica of its buffers.  If such a
@@ -6,6 +6,19 @@ handler writes through a ``deref``'d pointer it updates one replica and
 silently diverges the others — the exact bug class closed dynamically in
 PR 5 by gating replica serving on the declaration.  This rule closes it
 *statically*: the declaration must be true of the code.
+
+The annotation space has three points and the rule polices two edges:
+
+* ``read_only=True`` + a store through buffer memory — the PR 5 replica
+  divergence; the finding demands the store be removed (or the
+  declaration dropped);
+* *no* declaration (neither ``read_only`` nor ``mutates``) + a store —
+  the write lands on the primary but its replicas are never invalidated,
+  so a replica-served read observes stale bytes; the finding names the
+  fix: **declare** ``mutates=True`` so the scheduler routes the call at
+  the primary and commits/invalidates on completion (the Active Access
+  write path — dataplane module docs);
+* ``mutates=True`` + a store — declared and coherent: **no finding**.
 
 Taint model: every value produced by ``deref(...)`` — and every view
 derived from one by plain assignment, subscripting/slicing, attribute
@@ -50,11 +63,15 @@ def _root_name(node: ast.expr) -> str | None:
 
 class _PurityChecker:
     def __init__(self, func_def, module_globals: set, path: str,
-                 wire_name: str):
+                 wire_name: str, declared_read_only: bool = True):
         self.func = func_def
         self.module_globals = set(module_globals)
         self.path = path
         self.wire_name = wire_name
+        #: True: the site says read_only=True (PR 5 divergence message);
+        #: False: the site declares nothing (undeclared-mutation message
+        #: naming the mutates=True fix — module docs)
+        self.declared_read_only = declared_read_only
         self.tainted: set[str] = set()
         self.declared_global: set[str] = set()
         self.findings: list[Finding] = []
@@ -219,36 +236,53 @@ class _PurityChecker:
                 self._report(node, "out= targets a buffer-derived array")
 
     def _report(self, node: ast.AST, detail: str) -> None:
+        if self.declared_read_only:
+            message = (
+                f"handler {self.wire_name!r} is declared read_only=True "
+                f"but {detail}; a replica-served call would diverge the "
+                "other replicas (PR 5 bug class)"
+            )
+        else:
+            message = (
+                f"handler {self.wire_name!r} {detail} but declares "
+                "neither read_only=True nor mutates=True; declare "
+                "mutates=True so the scheduler routes the call at the "
+                "buffer's primary and invalidates replicas when it "
+                "completes — undeclared, replica holders keep serving "
+                "the overwritten bytes (docs/failure-model.md, 'Write "
+                "visibility and convergence')"
+            )
         self.findings.append(Finding(
             rule="HAM001",
             path=self.path,
             line=node.lineno,
             col=node.col_offset,
-            message=(
-                f"handler {self.wire_name!r} is declared read_only=True "
-                f"but {detail}; a replica-served call would diverge the "
-                "other replicas (PR 5 bug class)"
-            ),
+            message=message,
         ))
 
 
 @rule(
     "HAM001",
-    title="read_only=True handlers must not mutate or alias-escape "
-          "BufferPtr-derived memory",
+    title="buffer writes must match the handler's declaration: "
+          "read_only=True handlers must not mutate or alias-escape "
+          "BufferPtr-derived memory, and a handler that does must "
+          "declare mutates=True",
     historical="PR 5: an undeclared-mutation handler served from a replica "
                "silently diverged the other replicas",
 )
 def check(ctx: LintContext) -> list[Finding]:
     findings: list[Finding] = []
     for site in ctx.sites:
-        if site.read_only is not True or site.func_def is None:
+        if site.func_def is None or site.mutates is True:
+            # mutates=True declares the store — in-place writes are the
+            # point of the annotation (Active Access), nothing to police
             continue
         checker = _PurityChecker(
             site.func_def,
             site.module.toplevel_assigns,
             site.module.path,
             site.wire_name or site.fn_name or "<anonymous>",
+            declared_read_only=site.read_only is True,
         )
         findings.extend(checker.run())
     return findings

@@ -9,6 +9,9 @@ supplies the fleet underneath a :class:`~repro.cluster.scheduler.Scheduler`:
   heterogeneous-binaries case);
 * a monitor thread watches liveness and announces deaths to subscribers
   (the scheduler fails that node's in-flight futures and reroutes);
+* writes to replicated buffers ride **chain replication** (`put`, and the
+  ``_migrate_off``/backfill copies): bytes leave the host once and the
+  holders forward them peer-to-peer — see "Replicated data plane" below;
 * dead workers can be restarted in place (``auto_restart=True`` or an
   explicit :meth:`ClusterPool.restart`): the fabric drops frames queued
   toward the corpse, the host endpoint forgets stale transport state, and a
@@ -69,9 +72,16 @@ Every pool owns a :class:`BufferDirectory` and exposes a directory-tracked
 data plane: :meth:`allocate` places a buffer's primary on a live worker
 (round-robin unless pinned) and installs ``replicas=N`` empty copies under
 the SAME global handle on other workers (``_ham/buf_adopt``); :meth:`put`
-**writes through** to every holder over the existing zero-copy chunked put
-path, so copies never diverge; :meth:`get`/:meth:`free` resolve stale
-pointers through the directory first.  The failure/elasticity contract:
+**writes through every holder by chain replication** — the bytes go to
+the primary once (zero-copy chunked pipeline) and the primary streams
+them to the replicas over worker->worker links, each write sequenced by a
+directory-minted dirty epoch (``repro.offload.dataplane``, "Chain
+replication") — so copies never diverge and the host is off the
+replication path; :meth:`get`/:meth:`free` resolve stale pointers through
+the directory first.  A handler registered ``mutates=True`` writes the
+primary in place and :meth:`commit_mutation` restores coherence
+(invalidate or chain-refresh the replicas).  The failure/elasticity
+contract:
 
 * **crash** — the monitor's death announcement runs the directory's
   metadata-only promotion *before* any external subscriber: each affected
@@ -97,13 +107,15 @@ new bytes, so a promotable holder can never silently hold stale data.
 No caller-side write quiescing is required around ``remove_node`` or
 ``add_node``.
 
-Handler-side buffer writes are NOT write-through: only handlers registered
-``read_only=True`` may be routed at (and have their pointers retargeted
-to) a replica; all other calls pin to the primary, and a handler that
-mutates through ``deref`` leaves the replicas at the last put until the
-caller re-puts (the read-only routing contract in
-``repro.offload.dataplane`` — use ``replicas=0`` for buffers mutated in
-place by handlers).
+Handler-side buffer writes are write-through only when DECLARED: a
+``mutates=True`` handler runs at the primary and its commit
+(:meth:`commit_mutation`, driven by the scheduler) bumps the dirty epoch
+and invalidates or chain-refreshes the replica holders.  A handler that
+is neither ``read_only`` nor ``mutates`` and mutates through ``deref``
+leaves the replicas at the last put until the caller re-puts (the routing
+contract in ``repro.offload.dataplane``; the scheduler logs a one-shot
+warning for such calls — see docs/failure-model.md, "Write visibility
+and convergence").
 """
 
 from __future__ import annotations
@@ -114,7 +126,8 @@ import time
 import numpy as np
 
 from repro.comm.local import LocalFabric
-from repro.core.closure import f2f
+from repro.core import migratable as mig
+from repro.core.closure import Function, f2f
 from repro.core.errors import OffloadError, RegistrySealedError
 from repro.core.executor import DirectPolicy
 from repro.core.registry import default_registry, verify_peer_digest
@@ -124,6 +137,7 @@ from repro.offload.dataplane import (
     BufferDirectory,
     BufferRecord,
     register_dataplane_handlers,
+    tracked_handles,
 )
 from repro.offload.runtime import NodeRuntime, ReplayCache
 from repro.offload.worker import (
@@ -342,6 +356,7 @@ class ClusterPool:
         policy_factory=DirectPolicy,
         mode: str = "local",
         replicas: int = 0,
+        mutation_refresh: bool = False,
         restart_backoff: float = 0.5,
         restart_backoff_max: float = 8.0,
         max_restarts: int = 5,
@@ -364,6 +379,13 @@ class ClusterPool:
         #: replication factor for the directory-tracked data plane (module
         #: docs, "Replicated data plane"); 0 = primaries only
         self.replicas = int(replicas)
+        #: after a ``mutates=True`` handler commits: False (default) drops
+        #: the replica copies (metadata-only invalidate, lazy re-backfill);
+        #: True chain-refreshes them from the primary (commit_mutation docs)
+        self.mutation_refresh = bool(mutation_refresh)
+        #: thread-local gossip batching (``_gossip_batch``): oneway storms
+        #: produced under it coalesce into one FLAG_FUSED frame per dst
+        self._gossip_tls = threading.local()
         self.directory = BufferDirectory()
         self.host.buffer_directory = self.directory  # _ham/buf_freed target
         self._alloc_rr = 0  # round-robin primary placement for allocate()
@@ -719,14 +741,20 @@ class ClusterPool:
         return self._dataplane_locks[int(handle) % len(self._dataplane_locks)]
 
     def put(self, src, ptr: BufferPtr, *, offset: int = 0) -> None:
-        """Write-through put: the payload lands on the primary AND every
-        replica (over the ordinary zero-copy chunked path), so promotion
-        after a crash needs no data movement.
+        """Chain-replicated write-through put: the payload goes to the
+        primary ONCE (zero-copy chunked pipeline) and the primary streams
+        it to the replicas over worker->worker links, forwarding chunk k
+        while chunk k+1 is still arriving — the host pays one transfer
+        regardless of the replica count (``repro.offload.dataplane``,
+        "Chain replication"; contract in docs/failure-model.md).
 
-        Divergence guard: a replica whose write fails (died mid-put,
-        mid-removal) is DROPPED from the holder set rather than left
-        holding pre-put bytes — a stale copy must never be promotable.  A
-        failed primary write raises (the put did not happen).
+        Divergence guard: the write is sequenced by a directory-minted
+        dirty epoch; a replica that did not confirm the COMPLETE write
+        (died, partitioned, or torn mid-chain) is DROPPED from the holder
+        set at commit — a copy that may be stale must never be promotable.
+        A primary that did not confirm raises (and every holder's
+        ``applied_dirty`` watermark keeps the torn state detectable at a
+        host rebuild).
 
         Holds the buffer's data-plane lock so its holder set cannot change
         under it by a byte-copying path: a join/restart backfill (or drain
@@ -740,16 +768,36 @@ class ClusterPool:
                 self.domain.put(src, self.directory.resolve(ptr),
                                 offset=offset)
                 return
-            self.domain.put(src, ptr.at(rec.primary, rec.epoch),
-                            offset=offset)
-            for holder in rec.replicas:
-                try:
-                    if not self.is_alive(holder):
-                        raise OffloadError(f"replica holder {holder} is down")
-                    self.domain.put(src, ptr.at(holder, rec.epoch),
-                                    offset=offset)
-                except Exception:  # noqa: BLE001 — drop, don't diverge
-                    self.directory.remove_replica(rec.handle, holder)
+            live_reps = [r for r in rec.replicas if self.is_alive(r)]
+            for dead in rec.replicas:
+                if dead not in live_reps:
+                    self.directory.remove_replica(rec.handle, dead)
+            if not live_reps:
+                # no chain to drive: the plain single-destination put
+                self.domain.put(src, ptr.at(rec.primary, rec.epoch),
+                                offset=offset)
+                return
+            dirty = self.directory.begin_write(rec.handle)
+            try:
+                confirmed = self.domain.chain_put(
+                    src, ptr.at(rec.primary, rec.epoch), live_reps, dirty,
+                    offset=offset)
+            except Exception:
+                # the chain never confirmed (primary unreachable / chunk
+                # failed): the primary may hold a torn write at epoch
+                # ``dirty`` while the replicas hold the previous write.
+                # Keep every holder — the applied_dirty watermarks name
+                # the divergence at rebuild — and surface the failure.
+                self.directory.commit_write(rec.handle)
+                raise
+            stale = [r for r in live_reps if r not in confirmed]
+            self.directory.commit_write(rec.handle, stale=stale)
+            if rec.primary not in confirmed:
+                raise OffloadError(
+                    f"chain put of buffer {rec.handle:#x} did not confirm "
+                    f"on primary {rec.primary} (confirmed: {confirmed}) — "
+                    "the write is torn; see docs/failure-model.md"
+                )
 
     def get(self, ptr: BufferPtr, **kw):
         """Directory-resolved get: a stale-epoch pointer is transparently
@@ -791,13 +839,14 @@ class ClusterPool:
         """Free every buffer bound to ``session`` (the session ended — its
         data plane must not leak replicas); returns the number freed."""
         records = self.directory.session_records(session)
-        for rec in records:
-            try:
-                self.free(rec.ptr())
-            except Exception:  # noqa: BLE001 — keep releasing the rest
-                import traceback
+        with self._gossip_batch():  # one fused journal frame per survivor
+            for rec in records:
+                try:
+                    self.free(rec.ptr())
+                except Exception:  # noqa: BLE001 — keep releasing the rest
+                    import traceback
 
-                traceback.print_exc()
+                    traceback.print_exc()
         return len(records)
 
     def buffer_count(self, node: int, timeout: float = 10.0) -> int:
@@ -810,34 +859,33 @@ class ClusterPool:
 
     def _copy_buffer(self, rec, src: int, dst: int,
                      timeout: float = 30.0) -> None:
-        """Stream one buffer ``src`` -> ``dst`` under its global handle,
-        riding the existing chunked zero-copy put/get path (adopt an empty
-        copy, fetch flat — chunked when the reply would exceed a transport
-        frame — then put)."""
+        """Stream one buffer ``src`` -> ``dst`` under its global handle
+        over the worker->worker chain (``_ham/chain_push``): the source
+        streams its own bytes — adopt + windowed chunk pipeline + flush —
+        and the host never stages the payload (it used to fetch the whole
+        buffer and re-put it).  The copy lands stamped with the buffer's
+        current dirty epoch, so the new holder's ``applied_dirty``
+        watermark matches its peers'."""
         dom = self.domain
-        dom.sync(
-            dst,
-            f2f("_ham/buf_adopt", int(rec.handle), list(rec.shape),
-                rec.dtype, registry=dom.registry),
+        confirmed = dom.sync(
+            src,
+            f2f("_ham/chain_push", int(rec.handle), [int(dst)],
+                int(getattr(rec, "dirty", 0)), int(dom.chunk_nbytes), True,
+                registry=dom.registry),
             timeout,
         )
-        count = 1
-        for d in rec.shape:
-            count *= int(d)
-        itemsize = np.dtype(rec.dtype).itemsize
-        limit = dom.chunk_nbytes
-        cap = getattr(dom.host.endpoint, "max_frame_nbytes", None)
-        if cap:
-            limit = min(limit, cap - 4096)
-        chunk = max(1, limit // itemsize) if rec.nbytes > limit else None
-        src_ptr = BufferPtr(src, rec.handle, rec.nbytes, rec.epoch)
-        data = dom.get(src_ptr, offset=0, count=count, chunk_count=chunk)
-        dom.put(data, BufferPtr(dst, rec.handle, rec.nbytes, rec.epoch))
+        if int(dst) not in [int(n) for n in confirmed]:
+            raise OffloadError(
+                f"chain push of buffer {rec.handle:#x} {src}->{dst} did "
+                f"not confirm (confirmed: {confirmed})"
+            )
 
     def _dataplane_on_death(self, node: int) -> None:
         """First death subscriber: metadata-only replica promotion (+ lost
-        accounting + session repin hooks) — see BufferDirectory."""
-        self.directory.on_node_death(node)
+        accounting + session repin hooks) — see BufferDirectory.  The
+        per-buffer gossip storm is batched: one fused frame per survivor."""
+        with self._gossip_batch():
+            self.directory.on_node_death(node)
 
     def _dataplane_on_join(self, node: int) -> None:
         """Join/restart subscriber: lazy backfill — buffers left
@@ -878,33 +926,198 @@ class ClusterPool:
     def _gossip_entry(handle: int, rec) -> list:
         """Wire form of one directory record (``_ham/dir_gossip`` /
         ``_ham/dir_dump`` share it): ``[handle, primary, replicas, epoch,
-        nbytes, shape, dtype, session]``; ``primary = -1`` is a tombstone."""
+        nbytes, shape, dtype, session, dirty]``; ``primary = -1`` is a
+        tombstone."""
         if rec is None:
-            return [int(handle), -1, [], 0, 0, [], "", None]
+            return [int(handle), -1, [], 0, 0, [], "", None, 0]
         return [int(rec.handle), int(rec.primary),
                 [int(r) for r in rec.replicas], int(rec.epoch),
                 int(rec.nbytes), [int(d) for d in rec.shape],
-                str(rec.dtype), rec.session]
+                str(rec.dtype), rec.session, int(getattr(rec, "dirty", 0))]
 
     def _gossip_change(self, handle: int, rec, holders) -> None:
         """Directory-journal subscriber: push the updated record to every
         live worker named in ``holders`` as a best-effort ``_ham/dir_gossip``
         oneway (a lost gossip frame degrades recovery, never correctness —
-        the dataplane module docs state the guarantee)."""
+        the dataplane module docs state the guarantee).  Inside a
+        :meth:`_gossip_batch` scope the sends are parked and flushed as one
+        ``FLAG_FUSED`` frame per destination — an invalidation storm
+        (mutation commit, node death, session release) costs one transport
+        publication per worker, not one per buffer."""
         if getattr(self, "_closed", False):
             return
         entry = self._gossip_entry(handle, rec)
         me = self.host.node_id
+        batch = getattr(self._gossip_tls, "buf", None)
         for node in holders:
             if node == me or not self.is_alive(node):
                 continue
+            fn = f2f("_ham/dir_gossip", [entry], registry=self.domain.registry)
+            if batch is not None:
+                batch.setdefault(int(node), []).append(fn)
+                continue
             try:
-                self.domain.oneway(node, f2f(
-                    "_ham/dir_gossip", [entry],
-                    registry=self.domain.registry,
-                ))
+                self.domain.oneway(node, fn)
             except Exception:  # noqa: BLE001 — best-effort journal
                 pass
+
+    def _queue_oneway(self, node: int, fn) -> None:
+        """Send ``fn`` to ``node`` as a oneway — parked for the per-dst
+        fused flush when inside a :meth:`_gossip_batch` scope."""
+        batch = getattr(self._gossip_tls, "buf", None)
+        if batch is not None:
+            batch.setdefault(int(node), []).append(fn)
+            return
+        try:
+            self.domain.oneway(node, fn)
+        except Exception:  # noqa: BLE001 — best-effort control traffic
+            pass
+
+    def _gossip_batch(self):
+        """Context manager: coalesce every gossip/invalidation oneway
+        emitted in this thread while the scope is open into ONE
+        ``FLAG_FUSED`` frame per destination (``NodeRuntime.
+        send_oneway_fused``).  Nestable — only the outermost scope
+        flushes."""
+        import contextlib
+
+        @contextlib.contextmanager
+        def scope():
+            if getattr(self._gossip_tls, "buf", None) is not None:
+                yield  # nested: the outer scope owns the flush
+                return
+            self._gossip_tls.buf = {}
+            try:
+                yield
+            finally:
+                buf, self._gossip_tls.buf = self._gossip_tls.buf, None
+                for dst, fns in buf.items():
+                    if not self.is_alive(dst):
+                        continue
+                    try:
+                        self.host.send_oneway_fused(dst, fns)
+                    except Exception:  # noqa: BLE001 — best-effort journal
+                        pass
+
+        return scope()
+
+    def commit_mutation(self, handles, *, refresh: bool | None = None,
+                        timeout: float = 30.0) -> None:
+        """Active-Access write commit: after a ``mutates=True`` handler ran
+        at the primary, bump each buffer's dirty epoch and restore replica
+        coherence (dataplane module docs, "Mutate-at-data"; contract in
+        docs/failure-model.md, "Write visibility and convergence").
+
+        ``refresh=False`` (default from ``mutation_refresh``) **drops** the
+        replica copies — a metadata-only invalidate (one fused oneway frame
+        per holder), with the copies re-backfilled lazily at the next
+        join/restart.  ``refresh=True`` keeps the holder set and
+        chain-pushes the new bytes from the primary down the same chain a
+        put would use; a replica that does not confirm the refresh is
+        dropped instead (never left promotable-but-stale).  Called by the
+        scheduler's commit hook after every successful (or failed —
+        half-applied mutations invalidate too) mutating call."""
+        refresh = self.mutation_refresh if refresh is None else bool(refresh)
+        with self._gossip_batch():
+            for handle in handles:
+                handle = int(handle)
+                with self._buffer_lock(handle):
+                    rec = self.directory.lookup(handle)
+                    if rec is None:
+                        continue
+                    dirty = self.directory.begin_write(handle)
+                    live_reps = [r for r in rec.replicas if self.is_alive(r)]
+                    dead_reps = [r for r in rec.replicas
+                                 if r not in live_reps]
+                    if not live_reps:
+                        self.directory.commit_write(handle, stale=dead_reps)
+                        continue
+                    if refresh:
+                        try:
+                            confirmed = self.domain.sync(
+                                rec.primary,
+                                f2f("_ham/chain_push", handle, live_reps,
+                                    dirty, int(self.domain.chunk_nbytes),
+                                    False, registry=self.domain.registry),
+                                timeout,
+                            )
+                        except Exception:  # noqa: BLE001 — an unreachable
+                            # chain degrades to the invalidate outcome for
+                            # the unconfirmed holders
+                            confirmed = [rec.primary]
+                        stale = [r for r in rec.replicas
+                                 if r not in {int(n) for n in confirmed}]
+                        self.directory.commit_write(handle, stale=stale)
+                        for r in stale:
+                            if self.is_alive(r):
+                                self._queue_oneway(r, f2f(
+                                    "_ham/buf_invalidate", handle,
+                                    registry=self.domain.registry))
+                        continue
+                    # invalidate: metadata-only — drop every replica from
+                    # the holder set and tell it to free its copy
+                    self.directory.commit_write(handle,
+                                                stale=list(rec.replicas))
+                    for r in live_reps:
+                        self._queue_oneway(r, f2f(
+                            "_ham/buf_invalidate", handle,
+                            registry=self.domain.registry))
+
+    def mutate(self, function, *, timeout: float = 30.0):
+        """Active-Access write as a pool primitive: run a ``mutates=True``
+        handler AT the primary holding the buffers it references, then
+        commit the write (dirty-epoch bump + replica invalidate/refresh,
+        :meth:`commit_mutation`) before returning the handler's result.
+
+        This is the bare protocol round trip — one targeted sync call
+        plus the commit, nothing else attached.  Routing the same call
+        through a :class:`~repro.cluster.scheduler.Scheduler` gives the
+        identical write-coherence contract for *scheduled* traffic, with
+        queueing, deadlines and retries on top.
+
+        The commit runs on success AND on a raised handler (a handler may
+        mutate before raising — replicas must not keep serving the
+        half-overwritten bytes); the handler's own error outranks a
+        commit failure.  Raises :class:`OffloadError` for a handler not
+        declared ``mutates=True``, or one referencing no directory-tracked
+        buffer (nothing to route on or commit)."""
+        if not getattr(function.record, "mutates", False):
+            raise OffloadError(
+                f"pool.mutate needs a mutates=True handler; "
+                f"{function.record.stable_name!r} is not declared mutating "
+                "(docs/failure-model.md, 'Write visibility and "
+                "convergence')"
+            )
+        handles = tracked_handles(self.directory, function.args)
+        if not handles:
+            raise OffloadError(
+                "pool.mutate call references no directory-tracked buffer "
+                "— nothing to route on or commit"
+            )
+        votes = mig.scan_locality(function.args,
+                                  resolver=self.directory.primary_resolver)
+        live = {n: w for n, w in votes.items() if self.is_alive(n)}
+        if not live:
+            raise OffloadError(
+                "no live primary for the buffers referenced by "
+                f"{function.record.stable_name!r} (handles "
+                f"{[hex(h) for h in handles]})"
+            )
+        target = max(live, key=lambda n: live[n])
+        new_args, changed = self.directory.resolve_args(function.args,
+                                                        target=target)
+        if changed:
+            function = Function(function.record, new_args)
+        try:
+            result = self.domain.sync(target, function, timeout)
+        except BaseException:
+            try:  # half-applied mutations invalidate too
+                self.commit_mutation(handles, timeout=timeout)
+            except Exception:  # noqa: BLE001 — the call's error outranks
+                pass
+            raise
+        self.commit_mutation(handles, timeout=timeout)
+        return result
 
     def restart_host(self, timeout: float = 30.0) -> dict:
         """Crash-recover the HOST in place (the last unprotected failure
@@ -942,6 +1155,9 @@ class ClusterPool:
             # primary tiebreak — a node serving a buffer has the freshest
             # view of it)
             best: dict[int, tuple] = {}
+            #: handle -> {dumper node -> applied_dirty watermark} — the
+            #: chain protocol's stale-tail evidence (dump element 10)
+            applied_by: dict[int, dict[int, int]] = {}
             for node in survivors:
                 try:
                     entries = self.domain.sync(
@@ -958,14 +1174,29 @@ class ClusterPool:
                     cur = best.get(h)
                     if cur is None or rank > cur[0]:
                         best[h] = (rank, e)
+                    if len(e) > 9:
+                        applied_by.setdefault(h, {})[node] = int(e[9])
             live = set(survivors)
             records: list[BufferRecord] = []
             promoted: list[BufferRecord] = []
             lost_map: dict[int, str] = {}
             for h, (_rank, e) in sorted(best.items()):
-                _, p, reps, epoch, nbytes, shape, dtype, session = e
+                _, p, reps, epoch, nbytes, shape, dtype, session = e[:8]
+                dirty = int(e[8]) if len(e) > 8 else 0
                 p, epoch = int(p), int(epoch)
                 reps = sorted({int(r) for r in reps} & live - {p})
+                # stale-tail filter (chain write protocol): a holder whose
+                # bytes reflect an older write epoch than a surviving
+                # peer's was cut off mid-chain — it must not be promotable.
+                # Holders that never reported a watermark (pre-v2 peers)
+                # get the benefit of the doubt; all-equal watermarks keep
+                # every holder (the torn-primary residual — the failed
+                # write already raised at the caller).
+                amap = applied_by.get(h, {})
+                maxa = max(amap.values(), default=0)
+                stale_tail = [r for r in reps
+                              if amap.get(r, maxa) < maxa]
+                reps = [r for r in reps if r not in stale_tail]
                 was_promoted = False
                 if p not in live:
                     if not reps:
@@ -974,10 +1205,19 @@ class ClusterPool:
                     p = reps.pop(0)  # lowest live replica, as on_node_death
                     epoch += 1
                     was_promoted = True
+                elif amap.get(p, maxa) < maxa and reps:
+                    # the primary itself missed the newest write some
+                    # replica holds complete: promote the freshest holder
+                    # (ties lowest-id) — the old primary's copy is stale
+                    p = min(reps, key=lambda r: (-amap.get(r, maxa), r))
+                    reps = [r for r in reps if r != p]
+                    epoch += 1
+                    was_promoted = True
                 rec = BufferRecord(
                     handle=h, primary=p, replicas=tuple(reps), epoch=epoch,
                     nbytes=int(nbytes), shape=tuple(int(d) for d in shape),
                     dtype=str(dtype), session=session,
+                    dirty=max(dirty, maxa),
                 )
                 records.append(rec)
                 if was_promoted:
@@ -1191,8 +1431,10 @@ class ClusterPool:
                 if drain:
                     # lossless shrink: primaries migrate off while the node
                     # still serves gets — BEFORE the scheduler fence, so the
-                    # directory never routes at a fenced node (module docs)
-                    self._migrate_off(node, timeout)
+                    # directory never routes at a fenced node (module docs);
+                    # the per-buffer gossip batches into fused frames
+                    with self._gossip_batch():
+                        self._migrate_off(node, timeout)
                 waiters = []
                 for cb in self._leave_cbs:
                     try:

@@ -163,10 +163,43 @@ bypass small-call fusion — a fused segment cannot be retransmitted alone.
 Fault-free cost: calls submitted without a deadline skip all of this
 (no tracking entry, no flag bits, no watchdog thread until the first
 deadlined submit).
+
+Mutate-at-data (Active Access writes)
+-------------------------------------
+
+A handler registered ``mutates=True`` declares that it writes buffers
+through ``deref`` in place — the Active Access write direction (Besta et
+al.): ship the mutation to the data instead of round-tripping the bytes
+through ``get``/modify/``put``.  The scheduler closes the coherence loop:
+
+* **routing** — a mutating call is routed at the primary of the buffers it
+  references (under EVERY policy, not just ``locality``), and its pointers
+  stay pinned there, so the write lands on the authoritative copy;
+* **commit** — when the call completes (success OR remote error — a
+  handler may have partially mutated before raising), the scheduler calls
+  ``pool.commit_mutation`` on the referenced handles from a dedicated
+  commit thread: the buffer's *dirty epoch* advances and every replica
+  holder is invalidated (dropped for lazy re-backfill, or refreshed down
+  the replication chain when the pool was built ``mutation_refresh=True``).
+  The future :meth:`submit` returns resolves only after the commit, so
+  ``fut.get()`` == "replicas can no longer serve the overwritten bytes"
+  (docs/failure-model.md, "Write visibility and convergence").  The commit
+  runs on its own thread because completion callbacks fire on the event
+  loop — a synchronous invalidation send from there would deadlock.
+* **oneways are uncommitted** — :meth:`oneway` has no completion edge, so
+  a mutating oneway updates the primary without invalidating replicas;
+  use ``submit`` for mutations that must converge.
+
+A handler declared neither ``read_only`` nor ``mutates`` that dereferences
+a *replicated* buffer gets a one-shot warning naming the missing
+declaration (hamlint HAM001 finds the same statically) — its replicas are
+not invalidated and a replica-served read may observe stale bytes.
 """
 
 from __future__ import annotations
 
+import logging
+import queue as _queue
 import threading
 from typing import Iterable
 
@@ -182,6 +215,8 @@ from repro.offload.runtime import FUSE_THRESHOLD
 __all__ = ["Scheduler", "as_completed", "gather"]
 
 POLICIES = ("round_robin", "least_outstanding", "locality")
+
+_log = logging.getLogger("repro.cluster.scheduler")
 
 
 class Scheduler:
@@ -266,8 +301,17 @@ class Scheduler:
             "deadline_failed": 0,
             "replay_acks": 0,
             "oneways": 0,
+            "mutations_committed": 0,
             "routed": {n: 0 for n in pool.worker_nodes},
         }
+        # -- mutate-at-data state (module docs) ----------------------------
+        #: handlers already warned for undeclared replicated-buffer access
+        self._warned: set[str] = set()
+        #: lazily-started commit pipeline: completion callbacks run on the
+        #: event-loop thread, where a synchronous invalidation send would
+        #: deadlock — commits hop to this daemon thread instead
+        self._commit_q: _queue.SimpleQueue | None = None
+        self._commit_thread: threading.Thread | None = None
         #: sticky-session affinity over this scheduler's live set
         self.sessions = SessionRouter(self.live_nodes)
         if self._directory is not None:
@@ -302,6 +346,25 @@ class Scheduler:
             live = sorted(self._live)
             if not live:
                 return None
+            d = self._directory
+            if d is not None and len(d) \
+                    and getattr(function.record, "mutates", False):
+                # mutate-at-data routing (module docs): a declared-mutating
+                # call executes WHERE its buffers live, under every policy —
+                # the primary holds the authoritative copy the write must
+                # land on.  nbytes-weighted like locality voting.
+                votes = mig.scan_locality(
+                    function.args, resolver=d.primary_resolver
+                )
+                alive_votes = {
+                    n: c for n, c in votes.items() if n in self._live
+                }
+                if alive_votes:
+                    self.stats["locality_hits"] += 1
+                    return max(
+                        alive_votes,
+                        key=lambda n: (alive_votes[n], -self._load(n)),
+                    )
             # prefer nodes with a free credit so one saturated worker does
             # not block traffic the others could take (flow-control contract)
             uncongested = [
@@ -371,6 +434,18 @@ class Scheduler:
 
         if node is not None and session is not None:
             raise OffloadError("submit takes node= or session=, not both")
+        # mutate-at-data bookkeeping (module docs): collect the directory
+        # handles a declared-mutating call references — its future commits
+        # their dirty epochs on completion — and warn ONCE per handler for
+        # undeclared replicated-buffer access.  Cost when the directory is
+        # empty or the handler is declared read_only: one attribute check.
+        mutate_handles: tuple[int, ...] = ()
+        d = self._directory
+        if d is not None and not d.empty() and not function.record.read_only:
+            if getattr(function.record, "mutates", False):
+                mutate_handles = self._tracked_handles(function.args)
+            else:
+                self._warn_undeclared(function)
         call_deadline = self.deadline if deadline is None else deadline
         call_retries = self.retries if retries is None else int(retries)
         # the flag rides EVERY attempt including the first: the worker must
@@ -490,6 +565,8 @@ class Scheduler:
                 )
             if full or adaptive:
                 self._flush_target(target)
+            if mutate_handles:
+                return self._wrap_mutating(fut, mutate_handles)
             return fut
         if self.fuse_window is not None:
             # a non-fusible frame must not overtake parked calls to the
@@ -504,6 +581,8 @@ class Scheduler:
         # registered after the send: if a death handler already rejected
         # the future, the callback runs immediately and returns the credit
         fut.add_done_callback(lambda f, n=target: self._on_done(n, f))
+        if mutate_handles:
+            return self._wrap_mutating(fut, mutate_handles)
         return fut
 
     def _resolve_for(self, function: Function, target: int) -> Function:
@@ -527,6 +606,99 @@ class Scheduler:
         if not changed:
             return function
         return Function(function.record, new_args)
+
+    # -- mutate-at-data plumbing (module docs) ------------------------------
+
+    def _tracked_handles(self, args) -> tuple[int, ...]:
+        """Directory-tracked buffer handles referenced by ``args`` (the
+        handles a mutating call's commit must invalidate) — the shared
+        dataplane walk, same depth bound as ``resolve_args``."""
+        from repro.offload.dataplane import tracked_handles
+
+        return tracked_handles(self._directory, args)
+
+    def _warn_undeclared(self, function: Function) -> None:
+        """One-shot warning (module docs): a handler declared neither
+        ``read_only`` nor ``mutates`` is touching a *replicated* buffer —
+        if it writes through deref, replicas are never invalidated and a
+        replica-served read may observe stale bytes.  Cost after the first
+        warning: one set lookup."""
+        name = function.record.stable_name
+        if name in self._warned:
+            return
+        d = self._directory
+        for h in self._tracked_handles(function.args):
+            rec = d.lookup(h)
+            if rec is not None and rec.replicas:
+                self._warned.add(name)
+                _log.warning(
+                    "handler %r dereferences replicated buffer %#x but "
+                    "declares neither read_only=True nor mutates=True: an "
+                    "in-place write would NOT invalidate the buffer's "
+                    "replicas, and a replica-served read could observe "
+                    "stale bytes.  Declare the handler's intent (see "
+                    "docs/failure-model.md, 'Write visibility and "
+                    "convergence'; hamlint HAM001 finds this statically).",
+                    name, h,
+                )
+                return
+
+    def _wrap_mutating(self, fut: Future, handles: tuple[int, ...]) -> Future:
+        """Outer future for a declared-mutating call: resolves with the
+        inner call's result/error only AFTER ``pool.commit_mutation`` ran
+        for ``handles`` on the commit thread (module docs — the commit runs
+        on success AND error, because a handler may mutate before raising).
+        """
+        outer = Future()
+        outer.msg_id = fut.msg_id
+        fut.add_done_callback(
+            lambda f: self._commit_enqueue(f, outer, handles)
+        )
+        return outer
+
+    def _commit_enqueue(self, inner: Future, outer: Future,
+                        handles: tuple[int, ...]) -> None:
+        with self._lock:
+            if self._commit_q is None:
+                self._commit_q = _queue.SimpleQueue()
+                self._commit_thread = threading.Thread(
+                    target=self._commit_loop, name="ham-sched-commit",
+                    daemon=True,
+                )
+                self._commit_thread.start()
+            q = self._commit_q
+        q.put((inner, outer, handles))
+
+    def _commit_loop(self) -> None:
+        while True:
+            inner, outer, handles = self._commit_q.get()
+            commit_error: BaseException | None = None
+            try:
+                commit = getattr(self.pool, "commit_mutation", None)
+                if commit is not None and handles:
+                    commit(handles)
+                    with self._lock:
+                        self.stats["mutations_committed"] += 1
+            except BaseException as e:  # noqa: BLE001 — surfaces on outer
+                commit_error = e
+            exc = inner.exception()
+            if exc is not None:
+                # the call's own failure outranks a commit failure (the
+                # commit still ran first — replicas are not left serving
+                # a partial write)
+                outer.set_exception(exc)
+            elif commit_error is not None:
+                outer.set_exception(OffloadError(
+                    f"mutation committed on the primary but replica "
+                    f"invalidation failed for handles "
+                    f"{[hex(h) for h in handles]}: "
+                    f"{type(commit_error).__name__}: {commit_error} — "
+                    f"replicas may serve stale bytes until the next "
+                    f"backfill (docs/failure-model.md, 'Write visibility "
+                    f"and convergence')"
+                ))
+            else:
+                outer.set_result(inner.get(0))
 
     def oneway(self, function: Function, *, node: int | None = None,
                session=None) -> None:

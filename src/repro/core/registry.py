@@ -64,6 +64,16 @@ class HandlerRecord:
     can never silently update one replica and diverge the others.  It does
     not participate in the stable name (peers may disagree about it
     without breaking key agreement; routing is a sender-side concern).
+
+    ``mutates`` is the write-side twin (Active Access: ship the mutation
+    to the data): the handler *intends* to write through its buffer
+    arguments in place.  The scheduler pins such a call to the primary and
+    the data plane **commits** the write on return — the buffer's dirty
+    epoch is bumped and replica holders are invalidated/refreshed, so the
+    mutation becomes visible cluster-wide without the host round-tripping
+    the bytes (docs/failure-model.md, "Write visibility and convergence").
+    Like ``read_only`` it is routing metadata, excluded from the stable
+    name.  The two are mutually exclusive.
     """
 
     stable_name: str
@@ -72,6 +82,7 @@ class HandlerRecord:
     result_specs: tuple | None   # None => dynamic result
     doc: str = ""
     read_only: bool = False
+    mutates: bool = False
 
     @property
     def is_static(self) -> bool:
@@ -264,11 +275,19 @@ class HandlerRegistry:
         name: str | None = None,
         doc: str = "",
         read_only: bool = False,
+        mutates: bool = False,
     ) -> HandlerRecord:
         _validate_registration(fn, arg_specs, result_specs, name)
+        if read_only and mutates:
+            raise RegistryError(
+                f"handler {name or getattr(fn, '__qualname__', fn)!r}: "
+                "read_only=True and mutates=True are mutually exclusive — "
+                "a handler either never writes through its buffers or "
+                "declares that it does"
+            )
         stable = _derive_stable_name(fn, arg_specs, name)
         record = HandlerRecord(stable, fn, arg_specs, result_specs, doc,
-                               read_only)
+                               read_only, mutates)
         with self._lock:
             if self._table is not None and not self._allow_late:
                 raise RegistrySealedError(
@@ -296,20 +315,24 @@ class HandlerRegistry:
         result_specs: tuple | None = None,
         name: str | None = None,
         read_only: bool = False,
+        mutates: bool = False,
     ):
         """Decorator form.  ``args=`` gives example values to derive a static
         spec from (the ``Pars...`` of the closure template); ``arg_specs=``
         passes specs directly; neither => dynamic payload.  ``read_only=True``
         declares the handler never writes through a ``buffer_ptr`` argument
         (see :class:`HandlerRecord`) — it is what allows a replicated data
-        plane to serve the call from any replica."""
+        plane to serve the call from any replica.  ``mutates=True`` declares
+        the opposite intent: the handler writes buffers in place, the call is
+        pinned to the primary, and the data plane commits the write (dirty
+        epoch bump + replica invalidation) when it returns."""
 
         def wrap(f: Callable) -> Callable:
             specs = arg_specs
             if specs is None and args is not None:
                 specs = tuple(spec_of(a) for a in args)
             self.register(f, arg_specs=specs, result_specs=result_specs,
-                          name=name, read_only=read_only)
+                          name=name, read_only=read_only, mutates=mutates)
             return f
 
         if fn is not None:

@@ -205,6 +205,71 @@ class OffloadDomain:
         ]
         self._wait_all(futs)
 
+    def chain_put(self, src: np.ndarray, ptr: BufferPtr, hops, dirty: int,
+                  *, offset: int = 0, chunk_nbytes: int | None = None,
+                  timeout: float | None = 60.0) -> list[int]:
+        """Chain-replicated put (``repro.offload.dataplane``, "Chain
+        replication"): the payload travels host -> ``ptr.node`` ONCE, as
+        the same pipelined chunk stream as :meth:`put`, and ``ptr.node``
+        forwards each chunk down ``hops`` over worker->worker links while
+        the next chunk is still in flight.  ``dirty`` is the write epoch
+        minted by ``BufferDirectory.begin_write``.  Returns the node ids
+        that confirmed the COMPLETE write, primary first — a truncated
+        list names exactly the stale tail.
+
+        When every holder is in-process (``direct_data_plane``, thread
+        workers) the chain degenerates to direct stores — the bytes are
+        already in shared memory, so copying host -> each holder is
+        strictly cheaper than framing a wire chain.  Otherwise the wire
+        path runs: the chain forwarding executes in the primary's handler
+        context."""
+        arr = np.ascontiguousarray(src)
+        hops = [int(h) for h in hops]
+        if self.direct_data_plane:
+            holders = [int(ptr.node), *hops]
+            rts = [self._inproc.get(n) for n in holders]
+            if all(rt is not None for rt in rts):
+                src_flat = arr.reshape(-1)
+
+                def _store():
+                    for n, rt in zip(holders, rts):
+                        flat = rt.buffers.flat(ptr.at(n))
+                        flat[offset : offset + src_flat.size] = \
+                            src_flat.astype(flat.dtype, copy=False)
+                        rt.applied_dirty[int(ptr.handle)] = int(dirty)
+
+                self._run_direct(_store)
+                return holders
+        limit = self.chunk_nbytes if chunk_nbytes is None else chunk_nbytes
+        cap = getattr(self.host.endpoint, "max_frame_nbytes", None)
+        if limit and cap:
+            limit = min(limit, cap - 4096)
+        flat = arr.reshape(-1)
+        step = max(1, limit // max(1, arr.dtype.itemsize)) if limit \
+            else max(1, flat.size)
+        futs = []
+        nchunks = 0
+        if flat.size:
+            futs = [
+                self.async_(
+                    ptr.node,
+                    f2f("_ham/chain_put", int(ptr.handle), int(offset + o),
+                        flat[o : o + step], hops, int(dirty),
+                        registry=self.registry),
+                )
+                for o in range(0, flat.size, step)
+            ]
+            nchunks = len(futs)
+        # the flush rides the same pipeline (per-link FIFO orders it behind
+        # every chunk) — no extra round trip after the last chunk ack
+        flush = self.async_(
+            ptr.node,
+            f2f("_ham/chain_flush", int(ptr.handle), hops, int(dirty),
+                int(nchunks), registry=self.registry),
+        )
+        results = self._wait_all([*futs, flush], timeout)
+        return [int(n) for n in results[-1]]
+
     def get(self, ptr: BufferPtr, *, offset: int = 0, count: int = -1,
             chunk_count: int | None = None) -> np.ndarray:
         """Fetch ``count`` elements from ``offset`` (whole, shaped buffer when

@@ -23,10 +23,12 @@ Ownership / epoch / replication protocol
   ``replicas=N`` holder nodes installs an empty copy under the SAME handle
   via ``_ham/buf_adopt``; the directory records the set at epoch 0.
 
-``put`` (write-through):
-  the host writes the payload to the primary AND every replica over the
-  existing zero-copy chunked put path — copies never diverge, so promotion
-  needs no data movement.
+``put`` (chain-replicated write-through):
+  the host sends the payload ONCE — to the primary, over the existing
+  zero-copy chunked path — and the primary streams it on to the replicas
+  over worker->worker links (the chain-replication write protocol below),
+  so copies never diverge and promotion needs no data movement, without
+  the host paying one wire transfer per holder.
 
 **Crash** (pool monitor announces a death):
   :meth:`BufferDirectory.on_node_death` runs *metadata-only* promotion —
@@ -95,24 +97,82 @@ The durable-directory protocol journals the map to its own data:
   writer.  Any buffer whose holders survive the host crash is recoverable;
   ``BENCH_cluster.json`` ``recovery.host_restart`` asserts ``lost = 0``.
 
+Chain replication (the write protocol)
+--------------------------------------
+
+Contract: docs/failure-model.md, "Write visibility and convergence".
+
+A replicated write moves bytes exactly once per link: host -> primary ->
+replica 1 -> replica 2 -> ...  Three handlers implement it:
+
+* ``_ham/chain_put(handle, offset, chunk, hops, dirty)`` — store one chunk
+  locally, then forward it to ``hops[0]`` (with ``hops[1:]``) as a
+  *oneway*, pushed onto the wire before the next inbound chunk is handled,
+  so chunk k travels down-chain while chunk k+1 is still arriving
+  (pipelining — the chain costs ~one link of latency, not one transfer
+  per holder).  Forwards deliberately carry no reply: a handler blocking
+  on per-chunk acks can deadlock against its own event loop's drain batch
+  (an ack drained *behind* the blocking frame is unreachable), and the
+  flush's chunk count subsumes them.
+* ``_ham/chain_flush(handle, hops, dirty, nchunks)`` — the write's tail:
+  verify all ``nchunks`` chunks of write epoch ``dirty`` landed here
+  (per-link FIFO puts the flush behind every forwarded chunk), record
+  ``applied_dirty[handle] = dirty`` (this node's bytes now reflect that
+  write), then flush the rest of the chain synchronously.  Returns the
+  list of node ids that confirmed the complete write — a crash or
+  partition mid-chain truncates the list at the break, never hides it.
+* ``_ham/chain_push(handle, hops, dirty, chunk_nbytes, adopt)`` — the
+  source-driven form (migration, backfill, post-mutation refresh): the
+  node holding the bytes streams its own copy down ``hops`` with a bounded
+  send window, no host staging.
+
+Sequencing: every write carries a **dirty epoch** minted by the host
+directory (:meth:`BufferDirectory.begin_write` — distinct from the
+*ownership* epoch, which tracks placement).  A holder's ``applied_dirty``
+is dumped next to its shard entry (``_ham/dir_dump``), so a host rebuild
+can detect a chain tail that missed a write (its applied epoch trails a
+surviving peer's) and drop it from the promotable set — a crash mid-chain
+leaves a *detectable* stale tail, healed by the ordinary promotion and
+lazy-backfill machinery, never a silently promotable stale copy.
+
 Read-only routing contract (what keeps copies from diverging)
 -------------------------------------------------------------
 
-Write-through ``put`` is the ONLY sanctioned way to change a replicated
-buffer's bytes.  A handler that writes through ``deref`` updates exactly
-one copy — so serving such a call from a replica would silently diverge
-it from the primary, and a later crash could promote either version.
-The guard is declarative: only handlers registered with ``read_only=True``
+Chain-replicated ``put`` and declared-``mutates`` handler commits (below)
+are the only sanctioned ways to change a replicated buffer's bytes.  An
+*undeclared* handler write through ``deref`` updates exactly one copy — so
+serving such a call from a replica would silently diverge it from the
+primary, and a later crash could promote either version.  The guard is
+declarative: only handlers registered with ``read_only=True``
 (:class:`~repro.core.registry.HandlerRecord`) may have their pointers
 retargeted at a replica holder or widen their locality votes to every
 holder; every other call has its pointers pinned to the *primary* (and
 votes for the primary only), so an undeclared mutation can only ever land
-on the authoritative copy.  Note the residual caveat: even on the
-primary, a handler-side in-place write is invisible to the replicas — it
-is not write-through — so a crash before the caller re-puts the buffer
-promotes a replica holding the bytes of the last put.  Handlers
-that mutate buffers should use ``replicas=0`` buffers or follow the call
-with an explicit ``put`` to restore coherence.
+on the authoritative copy.  Replica-routed reads additionally **fence on
+the write epoch**: while a chain write is in flight
+(:meth:`BufferDirectory.writing`), reads pin to the primary instead of a
+replica whose bytes are mid-overwrite.
+
+Mutate-at-data (Active Access writes)
+-------------------------------------
+
+A handler registered ``mutates=True`` is the declared write-side twin of
+``read_only``: the scheduler routes it to the primary, lets it mutate the
+authoritative bytes in place (the operation ships to the data — no
+get/mutate/put round trip), and **commits** the mutation afterwards:
+:meth:`BufferDirectory.commit_write` bumps the buffer's dirty epoch and
+the pool either *invalidates* the replica holders (they drop their copy
+and re-backfill lazily — the default, metadata-only) or *refreshes* them
+(the primary chain-pushes the new bytes down the same chain).  Either way
+no reader can silently observe a pre-mutation replica after the commit:
+the copy is gone from the holder set, or it holds the new bytes.  The
+bare primitive — route at primary, execute, commit, nothing queued in
+between — is ``ClusterPool.mutate``; the scheduler path layers
+deadlines/retries on the same contract for scheduled traffic.  A
+handler that is *neither* ``read_only`` nor ``mutates`` and derefs a
+replicated buffer gets a one-shot warning pointing at the contract
+(docs/failure-model.md) — its in-place writes are invisible to replicas
+until the caller re-puts.
 """
 
 from __future__ import annotations
@@ -138,6 +198,10 @@ class BufferRecord:
     shape: tuple
     dtype: str
     session: Hashable | None = None
+    #: write (dirty) epoch — bumped per committed write/mutation, sequenced
+    #: by the directory (module docs, "Chain replication").  Orthogonal to
+    #: ``epoch``, which tracks *placement* (primary moves).
+    dirty: int = 0
 
     @property
     def holders(self) -> tuple[int, ...]:
@@ -162,6 +226,9 @@ class BufferDirectory:
         self._lock = threading.Lock()
         self._records: dict[int, BufferRecord] = {}
         self._lost: dict[int, str] = {}  # handle -> why
+        #: handles with a chain write in flight (begin_write .. commit_write)
+        #: — replica-routed reads fence on this (module docs)
+        self._writing: dict[int, int] = {}
         self._repin_hooks: list[Callable[[Hashable, int], None]] = []
         #: gossip journal subscribers (module docs, durable directory):
         #: cb(handle, record_snapshot_or_None, holders_to_notify)
@@ -289,7 +356,10 @@ class BufferDirectory:
                 rec = self.lookup(v.handle)
                 if rec is None:
                     return self.resolve(v)  # raises for lost buffers
-                node = target if (target is not None and target in rec.holders) \
+                # replica-read fence: while a chain write is in flight the
+                # replica's bytes are mid-overwrite — pin to the primary
+                node = target if (target is not None and target in rec.holders
+                                  and not self.writing(v.handle)) \
                     else rec.primary
                 if v.node == node and v.epoch == rec.epoch:
                     return v
@@ -326,6 +396,10 @@ class BufferDirectory:
         if rec is None:
             return None
         w = max(1, rec.nbytes)
+        if self.writing(value.handle):
+            # replica-read fence (module docs): votes narrow to the primary
+            # so _resolve_for's pin and the routing choice agree
+            return {rec.primary: w}
         return {n: w for n in rec.holders}
 
     def primary_resolver(self, value):
@@ -339,6 +413,52 @@ class BufferDirectory:
         if rec is None:
             return None
         return {rec.primary: max(1, rec.nbytes)}
+
+    # -- write sequencing (dirty epochs; module docs, chain replication) ----
+
+    def begin_write(self, handle: int) -> int:
+        """Open a chain write: mint and return the buffer's next dirty
+        epoch.  No gossip fires here — the bytes are not anywhere yet; the
+        matching :meth:`commit_write` journals the final state.  While open,
+        replica-routed reads fence to the primary (:meth:`writing`)."""
+        with self._lock:
+            rec = self._records[int(handle)]
+            rec.dirty += 1
+            self._writing[int(handle)] = self._writing.get(int(handle), 0) + 1
+            return rec.dirty
+
+    def commit_write(self, handle: int, stale=()) -> BufferRecord | None:
+        """Close a chain write: drop the ``stale`` holders (replicas that
+        did not confirm the write — a copy that may be torn must never be
+        promotable) and fire ONE gossip journal entry carrying the new
+        dirty epoch.  Returns a snapshot of the committed record (None if
+        the buffer was freed mid-write)."""
+        handle = int(handle)
+        with self._lock:
+            n = self._writing.get(handle, 0) - 1
+            if n > 0:
+                self._writing[handle] = n
+            else:
+                self._writing.pop(handle, None)
+            rec = self._records.get(handle)
+            if rec is None:
+                return None
+            dropped = [int(r) for r in stale if r in rec.replicas]
+            if dropped:
+                rec.replicas = tuple(
+                    r for r in rec.replicas if r not in dropped
+                )
+            holders = (*rec.holders, *dropped)
+            snap = dataclasses.replace(rec)
+        # dropped holders are notified too: their shard entry must go
+        self._fire_change(handle, rec, holders)
+        return snap
+
+    def writing(self, handle: int) -> bool:
+        """True while a chain write to ``handle`` is in flight — the
+        replica-read fence (module docs, read-only routing contract)."""
+        with self._lock:
+            return int(handle) in self._writing
 
     # -- placement mutation (epoch bumps) ----------------------------------
 
@@ -540,6 +660,33 @@ class BufferDirectory:
             return sorted(self._lost)
 
 
+def tracked_handles(directory: BufferDirectory, args) -> tuple[int, ...]:
+    """Directory-tracked buffer handles referenced by ``args`` — the
+    handles a mutating call's commit must invalidate (module docs,
+    "Mutate-at-data").  Same shallow pytree walk and depth bound as
+    :meth:`BufferDirectory.resolve_args` / ``scan_locality``: a pointer
+    deep enough to route on is deep enough to commit."""
+    found: list[int] = []
+
+    def walk(v, depth=0):
+        if isinstance(v, BufferPtr):
+            if directory.lookup(v.handle) is not None:
+                found.append(int(v.handle))
+            return
+        if depth >= MAX_SCAN_DEPTH:
+            return
+        if isinstance(v, (list, tuple)):
+            for i in v:
+                walk(i, depth + 1)
+        elif isinstance(v, dict):
+            for i in v.values():
+                walk(i, depth + 1)
+
+    for a in args:
+        walk(a)
+    return tuple(dict.fromkeys(found))
+
+
 # --------------------------------------------------------------------------
 # control handlers (dynamic payloads; registered at import = static init)
 # --------------------------------------------------------------------------
@@ -598,20 +745,156 @@ def _h_buf_freed(node_id, handle):
             pass
 
 
+#: per-hop wait bound for the chain write protocol — how long a node waits
+#: on its downstream neighbour before declaring the tail unconfirmable and
+#: truncating the confirmation list there (tests shrink this to exercise
+#: mid-chain partitions without real-time 30 s stalls)
+CHAIN_HOP_TIMEOUT = 30.0
+
+# -- chain replication handlers (module docs, "Chain replication";
+# contract in docs/failure-model.md, "Write visibility and convergence") --
+
+
+def _h_chain_put(handle, offset, chunk, hops, dirty):
+    """One chunk of a chain-replicated write: store it locally, then
+    forward it to ``hops[0]`` as a *oneway* before returning — chunk k
+    rides the next link while chunk k+1 is still arriving here, so the
+    whole chain costs ~one link of extra latency, not one transfer per
+    holder.  The forward carries no reply on purpose: confirmation flows
+    through ``_ham/chain_flush``, which travels the same link (per-link
+    FIFO orders it behind every chunk) and checks the receiver's own
+    chunk count — waiting on per-chunk acks from handler context can
+    deadlock against the event loop's drain batch (an ack drained into
+    the same batch *behind* the blocking frame is unreachable until
+    timeout)."""
+    from repro.core.closure import Function
+    from repro.offload.buffer import BufferPtr
+    from repro.offload.runtime import current_node
+
+    node = current_node()
+    handle, dirty = int(handle), int(dirty)
+    flat = node.buffers.flat(BufferPtr(node.node_id, handle))
+    n = chunk.size
+    flat[offset : offset + n] = chunk.reshape(-1).astype(flat.dtype,
+                                                         copy=False)
+    seen = node.chain_seen.get(handle)
+    if seen is None or seen[0] != dirty:
+        node.chain_seen[handle] = seen = [dirty, 0]  # a new write epoch
+        # restarts the count; chunks of an abandoned earlier write drop
+    seen[1] += 1
+    if hops:
+        # send_oneway packs (= copies) the chunk into the outbound frame
+        # before returning, so a frame-aliasing inbound view is safe here
+        record = node.table.record_of("_ham/chain_put")
+        node.send_oneway(int(hops[0]), Function(
+            record, (handle, int(offset), chunk,
+                     [int(h) for h in hops[1:]], dirty)))
+        # push the forward out NOW, not at end-of-drain-batch: the next
+        # hop must store chunk k while chunk k+1 is still crossing the
+        # host->primary link, else the chain serialises into recv-all-
+        # then-forward-all and the pipelining win evaporates
+        node._flush_egress()
+
+
+def _h_chain_flush(handle, hops, dirty, nchunks):
+    """Tail of one chain write: verify every chunk of write epoch ``dirty``
+    landed here, mark this node's bytes as reflecting ``dirty``
+    (``applied_dirty``), then flush the rest of the chain synchronously.
+    The downstream flush rides the same link as the forwarded chunks, so
+    per-link FIFO guarantees the next hop counted every chunk before it
+    answers — its own ``got != nchunks`` check subsumes per-chunk acks.
+    Returns the node ids holding the COMPLETE write — a crash/partition
+    mid-chain truncates the list at the break, so the caller sees exactly
+    which tail is stale."""
+    from repro.core.closure import Function
+    from repro.offload.runtime import current_node
+
+    node = current_node()
+    handle, dirty, nchunks = int(handle), int(dirty), int(nchunks)
+    seen = node.chain_seen.pop(handle, None)
+    got = seen[1] if seen is not None and seen[0] == dirty else 0
+    if got != nchunks:
+        return []  # torn local copy — and the tail only saw what we forwarded
+    node.applied_dirty[handle] = dirty
+    if not hops:
+        return [node.node_id]
+    record = node.table.record_of("_ham/chain_flush")
+    try:
+        downstream = node.wait(node.send_async(int(hops[0]), Function(
+            record, (handle, [int(h) for h in hops[1:]], dirty, nchunks))),
+            CHAIN_HOP_TIMEOUT)
+    except Exception:  # noqa: BLE001 — next hop unreachable: the chain is
+        # confirmed up to and including this node only
+        return [node.node_id]
+    return [node.node_id, *[int(n) for n in downstream]]
+
+
+def _h_chain_push(handle, hops, dirty, chunk_nbytes, adopt):
+    """Source-driven chain write (migration / backfill / post-mutation
+    refresh): stream THIS node's copy of ``handle`` down ``hops`` with a
+    bounded send window — the host never stages the bytes.  ``adopt=True``
+    first installs an empty copy on each hop (idempotent).  Returns the
+    confirmed node ids, exactly as ``_ham/chain_flush``."""
+    from repro.core.closure import Function
+    from repro.offload.buffer import BufferPtr
+    from repro.offload.runtime import current_node
+
+    node = current_node()
+    handle, dirty = int(handle), int(dirty)
+    hops = [int(h) for h in hops]
+    arr = node.buffers.deref(BufferPtr(node.node_id, handle))
+    if adopt:
+        rec_adopt = node.table.record_of("_ham/buf_adopt")
+        for h in hops:
+            node.wait(node.send_async(h, Function(
+                rec_adopt, (handle, [int(d) for d in arr.shape],
+                            str(arr.dtype)))), CHAIN_HOP_TIMEOUT)
+    flat = arr.reshape(-1)
+    limit = int(chunk_nbytes)
+    cap = getattr(node.endpoint, "max_frame_nbytes", None)
+    if cap:
+        limit = min(limit, cap - 4096)
+    step = max(1, limit // max(1, flat.dtype.itemsize))
+    rec_put = node.table.record_of("_ham/chain_put")
+    window: list = []
+    nchunks = 0
+    if flat.size:
+        for o in range(0, flat.size, step):
+            window.append(node.send_async(hops[0], Function(
+                rec_put, (handle, int(o), flat[o : o + step], hops[1:],
+                          dirty))))
+            nchunks += 1
+            if len(window) >= 4:  # bounded window: overlap without
+                # unbounded frames in flight on a long chain
+                node.wait(window.pop(0), CHAIN_HOP_TIMEOUT)
+    for fut in window:
+        node.wait(fut, CHAIN_HOP_TIMEOUT)
+    rec_flush = node.table.record_of("_ham/chain_flush")
+    confirmed = node.wait(node.send_async(hops[0], Function(
+        rec_flush, (handle, hops[1:], dirty, nchunks))), CHAIN_HOP_TIMEOUT)
+    node.applied_dirty[handle] = dirty
+    return [node.node_id, *[int(n) for n in confirmed]]
+
+
 def register_dataplane_handlers(registry=None) -> None:
-    """Register the ``_ham/buf_*`` control plane.  Safe to call repeatedly;
-    silently skipped on an already-sealed registry (as with the cluster
-    handlers — then callers must have registered these before ``init()``)."""
+    """Register the ``_ham/buf_*`` control plane and the ``_ham/chain_*``
+    write protocol.  Safe to call repeatedly; silently skipped on an
+    already-sealed registry (as with the cluster handlers — then callers
+    must have registered these before ``init()``)."""
     from repro.core.registry import default_registry
 
-    # adopt/invalidate/freed mutate the replica map; buf_count is a pure
-    # read of the local buffer registry (read_only => replica-servable)
+    # adopt/invalidate/freed mutate the replica map; the chain handlers
+    # write buffer bytes; buf_count is a pure read of the local buffer
+    # registry (read_only => replica-servable)
     reg = registry or default_registry()
     for name, fn, read_only in (
         ("_ham/buf_adopt", _h_buf_adopt, False),
         ("_ham/buf_invalidate", _h_buf_invalidate, False),
         ("_ham/buf_count", _h_buf_count, True),
         ("_ham/buf_freed", _h_buf_freed, False),
+        ("_ham/chain_put", _h_chain_put, False),
+        ("_ham/chain_flush", _h_chain_flush, False),
+        ("_ham/chain_push", _h_chain_push, False),
     ):
         try:
             reg.register(fn, name=name, read_only=read_only)

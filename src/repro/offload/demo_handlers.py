@@ -33,10 +33,12 @@ def inner_prod(a_ptr, b_ptr, n):
     return float(a[:n] @ b[:n])
 
 
-# saxpy WRITES through y_ptr, so it must not be read_only: the scheduler
-# pins its pointers to the primary copy, and the mutation is invisible to
-# any replicas until the caller re-puts the buffer (dataplane module docs)
-@_reg.handler(name="demo/saxpy", read_only=False)
+# saxpy WRITES through y_ptr — the Active Access mutate-at-data shape:
+# declared mutates=True, the scheduler routes the call at y's primary and
+# commits the write on completion (dirty epoch bumped, replica holders
+# invalidated), so replicas never keep serving the overwritten bytes
+# (dataplane module docs; docs/failure-model.md)
+@_reg.handler(name="demo/saxpy", mutates=True)
 def saxpy(alpha, x_ptr, y_ptr):
     y = deref(y_ptr)
     y += alpha * deref(x_ptr)

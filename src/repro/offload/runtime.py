@@ -361,36 +361,49 @@ def _h_dir_gossip(entries):
     half of the durable directory — protocol in ``offload/dataplane``).
 
     Each entry is ``[handle, primary, replicas, epoch, nbytes, shape,
-    dtype, session]``.  Installation is epoch-monotonic (``>=`` — holder-set
-    changes do not bump the epoch, and per-link FIFO orders same-epoch
-    updates); an entry whose holder set no longer includes this node — or a
-    tombstone (``primary < 0``, the buffer was freed/lost) — drops the
-    shard entry instead.
+    dtype, session, dirty]`` (``dirty`` — the buffer's write epoch, chain
+    protocol — was appended in v2; peers sending 8-element entries are
+    read as ``dirty = 0``).  Installation is epoch-monotonic (``>=`` —
+    holder-set changes do not bump the epoch, and per-link FIFO orders
+    same-epoch updates); an entry whose holder set no longer includes this
+    node — or a tombstone (``primary < 0``, the buffer was freed/lost) —
+    drops the shard entry instead.
     """
     node = current_node()
     me = node.node_id
     shard = node.dir_shard
-    for handle, primary, replicas, epoch, nbytes, shape, dtype, session in entries:
+    for e in entries:
+        handle, primary, replicas, epoch, nbytes, shape, dtype, session = e[:8]
         handle, primary, epoch = int(handle), int(primary), int(epoch)
+        dirty = int(e[8]) if len(e) > 8 else 0
         replicas = [int(r) for r in replicas]
         if primary < 0 or (me != primary and me not in replicas):
             shard.pop(handle, None)
+            node.applied_dirty.pop(handle, None)  # copy gone — the applied
+            # watermark must not outlive it and vouch for a future re-adopt
             continue
         cur = shard.get(handle)
         if cur is None or epoch >= cur[2]:
             shard[handle] = (primary, replicas, epoch, int(nbytes),
-                             [int(d) for d in shape], str(dtype), session)
+                             [int(d) for d in shape], str(dtype), session,
+                             dirty)
 
 
 def _h_dir_dump():
-    """This node's directory shard, for a restarting host's rebuild (same
-    entry layout as ``_ham/dir_gossip``).  Read-only: replica serving is
-    safe, and a rebuild may query any survivor."""
+    """This node's directory shard, for a restarting host's rebuild: the
+    ``_ham/dir_gossip`` entry layout plus a 10th element — this node's
+    ``applied_dirty`` watermark for the handle, so the rebuild can drop a
+    chain tail whose bytes trail a surviving peer's write epoch (chain
+    protocol, docs/failure-model.md).  Read-only: replica serving is safe,
+    and a rebuild may query any survivor."""
     node = current_node()
-    return [
-        [h, p, r, e, n, s, d, sess]
-        for h, (p, r, e, n, s, d, sess) in sorted(node.dir_shard.items())
-    ]
+    out = []
+    for h, entry in sorted(node.dir_shard.items()):
+        p, r, e, n, s, d, sess = entry[:7]
+        dirty = entry[7] if len(entry) > 7 else 0
+        out.append([h, p, r, e, n, s, d, sess, dirty,
+                    node.applied_dirty.get(h, 0)])
+    return out
 
 
 def register_internal_handlers(registry=None) -> None:
@@ -479,6 +492,15 @@ class NodeRuntime:
         #: dumped to a restarting host via _ham/dir_dump (see
         #: repro.offload.dataplane for the protocol)
         self.dir_shard: dict[int, tuple] = {}
+        # -- chain-replication write protocol (repro.offload.dataplane,
+        # "Chain replication"; contract in docs/failure-model.md) ---------
+        #: write epoch this node's bytes reflect, per handle — dumped next
+        #: to the shard so a host rebuild can spot a stale chain tail
+        self.applied_dirty: dict[int, int] = {}
+        #: per-handle [dirty, chunks_received] for the write in flight —
+        #: chunk forwards are oneways; _ham/chain_flush confirms via this
+        #: count (per-link FIFO puts the flush behind every chunk)
+        self.chain_seen: dict[int, list] = {}
         # -- queue-depth feedback (scheduler's remote-load signal) ---------
         #: last depth reported BY each peer via _cluster/stats oneways
         #: (populated on the node peers report to — normally the host)
@@ -797,6 +819,19 @@ class NodeRuntime:
         """Pack ``[(function, msg_id), ...]`` into one fused frame and send."""
         self._send_frame(dst, self._pack_fused_frame(calls))
         self.stats["sent"] += len(calls)
+
+    def send_oneway_fused(self, dst: int, functions) -> None:
+        """Fire-and-forget batch as ``FLAG_FUSED`` frames: one header and
+        one transport publication per ``FUSE_MAX_SEGMENTS`` calls, zero
+        replies (every segment carries ``msg_id = 0``).  The oneway half of
+        :meth:`send_fused` — an invalidation/gossip storm to one
+        destination collapses to one frame instead of one send per call."""
+        calls = [(fn, 0) for fn in functions]
+        if len(calls) == 1:
+            self.send_oneway(dst, calls[0][0])
+            return
+        for start in range(0, len(calls), FUSE_MAX_SEGMENTS):
+            self._send_fused_request(dst, calls[start : start + FUSE_MAX_SEGMENTS])
 
     def _pack_fused_frame(self, calls):
         """One FLAG_FUSED frame for ``[(function, msg_id), ...]``."""

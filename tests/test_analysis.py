@@ -86,6 +86,23 @@ def test_readonly_purity_catches_alias_escape(fixture_findings):
     assert "alias escape" in f.message
 
 
+def test_undeclared_mutation_names_the_mutates_fix(fixture_findings):
+    line = _line_of(FIXTURES / "bad_undeclared_mutation.py", "y *= alpha")
+    f = _expect(fixture_findings, "HAM001", "bad_undeclared_mutation.py", line)
+    # the finding must NAME the fix, not just the defect
+    assert "mutates=True" in f.message
+    assert "read_only=True but" not in f.message  # not the PR 5 wording
+
+
+def test_declared_mutates_inplace_store_is_legal(fixture_findings):
+    """A mutates=True handler's in-place store is the point of the
+    annotation — zero findings anywhere in its fixture."""
+    assert not [
+        f for f in fixture_findings
+        if Path(f.path).name == "ok_mutates.py"
+    ]
+
+
 def test_spec_coherence_catches_arity_mismatch(fixture_findings):
     # the finding anchors on the register() call that follows this comment
     line = _line_of(FIXTURES / "bad_arity.py", "# three leaves") + 1
@@ -125,7 +142,7 @@ def test_fixture_corpus_is_fully_accounted_for(fixture_findings):
     starts over- or under-firing on the corpus fails here."""
     by_rule = sorted(f.rule for f in fixture_findings)
     assert by_rule == [
-        "HAM001", "HAM001", "HAM001",
+        "HAM001", "HAM001", "HAM001", "HAM001",
         "HAM002", "HAM002",
         "HAM003", "HAM003",
         "HAM004", "HAM004",

@@ -25,6 +25,7 @@ import pytest
 
 import repro.cluster.pool  # noqa: F401 — registers _cluster/* at collection
 import repro.offload.demo_handlers  # noqa: F401 — registers chaos/* probes
+from repro.offload import dataplane
 from repro.cluster import ClusterPool, Scheduler, gather
 from repro.cluster.pool import register_cluster_handlers
 from repro.comm.chaos import ChaosConfig, ChaosFabric
@@ -227,9 +228,18 @@ def test_exactly_once_replay_under_reply_loss():
         for w in (1, 2, 3):  # lossy replies; requests stay clean
             chaos.set_link(w, 0, ChaosConfig(drop=0.15))
         chaos.arm()
+        # partition ONE reply link for one deadline period: worker 1's
+        # in-window replies are dropped DETERMINISTICALLY, so the
+        # retries>0 assert below never depends on whether the seeded
+        # probabilistic drops happened to land on a first-attempt reply.
+        # (One link only — workers 2/3 keep returning flow-control
+        # credits, so submission never backpressure-stalls.)
+        chaos.block(1, 0)
         n = 60
         futs = [sched.submit(f2f("chaos/bump", "t-replay", registry=reg))
                 for _ in range(n)]
+        time.sleep(0.35)  # > deadline: >=1 in-window reply must retry
+        chaos.unblock(1, 0)
         results = gather(futs, 120)
         chaos.disarm()
         # thread workers share one process-global counter, which makes the
@@ -410,6 +420,112 @@ def test_host_restart_promotes_when_primary_died_with_host():
         assert rec.primary == replica  # promoted onto the survivor
         assert rec.epoch > old_rec.epoch
         np.testing.assert_array_equal(pool.get(ptr), arr)
+    finally:
+        pool.close()
+
+
+# -- chain replication under partition (write protocol, failure-model.md) -----
+
+
+def _chaos_pool(seed, **kw):
+    """Local pool with every link under a seeded (fault-free until armed)
+    chaos wrapper; returns (pool, chaos)."""
+    holder = {}
+
+    def wrap(f):
+        holder["chaos"] = ChaosFabric(f, seed=seed)
+        return holder["chaos"]
+
+    pool = ClusterPool.local(3, registry=_default_registry_ready(),
+                             replicas=1, wrap_fabric=wrap, **kw)
+    return pool, holder["chaos"]
+
+
+def _wait_dead(sched, node, timeout=10.0):
+    deadline = time.time() + timeout
+    while node in sched.live_nodes() and time.time() < deadline:
+        time.sleep(0.02)
+    assert node not in sched.live_nodes()
+
+
+def test_chain_put_partition_mid_chain_truncates_tail_then_heals(monkeypatch):
+    """Partition the primary->replica hop mid-chain: the put must still
+    complete (primary confirmed), with the unreachable tail DROPPED from
+    the replica set — a detectable gap, never a silently-stale promotable
+    copy.  Healing the link + a join backfills a replica carrying the NEW
+    bytes, verified promotable by killing the primary and reading back."""
+    monkeypatch.setattr(dataplane, "CHAIN_HOP_TIMEOUT", 1.5)
+    pool, chaos = _chaos_pool(seed=11)
+    sched = Scheduler(pool)
+    try:
+        pool.domain.direct_data_plane = False  # wire chain, not direct store
+        x = np.arange(1024.0)
+        ptr = pool.allocate(x.shape, "float64", session="chain-part")
+        pool.put(x, ptr)  # healthy write-through: both holders confirm
+        rec = pool.directory.lookup(ptr.handle)
+        p, r = rec.primary, rec.replicas[0]
+        chaos.arm().block(p, r)  # the forward hop goes dark
+        y = x * 3.0
+        t0 = time.perf_counter()
+        pool.put(y, ptr)  # completes: tail truncated, not stuck for 30 s
+        assert time.perf_counter() - t0 < 10.0
+        assert any(a == "drop" for _, _, _, a, _ in chaos.fault_log)
+        rec = pool.directory.lookup(ptr.handle)
+        assert rec.primary == p
+        assert r not in rec.replicas  # no silently-stale promotable copy
+        np.testing.assert_array_equal(pool.get(ptr), y)
+        chaos.unblock(p, r)
+        chaos.disarm()
+        new = pool.add_node()  # heal: lazy backfill restores the factor
+        rec = pool.directory.lookup(ptr.handle)
+        assert rec.replicas == (new,)
+        np.testing.assert_array_equal(
+            pool.domain.get(ptr.at(new, rec.epoch)), y)
+        # the backfilled copy is genuinely promotable: kill the primary
+        pool.kill(p)
+        _wait_dead(sched, p)
+        np.testing.assert_array_equal(pool.get(ptr), y)
+        assert pool.directory.stats["lost"] == 0
+    finally:
+        sched.close()
+        pool.close()
+
+
+def test_chain_put_primary_unreachable_fails_loudly_keeps_old_bytes(
+        monkeypatch):
+    """Partition host->primary: the chain never confirms anywhere, so the
+    put must raise (torn-write diagnosis, not silent success) while every
+    holder keeps the PREVIOUS write; a healed retry converges all copies."""
+    monkeypatch.setattr(dataplane, "CHAIN_HOP_TIMEOUT", 1.5)
+    pool, chaos = _chaos_pool(seed=12)
+    try:
+        pool.domain.direct_data_plane = False
+        orig_chain_put = pool.domain.chain_put  # shrink the host-side wait
+        monkeypatch.setattr(
+            pool.domain, "chain_put",
+            lambda *a, **k: orig_chain_put(*a, **{**k, "timeout": 2.0}))
+        x = np.arange(256.0)
+        ptr = pool.allocate(x.shape, "float64", session="chain-torn")
+        pool.put(x, ptr)
+        rec = pool.directory.lookup(ptr.handle)
+        p, r = rec.primary, rec.replicas[0]
+        chaos.arm().block(0, p)  # the host cannot reach the primary
+        with pytest.raises((OffloadError, TimeoutError)):
+            pool.put(x * 2.0, ptr)
+        chaos.unblock(0, p)
+        chaos.disarm()
+        # every holder kept the previous write — readable, just not new
+        np.testing.assert_array_equal(pool.get(ptr), x)
+        rec = pool.directory.lookup(ptr.handle)
+        np.testing.assert_array_equal(
+            pool.domain.get(ptr.at(r, rec.epoch)), x)
+        z = x * 5.0
+        pool.put(z, ptr)  # healed retry converges the full chain
+        rec = pool.directory.lookup(ptr.handle)
+        assert set(rec.replicas) == {r}
+        np.testing.assert_array_equal(pool.get(ptr), z)
+        np.testing.assert_array_equal(
+            pool.domain.get(ptr.at(r, rec.epoch)), z)
     finally:
         pool.close()
 

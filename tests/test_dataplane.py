@@ -25,11 +25,31 @@ def _h_bump(ptr):
     deref(ptr)[...] += 1.0
 
 
+def _h_bump_declared(ptr):
+    """The same write, DECLARED (mutates=True): the scheduler routes it at
+    the primary and commits the dirty epoch + replica invalidation when it
+    completes."""
+    from repro.offload.api import deref
+
+    deref(ptr)[...] += 1.0
+
+
+def _h_bump_then_fail(ptr):
+    """Half-applied mutation: writes, then raises.  The commit must still
+    run (the bytes DID change) and the caller must see the error."""
+    from repro.offload.api import deref
+
+    deref(ptr)[...] += 1.0
+    raise ValueError("half-applied on purpose")
+
+
 def _registry():
     reg = HandlerRegistry()
     register_internal_handlers(reg)
     register_cluster_handlers(reg)  # includes the _ham/buf_* dataplane set
     reg.register(_h_bump, name="test/bump")
+    reg.register(_h_bump_declared, name="test/bump_mut", mutates=True)
+    reg.register(_h_bump_then_fail, name="test/bump_mut_fail", mutates=True)
     reg.init()
     return reg
 
@@ -459,6 +479,167 @@ def test_join_backfills_under_replicated_buffers(pool):
     pool.kill(rec.primary)
     _wait_dead(sched, rec.primary)
     np.testing.assert_array_equal(pool.get(ptr), arr)
+
+
+# -- the active-access write protocol (chain put + mutate-at-data) -----------
+
+
+def _holder_dirty(pool, node, handle):
+    return pool.domain._inproc[node].applied_dirty.get(int(handle))
+
+
+def test_chain_put_wire_confirms_every_holder(pool):
+    """Over the wire, a replicated put sends the bytes host->primary once;
+    the primary streams the chain.  Every holder must end with the payload
+    AND an applied_dirty watermark matching the directory's dirty epoch —
+    that watermark is what host-crash recovery uses to spot stale tails."""
+    pool.domain.direct_data_plane = False
+    arr = np.arange(4096.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    pool.put(arr, ptr)
+    pool.put(arr * 2, ptr)  # second write: dirty must advance, not reset
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas != ()
+    assert rec.dirty == 2
+    for holder in (ptr.node, *rec.replicas):
+        np.testing.assert_array_equal(
+            pool.domain.get(ptr.at(holder, rec.epoch)), arr * 2
+        )
+        assert _holder_dirty(pool, holder, ptr.handle) == rec.dirty
+
+
+def test_chain_put_direct_path_keeps_the_same_contract(pool):
+    """Thread pools take the in-process shortcut (memcpy per holder) —
+    bytes and applied_dirty must come out exactly as the wire chain's."""
+    assert pool.domain.direct_data_plane
+    arr = np.arange(512.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    pool.put(arr, ptr)
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas != () and rec.dirty == 1
+    for holder in (ptr.node, *rec.replicas):
+        np.testing.assert_array_equal(
+            pool.domain.get(ptr.at(holder, rec.epoch)), arr
+        )
+        assert _holder_dirty(pool, holder, ptr.handle) == rec.dirty
+
+
+def test_mutation_commit_drops_replicas_for_lazy_backfill(pool):
+    """Drop mode (default): a committed mutates=True call invalidates the
+    replica copies — they leave the holder set (nothing stale stays
+    promotable) and the next join re-backfills the NEW bytes."""
+    sched = Scheduler(pool, policy="locality")
+    reg = pool.domain.registry
+    arr = np.arange(64.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    pool.put(arr, ptr)
+    assert pool.directory.lookup(ptr.handle).replicas != ()
+    sched.submit(f2f("test/bump_mut", ptr, registry=reg)).get(10)
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == ()  # dropped at commit, not left stale
+    assert rec.dirty == 2  # put, then the committed mutation
+    assert sched.stats["mutations_committed"] == 1
+    np.testing.assert_array_equal(pool.get(ptr), arr + 1.0)
+    joined = pool.add_node()  # lazy backfill re-replicates the new bytes
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == (joined,)
+    np.testing.assert_array_equal(
+        pool.domain.get(ptr.at(joined, rec.epoch)), arr + 1.0
+    )
+
+
+def test_mutation_commit_refresh_converges_replica():
+    """Refresh mode: the primary chain-pushes the new bytes; the replica
+    stays a holder and reflects the mutation by the time the future
+    resolves — zero stale-read window beyond the in-flight write."""
+    p = ClusterPool.local(3, registry=_registry(), replicas=1,
+                          mutation_refresh=True)
+    try:
+        sched = Scheduler(p, policy="locality")
+        reg = p.domain.registry
+        arr = np.arange(64.0)
+        ptr = p.allocate(arr.shape, "float64", node=1)
+        p.put(arr, ptr)
+        replica = p.directory.lookup(ptr.handle).replicas[0]
+        sched.submit(f2f("test/bump_mut", ptr, registry=reg)).get(10)
+        rec = p.directory.lookup(ptr.handle)
+        assert rec.replicas == (replica,)  # still a holder
+        np.testing.assert_array_equal(
+            p.domain.get(ptr.at(replica, rec.epoch)), arr + 1.0
+        )
+        assert _holder_dirty(p, replica, ptr.handle) == rec.dirty
+    finally:
+        p.close()
+
+
+def test_mutation_commit_runs_even_when_handler_raises(pool):
+    """A mutating handler that raises AFTER writing is half-applied: the
+    caller must see the error, but the commit must still run — replica
+    holders would otherwise keep serving the overwritten bytes."""
+    sched = Scheduler(pool, policy="locality")
+    reg = pool.domain.registry
+    ptr = pool.allocate((16,), "float64", node=1)
+    pool.put(np.zeros(16), ptr)
+    with pytest.raises(RemoteExecutionError, match="half-applied"):
+        sched.submit(f2f("test/bump_mut_fail", ptr, registry=reg)).get(10)
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == ()  # invalidated despite the error
+    assert sched.stats["mutations_committed"] == 1
+    np.testing.assert_array_equal(pool.get(ptr), np.ones(16))
+
+
+def test_undeclared_mutation_warns_once(pool, caplog):
+    """A handler that is neither read_only nor mutates and derefs a
+    replicated tracked buffer gets ONE warning naming the mutates=True
+    fix — per handler, not per call."""
+    import logging
+
+    sched = Scheduler(pool, policy="locality")
+    reg = pool.domain.registry
+    ptr = pool.allocate((8,), "float64", node=1)
+    pool.put(np.zeros(8), ptr)
+    with caplog.at_level(logging.WARNING, logger="repro.cluster.scheduler"):
+        for _ in range(3):
+            sched.submit(f2f("test/bump", ptr, registry=reg)).get(10)
+    hits = [r for r in caplog.records if "mutates=True" in r.getMessage()]
+    assert len(hits) == 1
+    assert "docs/failure-model.md" in hits[0].getMessage()
+
+
+def test_pool_mutate_routes_to_primary_and_commits(pool):
+    """pool.mutate is the bare Active-Access write primitive: one sync call
+    at the primary plus the dirty-epoch commit — no scheduler attached.
+    If the call ran anywhere but the primary, the post-commit read (served
+    by the primary after replicas drop) would return the OLD bytes."""
+    reg = pool.domain.registry
+    arr = np.arange(64.0)
+    ptr = pool.allocate(arr.shape, "float64", node=1)
+    pool.put(arr, ptr)
+    assert pool.directory.lookup(ptr.handle).replicas != ()
+    pool.mutate(f2f("test/bump_mut", ptr, registry=reg))
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == ()  # committed: dropped, not left stale
+    assert rec.dirty == 2  # put, then the committed mutation
+    np.testing.assert_array_equal(pool.get(ptr), arr + 1.0)
+
+
+def test_pool_mutate_commits_on_error_and_rejects_misuse(pool):
+    """Half-applied mutations still commit (the caller sees the handler's
+    error, replicas do not keep the overwritten bytes); handlers not
+    declared mutates=True and calls with no tracked buffer are refused
+    up front."""
+    reg = pool.domain.registry
+    ptr = pool.allocate((16,), "float64", node=1)
+    pool.put(np.zeros(16), ptr)
+    with pytest.raises(RemoteExecutionError, match="half-applied"):
+        pool.mutate(f2f("test/bump_mut_fail", ptr, registry=reg))
+    rec = pool.directory.lookup(ptr.handle)
+    assert rec.replicas == ()  # invalidated despite the error
+    np.testing.assert_array_equal(pool.get(ptr), np.ones(16))
+    with pytest.raises(OffloadError, match="mutates=True"):
+        pool.mutate(f2f("test/bump", ptr, registry=reg))
+    with pytest.raises(OffloadError, match="no directory-tracked buffer"):
+        pool.mutate(f2f("test/bump_mut", np.zeros(4), registry=reg))
 
 
 # -- the same recovery story over a REAL process fabric ----------------------
